@@ -1,0 +1,77 @@
+"""Shared benchmark fixtures: the SkyQuery-scale workload used by the
+Fig. 5/6/7/8 reproductions, plus timing helpers."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import PAPER_COST_MODEL, HybridCostModel
+from repro.crossmatch import TraceConfig, make_catalog, make_trace
+
+# Scaled SkyQuery setup: the paper uses 20k x 10k-object (40 MB) buckets
+# with a 20-bucket cache (0.1%) and a 2,000-query long-running trace.  We
+# scale objects down 100x but keep the ratios that drive the scheduler:
+# cache/buckets = 1%, Zipf bucket popularity, temporal locality, and the
+# measured cost constants T_b = 1.2 s, T_m = 0.13 ms.
+CATALOG_KW = dict(n_objects=200_000, objects_per_bucket=100, htm_level=8, seed=7)
+TRACE_KW = dict(
+    n_queries=2_000,
+    arrival_rate=0.25,
+    n_hotspots=24,
+    zipf_s=1.6,
+    hotspot_frac=0.8,
+    temporal_locality=0.6,
+    objects_median=300,
+    objects_sigma=1.1,
+    cone_radius_med=0.05,
+    fullsky_frac=0.03,
+    seed=11,
+)
+CACHE_CAPACITY = 20
+COST = PAPER_COST_MODEL
+HYBRID_COST = HybridCostModel(T_b=1.2, T_m=0.13e-3, T_probe=4.13e-3)
+
+_cache = {}
+
+
+def workload(n_queries: int | None = None, arrival_rate: float | None = None,
+             seed: int | None = None):
+    """(catalog, trace) memoized across benchmark modules."""
+    kw = dict(TRACE_KW)
+    if n_queries is not None:
+        kw["n_queries"] = n_queries
+    if arrival_rate is not None:
+        kw["arrival_rate"] = arrival_rate
+    if seed is not None:
+        kw["seed"] = seed
+    key = ("cat",)
+    if key not in _cache:
+        _cache[key] = make_catalog(**CATALOG_KW)
+    cat = _cache[key]
+    tkey = tuple(sorted(kw.items()))
+    if tkey not in _cache:
+        _cache[tkey] = make_trace(cat, TraceConfig(**kw))
+    return cat, _cache[tkey]
+
+
+def time_call(fn, *args, reps: int = 5, warmup: int = 2, **kw) -> float:
+    """Median wall micro-seconds per call (CPU; for relative comparisons)."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        try:  # block on device results
+            import jax
+
+            jax.block_until_ready(out)
+        except Exception:
+            pass
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,67 @@
+"""Summarize dry-run artifacts into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import emit
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def load_cells(mesh: str = "16x16", tag: str | None = None) -> list[dict]:
+    cells = []
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("mesh") != mesh:
+            continue
+        tagged = "__" in f.stem.replace(
+            f"{r['arch']}__{r['shape']}__{r['mesh']}", ""
+        )
+        if tag is None and tagged:
+            continue
+        if tag is not None and not f.stem.endswith(f"__{tag}"):
+            continue
+        cells.append(r)
+    return cells
+
+
+def fmt_row(r: dict) -> str:
+    dom = r["dominant"][:4]
+    return (
+        f"  {r['arch']:26s} {r['shape']:12s} "
+        f"tc={r['t_compute_s']:9.4f}s tm={r['t_memory_s']:9.4f}s "
+        f"tx={r['t_collective_s']:9.4f}s dom={dom:4s} "
+        f"useful={r.get('useful_flop_ratio', 0):6.3f} "
+        f"mfu_ub={r.get('mfu_upper_bound', 0):6.3f}"
+    )
+
+
+def main() -> None:
+    single = load_cells("16x16")
+    multi = load_cells("2x16x16")
+    if not single:
+        print("  (no dry-run artifacts yet — run scripts/run_dryrun_all.sh)")
+        emit("roofline_table", 0.0, "cells=0")
+        return
+    print(f"  single-pod cells: {len(single)}; multi-pod cells: {len(multi)}")
+    by_dom = {}
+    for r in single:
+        by_dom.setdefault(r["dominant"], []).append(r)
+        print(fmt_row(r))
+    doms = {k: len(v) for k, v in by_dom.items()}
+    worst = min(single, key=lambda r: r.get("mfu_upper_bound", 0))
+    most_coll = max(single, key=lambda r: r["t_collective_s"] / max(
+        r["t_compute_s"] + r["t_memory_s"] + r["t_collective_s"], 1e-12))
+    print(f"  dominant-term histogram: {doms}")
+    print(f"  worst mfu_upper_bound: {worst['arch']}/{worst['shape']}"
+          f" = {worst.get('mfu_upper_bound', 0):.4f}")
+    print(f"  most collective-bound: {most_coll['arch']}/{most_coll['shape']}")
+    emit(
+        "roofline_table", 0.0,
+        f"single={len(single)};multi={len(multi)};doms={doms}",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Multi-tenant serving with LifeRaft batching + REAL decode steps.
+
+A reduced moonshot-family MoE model decodes actual tokens while the
+LifeRaft engine schedules which tenant's (adapter's) batch runs next —
+buckets are adapter weight groups, the cache is HBM adapter slots.
+
+    PYTHONPATH=src python examples/serve_multitenant.py [--policy liferaft]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import registry as R
+from repro.serving import AdapterSpec, LifeRaftEngine, Request, ServeConfig
+from repro.training.train_step import make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="liferaft",
+                    choices=["liferaft", "rr", "noshare"])
+    ap.add_argument("--alpha", type=float, default=0.25)
+    ap.add_argument("--requests", type=int, default=60)
+    args = ap.parse_args()
+
+    cfg = smoke_config("moonshot-v1-16b-a3b")
+    params = R.init_params(cfg, jax.random.PRNGKey(0))
+    max_seq, max_batch = 64, 8
+    serve_step = jax.jit(make_serve_step(cfg, max_seq))
+
+    n_adapters = 6
+    # Per-tenant adapters: additive deltas on the unembed (kept tiny here;
+    # rank-decomposed in a real deployment).
+    adapters_delta = [
+        0.01 * jax.random.normal(jax.random.PRNGKey(10 + a), params["unembed"].shape)
+        for a in range(n_adapters)
+    ]
+    decoded_tokens = {a: 0 for a in range(n_adapters)}
+
+    def decode_batch(adapter_id, batch, quantum):
+        """Real decode: swap in the tenant delta, run `quantum` steps."""
+        p = dict(params)
+        p["unembed"] = params["unembed"] + adapters_delta[adapter_id].astype(
+            params["unembed"].dtype
+        )
+        B = max_batch
+        cache = R.make_cache(cfg, B, max_seq)
+        tok = jnp.zeros((B, 1), jnp.int32)
+        for _ in range(quantum):
+            tok, cache = serve_step(p, tok, cache)
+        decoded_tokens[adapter_id] += quantum * len(batch)
+
+    rng = np.random.default_rng(0)
+    zipf = 1.0 / np.arange(1, n_adapters + 1) ** 1.5
+    zipf /= zipf.sum()
+    t, reqs = 0.0, []
+    for i in range(args.requests):
+        t += rng.exponential(1 / 50.0)
+        reqs.append(Request(i, int(rng.choice(n_adapters, p=zipf)), t,
+                            int(rng.integers(8, 32)), 16))
+
+    engine = LifeRaftEngine(
+        [AdapterSpec(a, 2 << 30) for a in range(n_adapters)],
+        ServeConfig(policy=args.policy, alpha=args.alpha, adapter_slots=2,
+                    max_batch=max_batch, decode_quantum=16),
+        decode_batch_fn=decode_batch,
+    )
+    print(f"serving {len(reqs)} requests across {n_adapters} tenants "
+          f"({args.policy}, reduced moonshot MoE, real decode)...")
+    s = engine.run(reqs)
+    print(f"  completed         : {s['n_completed']}")
+    print(f"  token throughput  : {s['token_throughput']:.1f} tok/s (simulated clock)")
+    print(f"  mean response     : {s['mean_response']:.3f}s  p95={s['p95_response']:.3f}s")
+    print(f"  adapter cache hit : {s['cache_hit_rate']:.2f}")
+    print(f"  real tokens decoded per tenant: {decoded_tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""LifeRaft-JAX: data-driven batch processing for TPU training & serving.
+
+Reproduction + TPU-native extension of Wang, Burns & Malik, "LifeRaft:
+Data-Driven, Batch Processing for the Exploration of Scientific
+Databases" (CIDR 2009).  See DESIGN.md for the mapping.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,151 @@
+"""Sharded checkpointing: atomic, async, elastic (mesh-agnostic restore).
+
+Layout: <dir>/step_<N>/
+    manifest.json      — step, leaf paths, shapes, dtypes, data shards
+    arrays_<k>.npz     — leaf arrays, chunked ~512 MB per file
+
+Writes go to ``step_<N>.tmp`` then ``os.replace`` (atomic on POSIX), so a
+preempted save never corrupts the latest checkpoint.  ``AsyncCheckpointer``
+moves the host copy + write off the training thread and blocks the *next*
+save until the previous one lands (bounded staleness of one).
+
+On a real multi-host cluster each host writes the shards it owns; here the
+single process owns everything, and elastic restore re-shards by simply
+``device_put``-ing to the new mesh's NamedShardings (``elastic.py``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "AsyncCheckpointer"]
+
+_CHUNK_BYTES = 512 << 20
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save_checkpoint(directory: str | os.PathLike, step: int, tree: Any) -> pathlib.Path:
+    directory = pathlib.Path(directory)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    paths, leaves, _ = _flatten(tree)
+    host = [np.asarray(x) for x in leaves]
+    manifest = {"step": step, "leaves": [], "files": []}
+    fidx, cur, cur_bytes = 0, {}, 0
+    for p, a in zip(paths, host):
+        key = f"a{len(manifest['leaves'])}"
+        manifest["leaves"].append(
+            {"path": p, "file": fidx, "key": key, "shape": list(a.shape),
+             "dtype": str(a.dtype)}
+        )
+        cur[key] = a
+        cur_bytes += a.nbytes
+        if cur_bytes >= _CHUNK_BYTES:
+            np.savez(tmp / f"arrays_{fidx}.npz", **cur)
+            manifest["files"].append(f"arrays_{fidx}.npz")
+            fidx, cur, cur_bytes = fidx + 1, {}, 0
+    if cur:
+        np.savez(tmp / f"arrays_{fidx}.npz", **cur)
+        manifest["files"].append(f"arrays_{fidx}.npz")
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic publish
+    return final
+
+
+def latest_step(directory: str | os.PathLike) -> Optional[int]:
+    directory = pathlib.Path(directory)
+    if not directory.exists():
+        return None
+    steps = [
+        int(p.name.split("_")[1])
+        for p in directory.iterdir()
+        if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str | os.PathLike,
+    step: Optional[int],
+    like: Any,
+    shardings: Any = None,
+):
+    """Restore into the structure of ``like``; optionally place with
+    ``shardings`` (a matching pytree of NamedSharding — elastic restore)."""
+    directory = pathlib.Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = directory / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    data = {}
+    for i, fname in enumerate(manifest["files"]):
+        with np.load(d / fname) as z:
+            for k in z.files:
+                data[(i, k)] = z[k]
+    by_path = {
+        leaf["path"]: data[(leaf["file"], leaf["key"])]
+        for leaf in manifest["leaves"]
+    }
+    paths, leaves, treedef = _flatten(like)
+    out = []
+    for p, ref in zip(paths, leaves):
+        a = by_path[p]
+        assert tuple(a.shape) == tuple(ref.shape), (p, a.shape, ref.shape)
+        out.append(a)
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda a, s: jax.device_put(a, s), tree, shardings
+        )
+    return tree, manifest["step"]
+
+
+class AsyncCheckpointer:
+    """Background-thread writer with bounded staleness of one save."""
+
+    def __init__(self, directory: str | os.PathLike):
+        self.directory = pathlib.Path(directory)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any) -> None:
+        self.wait()
+        host = jax.tree_util.tree_map(np.asarray, tree)  # snapshot on caller
+
+        def _run():
+            try:
+                save_checkpoint(self.directory, step, host)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

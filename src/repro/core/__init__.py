@@ -1,0 +1,64 @@
+"""repro.core — the paper's contribution: data-driven batch scheduling.
+
+Public surface:
+  * space-filling curves (``sfc``): HTM trixel ids, Morton codes
+  * ``Partitioner``/``BucketStore``: equal-count bucket partitioning
+  * ``WorkloadManager``: query pre-processing into per-bucket work units
+  * ``CostModel`` + Eq.1/Eq.2 metrics
+  * ``BucketCache``: LRU residency (phi in Eq. 1)
+  * schedulers: ``LifeRaftScheduler`` (alpha in [0,1]), ``RoundRobinScheduler``
+  * ``HybridPlanner``: scan-vs-indexed per-batch plan (paper §3.4)
+  * ``AlphaController``: workload-adaptive alpha (paper §4)
+  * ``simulate``: the event-driven harness behind Figs. 7/8
+"""
+from .bucket import BucketSpec, BucketStore, Partitioner
+from .cache import BucketCache, CacheStats
+from .hybrid import HybridCostModel, HybridPlanner, JoinPlan
+from .metrics import (
+    PAPER_COST_MODEL,
+    CostModel,
+    aged_workload_throughput,
+    workload_throughput,
+)
+from .adaptive import AlphaController, SaturationEstimator, TradeoffPoint, TradeoffTable
+from .scheduler import (
+    LifeRaftScheduler,
+    OrderedScheduler,
+    RoundRobinScheduler,
+    SchedulerDecision,
+)
+from .simulate import SimResult, run_policy, simulate_batched, simulate_noshare
+from .workload import Query, WorkloadManager, WorkloadQueue, WorkUnit
+from . import sfc
+
+__all__ = [
+    "BucketSpec",
+    "BucketStore",
+    "Partitioner",
+    "BucketCache",
+    "CacheStats",
+    "HybridCostModel",
+    "HybridPlanner",
+    "JoinPlan",
+    "PAPER_COST_MODEL",
+    "CostModel",
+    "aged_workload_throughput",
+    "workload_throughput",
+    "AlphaController",
+    "SaturationEstimator",
+    "TradeoffPoint",
+    "TradeoffTable",
+    "LifeRaftScheduler",
+    "OrderedScheduler",
+    "RoundRobinScheduler",
+    "SchedulerDecision",
+    "SimResult",
+    "run_policy",
+    "simulate_batched",
+    "simulate_noshare",
+    "Query",
+    "WorkloadManager",
+    "WorkloadQueue",
+    "WorkUnit",
+    "sfc",
+]

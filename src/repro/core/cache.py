@@ -1,0 +1,94 @@
+"""Bucket cache (paper §4: LRU, fixed capacity — 20 buckets in §5).
+
+The cache is managed by the framework, independent of any lower-level
+buffer pool, exactly as the paper flushes SQL Server's buffers and manages
+bucket residency itself.  phi(i) in Eq. 1 is ``0 if cache.contains(i)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Hashable, Iterable, Optional
+
+__all__ = ["CacheStats", "BucketCache"]
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def accesses(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.accesses if self.accesses else 0.0
+
+
+class BucketCache:
+    """LRU cache over bucket ids (payloads optional).
+
+    ``capacity`` counts buckets (uniform size by construction, §3.1), so
+    LRU over ids is exact.  ``pin``/``unpin`` support batches in flight.
+    """
+
+    def __init__(self, capacity: int = 20) -> None:
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._entries: OrderedDict[Hashable, object] = OrderedDict()
+        self._pinned: set[Hashable] = set()
+        self.stats = CacheStats()
+
+    def contains(self, bucket_id: Hashable) -> bool:
+        """Residency probe — does NOT count as an access or touch LRU."""
+        return bucket_id in self._entries
+
+    def access(self, bucket_id: Hashable, payload: object = None) -> list[Hashable]:
+        """Record an access; insert on miss. Returns ids evicted (if any)."""
+        evicted: list[Hashable] = []
+        if bucket_id in self._entries:
+            self.stats.hits += 1
+            self._entries.move_to_end(bucket_id)
+            if payload is not None:
+                self._entries[bucket_id] = payload
+            return evicted
+        self.stats.misses += 1
+        self._entries[bucket_id] = payload
+        self._entries.move_to_end(bucket_id)
+        while len(self._entries) > self.capacity:
+            victim = self._pick_victim()
+            if victim is None:  # everything pinned; allow overflow
+                break
+            self._entries.pop(victim)
+            self.stats.evictions += 1
+            evicted.append(victim)
+        return evicted
+
+    def _pick_victim(self) -> Optional[Hashable]:
+        for k in self._entries:  # OrderedDict: LRU first
+            if k not in self._pinned:
+                return k
+        return None
+
+    def get(self, bucket_id: Hashable) -> object:
+        return self._entries.get(bucket_id)
+
+    def pin(self, bucket_id: Hashable) -> None:
+        self._pinned.add(bucket_id)
+
+    def unpin(self, bucket_id: Hashable) -> None:
+        self._pinned.discard(bucket_id)
+
+    def invalidate(self, bucket_ids: Iterable[Hashable]) -> None:
+        for b in bucket_ids:
+            self._entries.pop(b, None)
+
+    def resident(self) -> list[Hashable]:
+        return list(self._entries)
+
+    def __len__(self) -> int:
+        return len(self._entries)

@@ -1,0 +1,118 @@
+"""Schedulers: LifeRaft (aged workload throughput), RR, NoShare (paper §5).
+
+A scheduler's single decision is *which bucket to service next* given the
+current workload queues, cache residency, and clock.  Batching (servicing a
+bucket evaluates every pending work unit on it in one pass) is handled by
+the caller — NoShare is the exception and is modeled by the simulator as
+per-query evaluation in arrival order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol
+
+from .cache import BucketCache
+from .metrics import CostModel, aged_workload_throughput
+from .workload import WorkloadManager
+
+__all__ = [
+    "SchedulerDecision",
+    "BucketScheduler",
+    "LifeRaftScheduler",
+    "RoundRobinScheduler",
+    "OrderedScheduler",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerDecision:
+    bucket_id: int
+    score: float
+    in_cache: bool
+    queue_size: int
+
+
+class BucketScheduler(Protocol):
+    def select(
+        self, wm: WorkloadManager, cache: BucketCache, now: float
+    ) -> Optional[SchedulerDecision]: ...
+
+
+class LifeRaftScheduler:
+    """Greedy-by-U_a bucket selection (Eq. 2). alpha=0 greedy, alpha=1 aged."""
+
+    name = "liferaft"
+
+    def __init__(
+        self,
+        cost_model: CostModel,
+        alpha: float = 0.0,
+        normalized: bool = False,
+    ) -> None:
+        self.cost_model = cost_model
+        self.alpha = float(alpha)
+        self.normalized = normalized
+
+    def select(
+        self, wm: WorkloadManager, cache: BucketCache, now: float
+    ) -> Optional[SchedulerDecision]:
+        queues = wm.nonempty_queues()
+        if not queues:
+            return None
+        sizes = {q.bucket_id: q.size for q in queues}
+        cached = {q.bucket_id: cache.contains(q.bucket_id) for q in queues}
+        ages = wm.ages_ms(now)
+        ua = aged_workload_throughput(
+            sizes, ages, cached, self.cost_model, self.alpha, self.normalized
+        )
+        # Deterministic tie-break on bucket id for reproducibility.
+        best = max(ua, key=lambda b: (ua[b], -b))
+        return SchedulerDecision(
+            bucket_id=best,
+            score=ua[best],
+            in_cache=cached[best],
+            queue_size=sizes[best],
+        )
+
+
+class RoundRobinScheduler:
+    """The paper's RR baseline: service buckets in increasing SFC/HTM id
+    order, cycling; oblivious to queue length and age."""
+
+    name = "rr"
+
+    def __init__(self, cost_model: CostModel) -> None:
+        self.cost_model = cost_model
+        self._cursor = -1
+
+    def select(
+        self, wm: WorkloadManager, cache: BucketCache, now: float
+    ) -> Optional[SchedulerDecision]:
+        queues = sorted(q.bucket_id for q in wm.nonempty_queues())
+        if not queues:
+            return None
+        nxt = next((b for b in queues if b > self._cursor), queues[0])
+        self._cursor = nxt
+        q = wm.queue(nxt)
+        return SchedulerDecision(
+            bucket_id=nxt,
+            score=0.0,
+            in_cache=cache.contains(nxt),
+            queue_size=q.size,
+        )
+
+
+class OrderedScheduler:
+    """Pure arrival-order bucket selection == LifeRaft(alpha=1).
+
+    Kept as an explicit class for readability in benchmarks; batching/I-O
+    sharing still applies (paper: 'even when evaluating queries in order,
+    the system benefits from data sharing')."""
+
+    name = "ordered"
+
+    def __init__(self, cost_model: CostModel) -> None:
+        self._inner = LifeRaftScheduler(cost_model, alpha=1.0)
+
+    def select(self, wm, cache, now):
+        return self._inner.select(wm, cache, now)

@@ -1,0 +1,206 @@
+"""Event-driven scheduler simulator (drives the paper's §5 experiments).
+
+Replays a query trace (arrival times + per-object bucket ranges) against a
+scheduling policy, the LRU bucket cache, and the empirical cost model, and
+reports query throughput / response time / cache hit-rate — the quantities
+in Figs. 7 & 8.
+
+This is the same discrete-event harness the serving engine reuses for
+capacity planning; on hardware the costs come from the roofline model
+instead of (T_b, T_m) disk constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Optional, Sequence
+
+import numpy as np
+
+from .cache import BucketCache
+from .hybrid import HybridCostModel, HybridPlanner
+from .metrics import CostModel
+from .scheduler import (
+    BucketScheduler,
+    LifeRaftScheduler,
+    RoundRobinScheduler,
+)
+from .workload import Query, WorkloadManager
+
+__all__ = ["SimResult", "simulate_batched", "simulate_noshare", "run_policy"]
+
+
+@dataclasses.dataclass
+class SimResult:
+    policy: str
+    makespan: float
+    n_queries: int
+    query_throughput: float  # completed queries / makespan
+    object_throughput: float  # matched objects / makespan
+    mean_response: float
+    p95_response: float
+    std_response: float
+    cache_hit_rate: float
+    busy_time: float
+    n_batches: int
+    indexed_batches: int = 0
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _collect(
+    policy: str,
+    wm: WorkloadManager,
+    cache: BucketCache,
+    makespan: float,
+    busy: float,
+    n_batches: int,
+    total_objects: int,
+    indexed_batches: int = 0,
+) -> SimResult:
+    resp = np.array(sorted(wm.response_times().values()), dtype=np.float64)
+    makespan = max(makespan, 1e-9)
+    return SimResult(
+        policy=policy,
+        makespan=makespan,
+        n_queries=len(resp),
+        query_throughput=len(resp) / makespan,
+        object_throughput=total_objects / makespan,
+        mean_response=float(resp.mean()) if len(resp) else 0.0,
+        p95_response=float(np.percentile(resp, 95)) if len(resp) else 0.0,
+        std_response=float(resp.std()) if len(resp) else 0.0,
+        cache_hit_rate=cache.stats.hit_rate,
+        busy_time=busy,
+        n_batches=n_batches,
+        indexed_batches=indexed_batches,
+    )
+
+
+def simulate_batched(
+    queries: Sequence[Query],
+    bucket_of_range: Callable[[int, int], np.ndarray],
+    scheduler: BucketScheduler,
+    cost: CostModel,
+    cache_capacity: int = 20,
+    hybrid: Optional[HybridPlanner] = None,
+    alpha_hook: Optional[Callable[[float], float]] = None,
+    bucket_of_keys=None,
+) -> SimResult:
+    """Batched policies (LifeRaft any alpha, RR): one bucket batch at a time.
+
+    ``alpha_hook(t) -> alpha`` lets the adaptive controller retune the
+    scheduler on every arrival (used by the workload-adaptive experiments).
+    """
+    queries = sorted(queries, key=lambda q: q.arrival_time)
+    wm = WorkloadManager(bucket_of_range, bucket_of_keys)
+    cache = BucketCache(cache_capacity)
+    clock = 0.0
+    busy = 0.0
+    i = 0
+    n_batches = 0
+    indexed_batches = 0
+    total_objects = 0
+
+    def admit(until: float) -> None:
+        nonlocal i
+        while i < len(queries) and queries[i].arrival_time <= until:
+            q = queries[i]
+            wm.submit(q)
+            if alpha_hook is not None and isinstance(scheduler, LifeRaftScheduler):
+                scheduler.alpha = alpha_hook(q.arrival_time)
+            i += 1
+
+    while i < len(queries) or wm.n_pending_queries:
+        if not wm.nonempty_queues():
+            # Idle: jump to the next arrival.
+            clock = max(clock, queries[i].arrival_time)
+            admit(clock)
+            continue
+        admit(clock)
+        decision = scheduler.select(wm, cache, clock)
+        assert decision is not None
+        if hybrid is not None:
+            plan = hybrid.plan(decision.queue_size, decision.in_cache)
+            step = plan.est_cost
+            if plan.strategy == "indexed":
+                indexed_batches += 1
+            else:
+                cache.access(decision.bucket_id)
+        else:
+            step = cost.batch_cost(decision.queue_size, decision.in_cache)
+            cache.access(decision.bucket_id)
+        clock += step
+        busy += step
+        total_objects += decision.queue_size
+        n_batches += 1
+        wm.complete_bucket(decision.bucket_id, clock)
+
+    name = getattr(scheduler, "name", type(scheduler).__name__)
+    if isinstance(scheduler, LifeRaftScheduler):
+        name = f"liferaft(a={scheduler.alpha:g})"
+    return _collect(
+        name, wm, cache, clock, busy, n_batches, total_objects, indexed_batches
+    )
+
+
+def simulate_noshare(
+    queries: Sequence[Query],
+    bucket_of_range: Callable[[int, int], np.ndarray],
+    cost: CostModel,
+    cache_capacity: int = 20,
+    bucket_of_keys=None,
+) -> SimResult:
+    """NoShare baseline: each query evaluated independently, arrival order.
+
+    No batching across queries — every query pays its own bucket reads
+    (through the shared cache, which models the DB buffer pool)."""
+    queries = sorted(queries, key=lambda q: q.arrival_time)
+    wm = WorkloadManager(bucket_of_range, bucket_of_keys)
+    cache = BucketCache(cache_capacity)
+    clock = 0.0
+    busy = 0.0
+    n_batches = 0
+    total_objects = 0
+    for q in queries:
+        units = wm.submit(q)
+        clock = max(clock, q.arrival_time)
+        for u in sorted(units, key=lambda u: u.bucket_id):
+            step = cost.batch_cost(u.size, cache.contains(u.bucket_id))
+            cache.access(u.bucket_id)
+            clock += step
+            busy += step
+            total_objects += u.size
+            n_batches += 1
+        # All this query's buckets are done; nothing shared with others.
+        for u in units:
+            wm.complete_bucket(u.bucket_id, clock)
+    return _collect("noshare", wm, cache, clock, busy, n_batches, total_objects)
+
+
+def run_policy(
+    policy: str,
+    queries: Sequence[Query],
+    bucket_of_range: Callable[[int, int], np.ndarray],
+    cost: CostModel,
+    alpha: float = 0.0,
+    cache_capacity: int = 20,
+    hybrid: Optional[HybridPlanner] = None,
+    normalized: bool = False,
+    bucket_of_keys=None,
+) -> SimResult:
+    """Convenience dispatcher used by benchmarks: 'noshare'|'rr'|'liferaft'."""
+    if policy == "noshare":
+        return simulate_noshare(
+            queries, bucket_of_range, cost, cache_capacity,
+            bucket_of_keys=bucket_of_keys,
+        )
+    if policy == "rr":
+        sched: BucketScheduler = RoundRobinScheduler(cost)
+    elif policy == "liferaft":
+        sched = LifeRaftScheduler(cost, alpha=alpha, normalized=normalized)
+    else:
+        raise ValueError(f"unknown policy {policy!r}")
+    return simulate_batched(
+        queries, bucket_of_range, sched, cost, cache_capacity, hybrid,
+        bucket_of_keys=bucket_of_keys,
+    )

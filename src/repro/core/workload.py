@@ -1,0 +1,203 @@
+"""Workload decomposition and per-bucket workload queues.
+
+Paper §3.1: a query Q_i is pre-processed into sub-queries; the *workload*
+W_j^i is the set of Q_i's objects that overlap bucket B_j.  The workload
+queue of B_j is the union over queries — requests from many queries are
+interleaved in the same queue and joined in one pass.
+
+A query completes only when every one of its work units has been evaluated
+(the paper's "last-mile bottleneck", §3.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any, Callable, Iterable
+
+import numpy as np
+
+__all__ = ["Query", "WorkUnit", "WorkloadQueue", "WorkloadManager"]
+
+
+@dataclasses.dataclass
+class Query:
+    """One incoming query: a set of objects to probe, with key ranges.
+
+    ``keys_lo``/``keys_hi`` are per-object SFC bounding ranges (the paper's
+    per-object HTM ID range covering all potential match regions).
+    ``payload`` carries whatever the evaluator needs (e.g. unit vectors).
+    """
+
+    query_id: int
+    arrival_time: float
+    keys_lo: np.ndarray
+    keys_hi: np.ndarray
+    payload: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_objects(self) -> int:
+        return len(self.keys_lo)
+
+
+@dataclasses.dataclass
+class WorkUnit:
+    """W_j^i: the part of query ``query_id`` overlapping bucket ``bucket_id``."""
+
+    query_id: int
+    bucket_id: int
+    object_idx: np.ndarray  # indices into the parent query's object arrays
+    arrival_time: float
+
+    @property
+    def size(self) -> int:
+        return len(self.object_idx)
+
+
+class WorkloadQueue:
+    """Pending work units for one bucket."""
+
+    __slots__ = ("bucket_id", "units", "_size")
+
+    def __init__(self, bucket_id: int) -> None:
+        self.bucket_id = bucket_id
+        self.units: list[WorkUnit] = []
+        self._size = 0
+
+    def push(self, unit: WorkUnit) -> None:
+        self.units.append(unit)
+        self._size += unit.size
+
+    def drain(self) -> list[WorkUnit]:
+        units, self.units, self._size = self.units, [], 0
+        return units
+
+    @property
+    def size(self) -> int:
+        """Total pending objects — |W_i| in Eq. 1."""
+        return self._size
+
+    @property
+    def oldest_arrival(self) -> float:
+        return min(u.arrival_time for u in self.units) if self.units else np.inf
+
+    def __len__(self) -> int:
+        return len(self.units)
+
+    def __bool__(self) -> bool:
+        return bool(self.units)
+
+
+class WorkloadManager:
+    """The paper's Workload Manager (Fig. 3).
+
+    Maintains: per-bucket workload queues, the query -> outstanding-bucket
+    map, and per-queue oldest-request age.  ``decompose`` is the Query
+    Pre-Processor: it maps each query object to the buckets its key range
+    overlaps.
+    """
+
+    def __init__(
+        self,
+        bucket_of_range: Callable[[int, int], np.ndarray],
+        bucket_of_keys: Callable[[np.ndarray], np.ndarray] | None = None,
+    ):
+        # bucket_of_range(key_lo, key_hi) -> array of overlapping bucket ids
+        # bucket_of_keys(keys) -> bucket id per key (vectorized fast path)
+        self._bucket_of_range = bucket_of_range
+        self._bucket_of_keys = bucket_of_keys
+        self.queues: dict[int, WorkloadQueue] = {}
+        self.outstanding: dict[int, set[int]] = {}  # query_id -> bucket ids
+        self.queries: dict[int, Query] = {}
+        self.completed: dict[int, float] = {}  # query_id -> completion time
+
+    def _decompose(self, query: Query) -> dict[int, list[int]]:
+        per_bucket: dict[int, list[int]] = defaultdict(list)
+        if self._bucket_of_keys is not None and query.n_objects:
+            lo_b = self._bucket_of_keys(query.keys_lo)
+            hi_b = self._bucket_of_keys(query.keys_hi)
+            simple = lo_b == hi_b  # the common case: one bucket per object
+            idx = np.nonzero(simple)[0]
+            if len(idx):
+                order = idx[np.argsort(lo_b[idx], kind="stable")]
+                ub, starts = np.unique(lo_b[order], return_index=True)
+                for b, grp in zip(ub, np.split(order, starts[1:])):
+                    per_bucket[int(b)].extend(grp.tolist())
+            for i in np.nonzero(~simple)[0]:
+                for b in range(int(lo_b[i]), int(hi_b[i]) + 1):
+                    per_bucket[int(b)].append(int(i))
+            return per_bucket
+        for i in range(query.n_objects):
+            for b in self._bucket_of_range(
+                int(query.keys_lo[i]), int(query.keys_hi[i])
+            ):
+                per_bucket[int(b)].append(i)
+        return per_bucket
+
+    # -- intake -------------------------------------------------------------
+    def submit(self, query: Query) -> list[WorkUnit]:
+        """Pre-process a query into work units and enqueue them."""
+        per_bucket = self._decompose(query)
+        units = []
+        self.queries[query.query_id] = query
+        self.outstanding[query.query_id] = set(per_bucket)
+        for b, idx in per_bucket.items():
+            unit = WorkUnit(
+                query_id=query.query_id,
+                bucket_id=b,
+                object_idx=np.asarray(idx, dtype=np.int64),
+                arrival_time=query.arrival_time,
+            )
+            self.queues.setdefault(b, WorkloadQueue(b)).push(unit)
+            units.append(unit)
+        if not per_bucket:  # degenerate empty query completes immediately
+            self.completed[query.query_id] = query.arrival_time
+            del self.outstanding[query.query_id]
+        return units
+
+    # -- scheduling support ---------------------------------------------------
+    def nonempty_queues(self) -> list[WorkloadQueue]:
+        return [q for q in self.queues.values() if q]
+
+    def queue(self, bucket_id: int) -> WorkloadQueue:
+        return self.queues.setdefault(bucket_id, WorkloadQueue(bucket_id))
+
+    def ages_ms(self, now: float) -> dict[int, float]:
+        """A(i): age in milliseconds of the oldest request per bucket (§3.3)."""
+        return {
+            b: (now - q.oldest_arrival) * 1e3
+            for b, q in self.queues.items()
+            if q
+        }
+
+    # -- completion ------------------------------------------------------------
+    def complete_bucket(self, bucket_id: int, now: float) -> list[int]:
+        """Drain bucket's queue; return ids of queries that fully completed."""
+        done = []
+        q = self.queues.get(bucket_id)
+        if q is None:
+            return done
+        for unit in q.drain():
+            pending = self.outstanding.get(unit.query_id)
+            if pending is None:
+                continue
+            pending.discard(bucket_id)
+            if not pending:
+                self.completed[unit.query_id] = now
+                del self.outstanding[unit.query_id]
+                done.append(unit.query_id)
+        return done
+
+    # -- introspection ----------------------------------------------------------
+    @property
+    def n_pending_queries(self) -> int:
+        return len(self.outstanding)
+
+    def pending_objects(self) -> int:
+        return sum(q.size for q in self.queues.values())
+
+    def response_times(self) -> dict[int, float]:
+        return {
+            qid: t - self.queries[qid].arrival_time
+            for qid, t in self.completed.items()
+        }

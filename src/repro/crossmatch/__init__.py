@@ -1,0 +1,15 @@
+"""Faithful application: SkyQuery-style astronomy cross-match."""
+from .catalog import SkyCatalog, make_catalog
+from .engine import CrossMatchEngine, MatchResult
+from .trace import TraceConfig, cone_sample, make_trace, workload_stats
+
+__all__ = [
+    "SkyCatalog",
+    "make_catalog",
+    "CrossMatchEngine",
+    "MatchResult",
+    "TraceConfig",
+    "cone_sample",
+    "make_trace",
+    "workload_stats",
+]

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+  crossmatch      — banded tiled dot-threshold spatial join (the paper's join)
+  paged_attention — bucket-batched decode attention over KV pages
+  grouped_matmul  — ragged group GEMM (MoE experts / multi-adapter buckets)
+                    with the paper's hybrid indexed-vs-scan execution
+"""
+from . import crossmatch, grouped_matmul, paged_attention
+
+__all__ = ["crossmatch", "grouped_matmul", "paged_attention"]

@@ -1,0 +1,74 @@
+"""Jitted public wrapper for the cross-match kernel.
+
+Handles padding (coordinate axis -> COORD_PAD, M/N -> block multiples),
+dispatches to the Pallas kernel or the jnp reference, and slices padding
+back off.  The engine calls this; tests sweep shapes against ``ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import COORD_PAD, crossmatch_pallas
+from .ref import crossmatch_ref
+
+__all__ = ["crossmatch"]
+
+
+def _pad_rows(x: jnp.ndarray, mult: int) -> jnp.ndarray:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x
+
+
+def _pad_coords(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.pad(x, ((0, 0), (0, COORD_PAD - x.shape[1])))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cos_thr", "use_pallas", "bm", "bn", "band", "interpret")
+)
+def _crossmatch_jit(
+    bucket, probes, cos_thr, use_pallas, bm, bn, band, interpret
+):
+    m = probes.shape[0]
+    if not use_pallas:
+        return crossmatch_ref(bucket, probes, cos_thr)
+    bucket_p = _pad_coords(_pad_rows(bucket.astype(jnp.float32), bn))
+    probes_p = _pad_coords(_pad_rows(probes.astype(jnp.float32), bm))
+    idx, dot, cnt = crossmatch_pallas(
+        bucket_p, probes_p, cos_thr, bm=bm, bn=bn, band=band, interpret=interpret
+    )
+    # Padded bucket rows are all-zero -> dot 0; they can only win when every
+    # real dot is negative, in which case best_dot < cos_thr anyway.
+    n_real = bucket.shape[0]
+    idx = jnp.minimum(idx, n_real - 1)
+    return idx[:m], dot[:m], cnt[:m]
+
+
+def crossmatch(
+    bucket,
+    probes,
+    cos_thr: float,
+    use_pallas: bool = False,
+    bm: int = 128,
+    bn: int = 512,
+    band: int | None = None,
+    interpret: bool = True,
+):
+    """Cross-match ``probes`` against ``bucket`` (both (?,3) unit vectors).
+
+    Returns (best_idx, best_dot, n_cand), each of length len(probes).
+    ``use_pallas=False`` uses the jnp reference path (fast on CPU);
+    ``use_pallas=True`` runs the TPU kernel (interpret mode off-TPU).
+    """
+    bucket = jnp.asarray(bucket, dtype=jnp.float32)
+    probes = jnp.asarray(probes, dtype=jnp.float32)
+    return _crossmatch_jit(
+        bucket, probes, float(cos_thr), use_pallas, bm, bn, band, interpret
+    )

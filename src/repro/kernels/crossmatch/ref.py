@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the cross-match join.
+
+Semantics (probabilistic spatial join on the unit sphere):
+given catalog ``bucket`` (N,3) and probe set ``probes`` (M,3), both unit
+vectors, and a cosine threshold ``cos_thr`` = cos(match radius):
+
+  best_idx[m] = argmax_n <probes[m], bucket[n]>       (nearest neighbour)
+  best_dot[m] = the corresponding max dot product
+  n_cand[m]   = #{n : <probes[m], bucket[n]> >= cos_thr}
+
+A probe 'matches' iff n_cand > 0 (equivalently best_dot >= cos_thr).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["crossmatch_ref"]
+
+
+def crossmatch_ref(bucket: jnp.ndarray, probes: jnp.ndarray, cos_thr: float):
+    dots = jnp.dot(probes, bucket.T)  # (M, N)
+    best_idx = jnp.argmax(dots, axis=1).astype(jnp.int32)
+    best_dot = jnp.max(dots, axis=1)
+    n_cand = jnp.sum(dots >= cos_thr, axis=1).astype(jnp.int32)
+    return best_idx, best_dot, n_cand

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: ragged grouped matmul with scalar-prefetched group map.
+
+The LifeRaft structure at kernel level: each *group* (MoE expert /
+LoRA-adapter bucket) owns a weight matrix that is expensive to bring into
+VMEM (the bucket read, T_b); every row routed to the group shares that one
+residency (the workload queue's shared pass, T_m per row).  Rows arrive
+group-sorted and group boundaries are tile-aligned, so each row-tile maps
+to exactly one group; the per-tile group id is a scalar-prefetch operand,
+letting Pallas pipeline the correct weight block from HBM ahead of compute.
+
+Grid: (row_tiles, f_tiles, d_tiles) with the contraction (d) innermost,
+accumulating in an f32 VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["grouped_matmul_pallas"]
+
+
+def _kernel(tile_gid_ref, x_ref, w_ref, o_ref, acc_ref, *, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bt", "bf", "bk", "interpret")
+)
+def grouped_matmul_pallas(
+    x: jnp.ndarray,  # (T, d), rows group-sorted, T % bt == 0
+    tile_gid: jnp.ndarray,  # (T // bt,) int32 — group id per row tile
+    w: jnp.ndarray,  # (G, d, f)
+    bt: int = 128,
+    bf: int = 256,
+    bk: int = 512,
+    interpret: bool = True,
+):
+    T, d = x.shape
+    G, dw, f = w.shape
+    assert dw == d
+    bk = min(bk, d)
+    bf = min(bf, f)
+    assert T % bt == 0 and d % bk == 0 and f % bf == 0, (T, d, f, bt, bk, bf)
+    nk = d // bk
+    grid = (T // bt, f // bf, nk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bk), lambda i, j, k, g: (i, k)),
+            # weight block for this tile's group: scalar-prefetched gather
+            pl.BlockSpec((None, bk, bf), lambda i, j, k, g: (g[i], k, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bf), lambda i, j, k, g: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bt, bf), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, f), x.dtype),
+        interpret=interpret,
+    )(tile_gid, x, w)

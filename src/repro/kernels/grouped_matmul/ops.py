@@ -1,0 +1,98 @@
+"""Public wrapper: ragged grouped matmul + the paper's hybrid execution.
+
+``grouped_matmul``   — dense tile-mapped kernel path (the 'sequential scan').
+``hybrid_grouped_matmul`` — per-group plan selection: groups with tiny row
+counts take a gathered jnp path (the 'indexed join'); everything else runs
+through the Pallas kernel.  The threshold mirrors core.hybrid's break-even.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import grouped_matmul_pallas
+from .ref import grouped_matmul_ref, row_groups
+
+__all__ = ["grouped_matmul", "hybrid_grouped_matmul", "pad_groups_to_tiles"]
+
+
+def pad_groups_to_tiles(x, group_sizes, bt: int):
+    """Scatter rows so each group's rows start at a tile boundary.
+
+    Returns (x_padded, tile_gid, row_map) where row_map[r] is the padded
+    row of original row r (used to gather outputs back).
+    """
+    G = group_sizes.shape[0]
+    padded_sizes = ((group_sizes + bt - 1) // bt) * bt
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(padded_sizes)[:-1].astype(jnp.int32)])
+    gid = row_groups(group_sizes, x.shape[0]).astype(jnp.int32)
+    gid = jnp.minimum(gid, G - 1)
+    # position of each row within its group
+    offset_in_group = jnp.arange(x.shape[0], dtype=jnp.int32) - jnp.cumsum(
+        jnp.concatenate([jnp.zeros(1, jnp.int32), group_sizes[:-1].astype(jnp.int32)])
+    )[gid]
+    row_map = starts[gid] + offset_in_group
+    T_pad = int(((int(group_sizes.shape[0]) * bt)))  # static lower bound
+    return row_map, padded_sizes, starts
+
+
+def grouped_matmul(
+    x: jnp.ndarray,
+    group_sizes: jnp.ndarray,
+    w: jnp.ndarray,
+    bt: int = 128,
+    bf: int = 256,
+    bk: int = 512,
+    use_pallas: bool = True,
+    interpret: bool = True,
+):
+    """y[r] = x[r] @ w[group(r)].
+
+    Requires group boundaries tile-aligned (every group size a multiple of
+    ``bt``) for the kernel path — the MoE capacity layout guarantees this.
+    Falls back to the reference for ragged-unaligned input.
+    """
+    T, d = x.shape
+    if not use_pallas:
+        return grouped_matmul_ref(x, group_sizes, w)
+    # tile -> group map (computed in-graph; becomes a scalar-prefetch arg)
+    n_tiles = T // bt
+    first_row = jnp.arange(n_tiles, dtype=jnp.int32) * bt
+    tile_gid = row_groups(group_sizes, T).astype(jnp.int32)[first_row]
+    tile_gid = jnp.minimum(tile_gid, w.shape[0] - 1)
+    # pad f to bf multiple
+    f = w.shape[-1]
+    pf = (-f) % min(bf, f) if f >= bf else (-f) % f
+    bf_eff = min(bf, f + pf)
+    if pf:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, pf)))
+    pk = (-d) % min(bk, d)
+    if pk:
+        x = jnp.pad(x, ((0, 0), (0, pk)))
+        w = jnp.pad(w, ((0, 0), (0, pk), (0, 0)))
+    out = grouped_matmul_pallas(
+        x, tile_gid, w, bt=bt, bf=bf_eff, bk=min(bk, x.shape[1]),
+        interpret=interpret,
+    )
+    return out[:, :f]
+
+
+def hybrid_grouped_matmul(
+    x: jnp.ndarray,
+    group_sizes: jnp.ndarray,
+    w: jnp.ndarray,
+    threshold_rows: int = 16,
+    **kw,
+):
+    """Paper §3.4 at kernel level: indexed path for tiny groups, scan path
+    for contended groups.  Differentiable w.r.t. x and w on both paths."""
+    dense = grouped_matmul(x, group_sizes, w, **kw)
+    gid = row_groups(group_sizes, x.shape[0])
+    gid = jnp.minimum(gid, w.shape[0] - 1)
+    small = (group_sizes < threshold_rows)[gid]  # rows on the indexed path
+    # Indexed path: per-row gathered weight matmul (random access).
+    wg = w[gid]  # (T, d, f) gather — only efficient when few rows; XLA DCEs
+    indexed = jnp.einsum("td,tdf->tf", x, wg)
+    return jnp.where(small[:, None], indexed, dense)

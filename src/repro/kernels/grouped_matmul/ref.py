@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the ragged grouped matmul.
+
+Rows of ``x`` are grouped (sorted by group, ragged sizes); row r in group g
+is multiplied by that group's weight matrix:  y[r] = x[r] @ w[g].
+Used by MoE expert FFNs (group = expert) and multi-adapter serving
+(group = adapter bucket).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["grouped_matmul_ref", "row_groups"]
+
+
+def row_groups(group_sizes: jnp.ndarray, n_rows: int) -> jnp.ndarray:
+    """Group id per row from ragged group sizes (rows past total -> last)."""
+    bounds = jnp.cumsum(group_sizes)
+    return jnp.searchsorted(bounds, jnp.arange(n_rows), side="right")
+
+
+def grouped_matmul_ref(x: jnp.ndarray, group_sizes: jnp.ndarray, w: jnp.ndarray):
+    """x: (T, d); group_sizes: (G,) summing to <= T; w: (G, d, f) -> (T, f)."""
+    gid = row_groups(group_sizes, x.shape[0])
+    gid = jnp.minimum(gid, w.shape[0] - 1)
+    wg = w[gid]  # (T, d, f) — oracle only; the kernel never materializes this
+    return jnp.einsum("td,tdf->tf", x, wg)

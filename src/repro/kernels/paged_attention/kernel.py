@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: paged decode attention (bucket-batched KV access).
+
+The serving-side materialization of LifeRaft's bucket model: KV pages are
+the buckets (fixed-size, spatially coherent units of expensive state) and
+all query heads for a sequence share each page read — one HBM->VMEM
+transfer amortized over the whole head batch, with online-softmax
+accumulation so pages stream through VMEM in page_table order.
+
+Grid: (B, pages_per_seq); the page index for (b, p) is scalar-prefetched
+from the page table, so Mosaic pipelines the gather of page p+1 while
+page p is being processed.  Scratch: flash (m, l, acc) per sequence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["paged_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(
+    pt_ref,  # scalar prefetch: (B, P) page table
+    lens_ref,  # scalar prefetch: (B,) seq lens
+    q_ref,  # (1, H, D)
+    k_ref,  # (1, page, KV, D) — the page selected by the index map
+    v_ref,
+    o_ref,  # (1, H, D)
+    m_ref,  # scratch (KV, G) f32  running max
+    l_ref,  # scratch (KV, G) f32  running denominator
+    acc_ref,  # scratch (H, D) f32 running numerator
+    *,
+    page: int,
+    n_pages: int,
+):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (H, D)
+    H, D = q.shape
+    k = k_ref[0]  # (page, KV, D)
+    v = v_ref[0]
+    KV = k.shape[1]
+    G = H // KV
+
+    qg = q.reshape(KV, G, D)
+    s = jax.lax.dot_general(
+        qg.reshape(KV * G, D),
+        k.reshape(page * KV, D),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(KV, G, page, KV)
+    # keep only the diagonal KV pairing: score[kv, g, t] = <q[kv,g], k[t,kv]>
+    eye = jax.lax.broadcasted_iota(jnp.int32, (KV, 1, 1, KV), 0) == \
+        jax.lax.broadcasted_iota(jnp.int32, (KV, 1, 1, KV), 3)
+    s = jnp.sum(jnp.where(eye, s, 0.0), axis=3)  # (KV, G, page)
+    s = s / jnp.sqrt(jnp.float32(D))
+
+    # mask invalid slots of this page
+    t0 = p * page
+    slot = jax.lax.broadcasted_iota(jnp.int32, (KV, G, page), 2) + t0
+    valid = slot < lens_ref[b]
+    s = jnp.where(valid, s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)  # (KV, G)
+    pexp = jnp.exp(s - m_new[..., None])  # (KV, G, page)
+    pexp = jnp.where(valid, pexp, 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(pexp, axis=-1)
+    m_ref[...] = m_new
+
+    pv = jax.lax.dot_general(
+        pexp.reshape(KV * G, page).astype(v.dtype),
+        v.reshape(page, KV * D),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(KV, G, KV, D)
+    eye2 = jax.lax.broadcasted_iota(jnp.int32, (KV, 1, KV, 1), 0) == \
+        jax.lax.broadcasted_iota(jnp.int32, (KV, 1, KV, 1), 2)
+    pv = jnp.sum(jnp.where(eye2, pv, 0.0), axis=2)  # (KV, G, D)
+    acc_ref[...] = acc_ref[...] * alpha.reshape(H, 1) + pv.reshape(H, D)
+
+    @pl.when(p == n_pages - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[...].reshape(H, 1), 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_pallas(
+    q: jnp.ndarray,  # (B, H, D)
+    k_pages: jnp.ndarray,  # (N, page, KV, D)
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,  # (B, P) int32
+    seq_lens: jnp.ndarray,  # (B,) int32
+    interpret: bool = True,
+):
+    B, H, D = q.shape
+    N, page, KV, _ = k_pages.shape
+    P = page_table.shape[1]
+    grid = (B, P)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, p, pt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, page, KV, D), lambda b, p, pt, ln: (pt[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, page, KV, D), lambda b, p, pt, ln: (pt[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, p, pt, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KV, H // KV), jnp.float32),
+            pltpu.VMEM((KV, H // KV), jnp.float32),
+            pltpu.VMEM((H, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, page=page, n_pages=P),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(page_table, seq_lens, q, k_pages, v_pages)

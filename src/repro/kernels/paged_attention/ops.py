@@ -1,0 +1,44 @@
+"""Public wrapper for paged decode attention + cache<->page utilities."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import paged_attention_pallas
+from .ref import paged_attention_ref
+
+__all__ = ["paged_attention", "dense_to_pages"]
+
+
+def paged_attention(
+    q,
+    k_pages,
+    v_pages,
+    page_table,
+    seq_lens,
+    use_pallas: bool = False,
+    interpret: bool = True,
+):
+    """Decode attention over paged KV. q: (B,H,D) -> (B,H,D)."""
+    q = jnp.asarray(q)
+    if use_pallas:
+        return paged_attention_pallas(
+            q, k_pages, v_pages, page_table.astype(jnp.int32),
+            seq_lens.astype(jnp.int32), interpret=interpret,
+        )
+    return paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens)
+
+
+def dense_to_pages(k: jnp.ndarray, v: jnp.ndarray, page: int):
+    """(B, S, KV, D) dense cache -> page pools + identity page table.
+
+    Testing/bridging helper: page i of sequence b is global page b*P+i."""
+    B, S, KV, D = k.shape
+    assert S % page == 0
+    P = S // page
+    k_pages = k.reshape(B * P, page, KV, D)
+    v_pages = v.reshape(B * P, page, KV, D)
+    page_table = (jnp.arange(B)[:, None] * P + jnp.arange(P)[None, :]).astype(jnp.int32)
+    return k_pages, v_pages, page_table

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for paged decode attention (GQA, one token per seq).
+
+Semantics: q (B, H, D); paged KV with ``page_table`` (B, P) selecting pages
+of shape (page_size, KV, D) from the global pools; per-sequence lengths
+mask out slots at or past ``seq_lens[b]``.  Equivalent to dense causal
+decode attention over the gathered cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["paged_attention_ref"]
+
+
+def paged_attention_ref(
+    q: jnp.ndarray,  # (B, H, D)
+    k_pages: jnp.ndarray,  # (N_pages, page, KV, D)
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,  # (B, P) int32
+    seq_lens: jnp.ndarray,  # (B,) int32
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    _, page, KV, _ = k_pages.shape
+    P = page_table.shape[1]
+    G = H // KV
+    k = k_pages[page_table].reshape(B, P * page, KV, D)
+    v = v_pages[page_table].reshape(B, P * page, KV, D)
+    qg = q.reshape(B, KV, G, D)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k, preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(D))
+    t = jnp.arange(P * page)
+    valid = t[None, :] < seq_lens[:, None]  # (B, T)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs.astype(v.dtype), v)
+    return out.reshape(B, H, D)

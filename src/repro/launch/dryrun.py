@@ -1,0 +1,300 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set XLA_FLAGS before any other import (jax locks device count on
+first init) — these two lines are first on purpose."""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import SHAPES, get_config, cells  # noqa: E402
+from ..models import registry as R  # noqa: E402
+from ..sharding.logical import (  # noqa: E402
+    DECODE_RULES,
+    DEFAULT_RULES,
+    ShardingRules,
+    activate,
+)
+from ..training.optimizer import make_optimizer  # noqa: E402
+from ..training.train_step import (  # noqa: E402
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    tree_shardings,
+)
+from .mesh import make_production_mesh  # noqa: E402
+from .roofline import HW, parse_collectives, roofline_terms  # noqa: E402
+
+__all__ = ["lower_cell", "run_cell"]
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    zero1: bool = False,
+    overrides: dict | None = None,
+    rule_overrides: dict | None = None,
+):
+    """Lower one cell; returns (lowered, meta). No device allocation."""
+    import dataclasses
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rule_table = dict(DECODE_RULES if shape.kind == "decode" else DEFAULT_RULES)
+    if rule_overrides:
+        rule_table.update(rule_overrides)
+    rules = ShardingRules(mesh, rule_table)
+    chips = mesh.devices.size
+
+    params_abs = R.init_params(cfg, mode="abstract")
+    paxes = R.param_axes(cfg)
+    params_sh = tree_shardings(rules, paxes, params_abs)
+    batch_abs = R.input_specs(cfg, shape)
+    baxes = R.batch_axes(cfg, shape)
+    batch_sh = tree_shardings(rules, baxes, batch_abs)
+    rep = _replicated(mesh)
+
+    with activate(rules):
+        if shape.kind == "train":
+            opt = make_optimizer(cfg.optimizer)
+            opt_abs = jax.eval_shape(opt.init, params_abs)
+            oaxes = opt.state_axes(paxes)
+            opt_sh = tree_shardings(rules, oaxes, opt_abs, zero1=zero1)
+            step = make_train_step(cfg, opt)
+            metrics_sh = jax.tree_util.tree_map(
+                lambda _: rep, {"loss": 0, "grad_norm": 0, "lr": 0}
+            )
+            jitted = jax.jit(
+                step,
+                in_shardings=(params_sh, opt_sh, batch_sh),
+                out_shardings=(params_sh, opt_sh, metrics_sh),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            out_sh = NamedSharding(
+                mesh, rules.spec_for(("batch",), (shape.global_batch,))
+            )
+            jitted = jax.jit(
+                step, in_shardings=(params_sh, batch_sh), out_shardings=out_sh
+            )
+            lowered = jitted.lower(params_abs, batch_abs)
+        else:  # decode
+            cache_abs = R.make_cache(
+                cfg, shape.global_batch, shape.seq_len, mode="abstract",
+                enc_len=min(shape.seq_len, 32768),
+            )
+            caxes = R.cache_axes(
+                cfg, shape.global_batch, shape.seq_len,
+                enc_len=min(shape.seq_len, 32768),
+            )
+            cache_sh = tree_shardings(rules, caxes, cache_abs)
+            token_sh = batch_sh["token"]
+            step = make_serve_step(cfg, shape.seq_len)
+            jitted = jax.jit(
+                step,
+                in_shardings=(params_sh, token_sh, cache_sh),
+                out_shardings=(token_sh, cache_sh),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(
+                params_abs, batch_abs["token"], cache_abs
+            )
+    meta = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "zero1": zero1,
+        "overrides": {k: str(v) for k, v in (overrides or {}).items()},
+        "rule_overrides": {k: str(v) for k, v in (rule_overrides or {}).items()},
+    }
+    return lowered, meta, cfg, shape
+
+
+def _model_flops(cfg, shape) -> float:
+    n_active = cfg.param_count(active_only=True)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+# ------------------------------------------------------------------ calibration
+# XLA's HLO cost analysis counts a while-loop (lax.scan) body ONCE, so the
+# reported flops/bytes of a scanned-layer model are depth-independent.  Cost
+# is affine in depth (embed/head + L x body), so we compile two shallow
+# variants (depths L1 < L2, all widths full) and extrapolate linearly to the
+# real depth.  Exact for affine cost; the full-depth compile still provides
+# the compile proof, memory analysis, and the collective *schedule*.
+def _depth_field_and_pair(cfg):
+    if cfg.family == "hybrid":
+        return {"n_layers": (cfg.attn_period, 2 * cfg.attn_period)}
+    if cfg.family == "encdec":
+        return {"n_layers": (2, 4), "n_enc_layers": (2, 4)}
+    return {"n_layers": (2, 4)}
+
+
+def _measure(lowered):
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text())
+    return (
+        compiled,
+        float(cost.get("flops", 0.0)),
+        float(cost.get("bytes accessed", 0.0)),
+        coll,
+    )
+
+
+def _calibrated_costs(arch, shape_name, multi_pod, zero1, overrides, cfg,
+                      rule_overrides=None):
+    """(flops, bytes, wire_bytes) extrapolated to full depth."""
+    pairs = _depth_field_and_pair(cfg)
+    L_full = cfg.n_layers
+    ovr = dict(overrides or {})
+    ovr["microbatch"] = None  # accumulation scan would also hide flops
+    ovr["scan_layers"] = False  # unrolled layers: cost analysis sees each one
+    o1 = dict(ovr, **{k: v[0] for k, v in pairs.items()})
+    o2 = dict(ovr, **{k: v[1] for k, v in pairs.items()})
+    l1, *_ = lower_cell(arch, shape_name, multi_pod, zero1, o1, rule_overrides)
+    _, f1, b1, c1 = _measure(l1)
+    l2, *_ = lower_cell(arch, shape_name, multi_pod, zero1, o2, rule_overrides)
+    _, f2, b2, c2 = _measure(l2)
+    L1, L2 = pairs["n_layers"]
+    scale = (L_full - L1) / (L2 - L1)
+    flops = f1 + (f2 - f1) * scale
+    byt = b1 + (b2 - b1) * scale
+    wire = c1.wire_bytes_per_chip + (c2.wire_bytes_per_chip - c1.wire_bytes_per_chip) * scale
+    return flops, byt, wire, {"L1": L1, "L2": L2, "f1": f1, "f2": f2}
+
+
+def run_cell(arch, shape_name, multi_pod=False, zero1=False, overrides=None,
+             out_dir="experiments/dryrun", tag="", calibrate=True,
+             rule_overrides=None):
+    t0 = time.time()
+    lowered, meta, cfg, shape = lower_cell(
+        arch, shape_name, multi_pod, zero1, overrides, rule_overrides
+    )
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    if calibrate:
+        flops, byt, wire, calib = _calibrated_costs(
+            arch, shape_name, multi_pod, zero1, overrides, cfg, rule_overrides
+        )
+        coll.wire_bytes_per_chip = wire
+    else:
+        flops, byt, calib = raw_flops, raw_bytes, {}
+    terms = roofline_terms(
+        flops, byt, coll,
+        model_flops_global=_model_flops(cfg, shape), chips=meta["chips"],
+    )
+    result = {
+        **meta,
+        "ok": True,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_chip": flops,
+        "bytes_per_chip": byt,
+        "raw_flops_uncalibrated": raw_flops,
+        "raw_bytes_uncalibrated": raw_bytes,
+        "calibration": calib,
+        "memory_analysis": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+        },
+        **terms,
+    }
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    name = f"{arch}__{shape_name}__{result['mesh']}{('__' + tag) if tag else ''}.json"
+    (out / name).write_text(json.dumps(result, indent=2, default=str))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description="LifeRaft-JAX multi-pod dry-run")
+    ap.add_argument("--arch", required=False)
+    ap.add_argument("--shape", required=False, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--all", action="store_true", help="run every live cell")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field override key=value (int/float/bool literal)")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="sharding-rule override name=axis1,axis2 (or 'none')")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        try:
+            import ast
+
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+    rule_overrides = {}
+    for kv in args.rule:
+        k, v = kv.split("=", 1)
+        rule_overrides[k] = None if v == "none" else tuple(v.split(","))
+
+    todo = cells() if args.all else [(args.arch, args.shape)]
+    failures = 0
+    for arch, shape in todo:
+        try:
+            r = run_cell(arch, shape, args.multi_pod, args.zero1,
+                         overrides or None, args.out, args.tag,
+                         rule_overrides=rule_overrides or None)
+            print(
+                f"OK  {arch:26s} {shape:12s} {r['mesh']:8s} "
+                f"compile={r['compile_s']:7.1f}s flops/chip={r['flops_per_chip']:.3e} "
+                f"tc={r['t_compute_s']:.4f} tm={r['t_memory_s']:.4f} "
+                f"tx={r['t_collective_s']:.4f} dom={r['dominant']}"
+            )
+            print("  memory_analysis:", json.dumps(r["memory_analysis"]))
+            print("  cost_analysis: flops={:.3e} bytes={:.3e}".format(
+                r["flops_per_chip"], r["bytes_per_chip"]))
+        except Exception:
+            failures += 1
+            print(f"FAIL {arch} {shape} multi_pod={args.multi_pod}")
+            traceback.print_exc()
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

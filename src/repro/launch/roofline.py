@@ -1,0 +1,157 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Per the brief (TPU v5e targets):
+    compute term    = HLO_FLOPs / (chips x 197e12 FLOP/s)      [per-chip HLO]
+    memory term     = HLO_bytes / (chips x 819e9  B/s)
+    collective term = collective bytes per chip / 50e9 B/s/link
+
+``cost_analysis()`` on the partitioned module already reports *per-chip*
+flops/bytes, so no further division by chip count is applied to those.
+Collective bytes are parsed from the optimized HLO: for each all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute we take the
+result buffer size and the replica-group size g, then convert to ring-
+algorithm bytes-on-the-wire per chip:
+
+    all-reduce      2 (g-1)/g * size
+    all-gather        (g-1)/g * size          (size = gathered result)
+    reduce-scatter    (g-1)   * size          (size = scattered result)
+    all-to-all        (g-1)/g * size
+    collective-permute          size
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+__all__ = ["HW", "Hardware", "parse_collectives", "roofline_terms", "CollectiveStats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12  # bf16 / chip
+    hbm_bw: float = 819e9  # B/s / chip
+    ici_bw: float = 50e9  # B/s / link
+    hbm_bytes: float = 16e9
+
+
+HW = Hardware()
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# e.g. "bf16[16,256,1024]{2,1,0}" or "f32[]"; tuples handled separately
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[\w\[\],{}]+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    result_bytes: dict
+    wire_bytes_per_chip: float
+
+    def total_result_bytes(self) -> float:
+        return sum(self.result_bytes.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict[str, int] = {}
+    result_bytes: dict[str, float] = {}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if m.group(3) == "-done":  # started op already counted at -start
+            continue
+        type_str, op = m.group(1), m.group(2)
+        size = _type_bytes(type_str)
+        # group size
+        g = 1
+        gi = _GROUPS_IOTA_RE.search(line)
+        if gi:
+            g = int(gi.group(2))
+        else:
+            gm = _GROUPS_RE.search(line)
+            if gm:
+                first = gm.group(1).split("}")[0].lstrip("{")
+                g = max(len([x for x in first.split(",") if x.strip() != ""]), 1)
+        counts[op] = counts.get(op, 0) + 1
+        result_bytes[op] = result_bytes.get(op, 0.0) + size
+        if op == "collective-permute":  # point-to-point: no group attribute
+            wire += size
+            continue
+        if g <= 1:
+            continue
+        if op == "all-reduce":
+            wire += 2.0 * (g - 1) / g * size
+        elif op == "all-gather":
+            wire += (g - 1) / g * size
+        elif op == "reduce-scatter":
+            wire += (g - 1) * size
+        elif op == "all-to-all":
+            wire += (g - 1) / g * size
+        elif op == "collective-permute":
+            wire += size
+    return CollectiveStats(counts, result_bytes, wire)
+
+
+def roofline_terms(
+    flops_per_chip: float,
+    bytes_per_chip: float,
+    coll: CollectiveStats,
+    hw: Hardware = HW,
+    model_flops_global: Optional[float] = None,
+    chips: int = 256,
+) -> dict:
+    t_compute = flops_per_chip / hw.peak_flops
+    t_memory = bytes_per_chip / hw.hbm_bw
+    t_coll = coll.wire_bytes_per_chip / hw.ici_bw
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    bound = max(t_compute, t_memory, t_coll)
+    out = {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "roofline_fraction": (t_compute / bound) if bound > 0 else 0.0,
+        "collective_counts": coll.counts,
+        "collective_result_bytes": coll.result_bytes,
+        "wire_bytes_per_chip": coll.wire_bytes_per_chip,
+    }
+    if model_flops_global:
+        hlo_global = flops_per_chip * chips
+        out["model_flops_global"] = model_flops_global
+        out["useful_flop_ratio"] = model_flops_global / max(hlo_global, 1.0)
+        out["mfu_upper_bound"] = model_flops_global / max(
+            chips * hw.peak_flops * bound, 1e-30
+        )
+    return out

@@ -1,0 +1,45 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it runs reduced smoke configs end-to-end (real
+optimizer, data pipeline, checkpoints).  On a TPU slice the same driver
+runs the full config: the jitted step picks up the production mesh +
+logical-rule shardings, and checkpoint/restart + elastic re-shard come
+from ``repro.checkpoint``.
+"""
+from __future__ import annotations
+
+import argparse
+
+from ..configs import get_config, list_archs, smoke_config
+from ..training.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser(description="LifeRaft-JAX trainer")
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the production config (requires accelerators)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full_config else smoke_config(args.arch)
+    tcfg = TrainerConfig(
+        steps=args.steps,
+        checkpoint_dir=args.ckpt_dir,
+        global_batch=args.global_batch,
+        seq_len=args.seq_len,
+        lr=args.lr,
+    )
+    trainer = Trainer(cfg, tcfg)
+    history = trainer.run()
+    if history:
+        print(f"[train] final loss {history[-1]['loss']:.4f} "
+              f"after {history[-1]['step']} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Model zoo: functional JAX backbones for the 10 assigned architectures."""
+from . import attention, common, encdec, hybrid, mlp, moe, registry, ssm, transformer
+
+__all__ = [
+    "attention", "common", "encdec", "hybrid", "mlp", "moe",
+    "registry", "ssm", "transformer",
+]

@@ -1,0 +1,196 @@
+"""Attention: GQA/MQA/MHA, sliding-window, prefix-LM, cross-attn, KV cache.
+
+Full-sequence (train/prefill) and single-token decode paths.  Decode uses a
+pre-allocated cache (B, S_max, KV, D) updated in place at ``pos`` — for
+sliding-window attention the cache is a ring buffer of size ``window``.
+Softmax runs in f32; matmuls in the activation dtype.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.logical import shard_hint
+from .common import ParamFactory, apply_rope, make_rope
+
+__all__ = [
+    "init_attention",
+    "attn_full",
+    "attn_decode",
+    "init_cross_attention",
+    "cross_attn_full",
+    "precompute_cross_kv",
+    "cross_attn_decode",
+]
+
+_NEG_INF = -1e30
+
+
+def init_attention(cfg, f: ParamFactory, layers: int | None = None) -> dict:
+    """QKV + output projections; optional leading stacked-layer dim."""
+    d, H, KV, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    L = () if layers is None else (layers,)
+    lax_ = () if layers is None else ("layers",)
+    p = {
+        "wq": f.param(L + (d, H, D), lax_ + ("embed", "heads", "head_dim")),
+        "wk": f.param(L + (d, KV, D), lax_ + ("embed", "kv_heads", "head_dim")),
+        "wv": f.param(L + (d, KV, D), lax_ + ("embed", "kv_heads", "head_dim")),
+        "wo": f.param(L + (H, D, d), lax_ + ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = f.param(L + (H, D), lax_ + ("heads", "head_dim"), zero=True)
+        p["bk"] = f.param(L + (KV, D), lax_ + ("kv_heads", "head_dim"), zero=True)
+        p["bv"] = f.param(L + (KV, D), lax_ + ("kv_heads", "head_dim"), zero=True)
+    return p
+
+
+def _qkv(cfg, p, x):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = shard_hint(q, ("batch", "seq", "heads", "head_dim"))
+    k = shard_hint(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = shard_hint(v, ("batch", "seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def _gqa_scores(q, k, scale):
+    """q (B,S,H,D), k (B,T,KV,D) -> scores (B,KV,G,S,T) in f32."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, D)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32)
+    return s * scale
+
+
+def _attend(probs, v):
+    """probs (B,KV,G,S,T) f32, v (B,T,KV,D) -> (B,S,H,D)."""
+    B, KV, G, S, T = probs.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(B, S, KV * G, -1)
+
+
+def attn_full(
+    cfg,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    prefix_len: int = 0,
+) -> jax.Array:
+    """Full self-attention. ``prefix_len`` > 0 gives a bidirectional prefix
+    (prefix-LM, used by the VLM's image tokens)."""
+    B, S, d = x.shape
+    q, k, v = _qkv(cfg, p, x)
+    cos, sin = make_rope(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    scores = _gqa_scores(q, k, 1.0 / jnp.sqrt(cfg.head_dim).astype(jnp.float32))
+
+    ii = positions[:, None]  # (S, 1) query pos
+    jj = positions[None, :]  # (1, S) key pos
+    mask = jnp.ones((S, S), dtype=bool)
+    if causal:
+        mask &= jj <= ii
+        if prefix_len > 0:  # bidirectional over the prefix block
+            mask |= (ii < prefix_len) & (jj < prefix_len)
+    if window is not None:
+        mask &= ii - jj < window
+    scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _attend(probs, v)
+    out = jnp.einsum("bshd,hdm->bsm", out, p["wo"])
+    return shard_hint(out, ("batch", "seq", "embed"))
+
+
+class DecodeCacheLayout(NamedTuple):
+    """Static description of one layer's KV cache."""
+
+    seq: int  # allocated slots (= window for SWA, else max seq)
+    ring: bool
+
+
+def cache_layout(cfg, max_seq: int) -> DecodeCacheLayout:
+    if cfg.sliding_window is not None and cfg.sliding_window < max_seq:
+        return DecodeCacheLayout(cfg.sliding_window, True)
+    return DecodeCacheLayout(max_seq, False)
+
+
+def attn_decode(
+    cfg,
+    p: dict,
+    x: jax.Array,  # (B, 1, d)
+    k_cache: jax.Array,  # (B, S_alloc, KV, D)
+    v_cache: jax.Array,
+    pos: jax.Array,  # scalar int32 — current decode position
+    layout: DecodeCacheLayout,
+):
+    """One decode step; returns (out (B,1,d), new_k_cache, new_v_cache)."""
+    B = x.shape[0]
+    q, k, v = _qkv(cfg, p, x)  # (B,1,H,D)/(B,1,KV,D)
+    posv = jnp.full((1,), pos, dtype=jnp.int32)
+    cos, sin = make_rope(posv, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    slot = jnp.mod(pos, layout.seq) if layout.ring else pos
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, slot, 0, 0))
+    k_cache = shard_hint(k_cache, ("batch", "cache_seq", "cache_kv_heads", "head_dim"))
+    v_cache = shard_hint(v_cache, ("batch", "cache_seq", "cache_kv_heads", "head_dim"))
+
+    scores = _gqa_scores(q, k_cache, 1.0 / jnp.sqrt(cfg.head_dim).astype(jnp.float32))
+    t = jnp.arange(layout.seq)
+    valid = t <= slot if not layout.ring else (t <= slot) | (pos >= layout.seq)
+    scores = jnp.where(valid[None, None, None, None, :], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _attend(probs, v_cache)
+    out = jnp.einsum("bshd,hdm->bsm", out, p["wo"])
+    return shard_hint(out, ("batch", "seq", "embed")), k_cache, v_cache
+
+
+# ---------------------------------------------------------------- cross-attention
+def init_cross_attention(cfg, f: ParamFactory, layers: int | None = None) -> dict:
+    return init_attention(cfg, f, layers)
+
+
+def cross_attn_full(cfg, p: dict, x: jax.Array, memory: jax.Array) -> jax.Array:
+    """Decoder attends to encoder ``memory`` (B, T, d). No RoPE, no mask."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", memory, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", memory, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    scores = _gqa_scores(q, k, 1.0 / jnp.sqrt(cfg.head_dim).astype(jnp.float32))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _attend(probs, v)
+    out = jnp.einsum("bshd,hdm->bsm", out, p["wo"])
+    return shard_hint(out, ("batch", "seq", "embed"))
+
+
+def precompute_cross_kv(cfg, p: dict, memory: jax.Array):
+    """Cross-attention K/V are static per sequence — computed once at prefill."""
+    k = jnp.einsum("btd,dhk->bthk", memory, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", memory, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return k, v
+
+
+def cross_attn_decode(cfg, p: dict, x: jax.Array, ck: jax.Array, cv: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    scores = _gqa_scores(q, ck, 1.0 / jnp.sqrt(cfg.head_dim).astype(jnp.float32))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _attend(probs, cv)
+    out = jnp.einsum("bshd,hdm->bsm", out, p["wo"])
+    return shard_hint(out, ("batch", "seq", "embed"))

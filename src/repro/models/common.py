@@ -1,0 +1,139 @@
+"""Shared model building blocks: param factory, norms, rope, embeddings.
+
+Models are functional: ``init(cfg, factory) -> params`` (nested dicts) and
+``apply(cfg, params, ...) -> outputs``.  The ``ParamFactory`` runs in three
+modes so the same init code yields:
+  * ``init``     — real arrays (smoke tests, examples)
+  * ``abstract`` — ShapeDtypeStructs (dry-run lowering: never allocates)
+  * ``axes``     — logical-axis tuples (sharding spec derivation)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.logical import shard_hint
+
+__all__ = [
+    "ParamFactory",
+    "rms_norm",
+    "layer_norm",
+    "make_rope",
+    "apply_rope",
+    "pad_vocab",
+    "VOCAB_MULTIPLE",
+]
+
+VOCAB_MULTIPLE = 256
+
+
+def pad_vocab(vocab_size: int, multiple: int = VOCAB_MULTIPLE) -> int:
+    """Pad vocab so the embedding always shards over the model axis."""
+    return -(-vocab_size // multiple) * multiple
+
+
+class ParamFactory:
+    """Builds param pytrees; mode selects array/abstract/axes leaves."""
+
+    def __init__(self, key: Optional[jax.Array], dtype=jnp.bfloat16, mode="init"):
+        assert mode in ("init", "abstract", "axes")
+        self.key = key
+        self.dtype = dtype
+        self.mode = mode
+        self._counter = 0
+
+    def param(
+        self,
+        shape: Sequence[int],
+        logical: Sequence[Optional[str]],
+        scale: Optional[float] = None,
+        zero: bool = False,
+        dtype=None,
+    ):
+        shape = tuple(int(s) for s in shape)
+        assert len(shape) == len(logical), (shape, logical)
+        dtype = dtype or self.dtype
+        if self.mode == "axes":
+            return tuple(logical)
+        if self.mode == "abstract":
+            return jax.ShapeDtypeStruct(shape, dtype)
+        self._counter += 1
+        if zero:
+            return jnp.zeros(shape, dtype)
+        k = jax.random.fold_in(self.key, self._counter)
+        if scale is None:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+
+    def const(self, value: float, shape, logical, dtype=None):
+        shape = tuple(int(s) for s in shape)
+        dtype = dtype or self.dtype
+        if self.mode == "axes":
+            return tuple(logical)
+        if self.mode == "abstract":
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.full(shape, value, dtype)
+
+
+# ---------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------- rope
+def make_rope(positions: jax.Array, head_dim: int, theta: float = 10_000.0):
+    """cos/sin tables for rotary embedding; positions (..., S) int32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch & heads
+        c = cos[None, :, None, :]
+        s = sin[None, :, None, :]
+    else:  # (B, S, half)
+        c = cos[:, :, None, :]
+        s = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------- embeddings
+def embed_init(factory: ParamFactory, vocab: int, d_model: int):
+    return factory.param((vocab, d_model), ("vocab", "embed"), scale=0.02)
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    out = jnp.take(table, tokens, axis=0)
+    return shard_hint(out, ("batch", "seq", "embed"))
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Logits; head sharded over vocab."""
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    return shard_hint(logits, ("batch", "seq", "vocab"))

@@ -1,0 +1,169 @@
+"""Encoder-decoder backbone (seamless-m4t style, audio frontend stubbed).
+
+The modality frontend is a STUB per the brief: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, d_model); a learned adapter
+projects them into the encoder.  Decoder = self-attention (causal, cached)
++ cross-attention (static K/V, precomputed at prefill) + MLP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.logical import shard_hint
+from .attention import (
+    attn_decode,
+    attn_full,
+    cache_layout,
+    cross_attn_decode,
+    cross_attn_full,
+    init_attention,
+    init_cross_attention,
+    precompute_cross_kv,
+)
+from .common import ParamFactory, pad_vocab, rms_norm
+from .mlp import init_mlp, mlp_apply
+from .transformer import _scan_or_unroll, cross_entropy
+
+__all__ = [
+    "init_encdec",
+    "encdec_encode",
+    "encdec_forward",
+    "encdec_loss",
+    "make_encdec_cache",
+    "encdec_decode_step",
+]
+
+
+def init_encdec(cfg, f: ParamFactory) -> dict:
+    V = pad_vocab(cfg.vocab_size)
+    d = cfg.d_model
+    Le, Ld = cfg.n_enc_layers, cfg.n_layers
+    enc = {
+        "ln1": f.const(1.0, (Le, d), ("layers", "embed")),
+        "attn": init_attention(cfg, f, layers=Le),
+        "ln2": f.const(1.0, (Le, d), ("layers", "embed")),
+        "mlp": init_mlp(cfg, f, cfg.d_ff, layers=Le),
+    }
+    dec = {
+        "ln1": f.const(1.0, (Ld, d), ("layers", "embed")),
+        "self_attn": init_attention(cfg, f, layers=Ld),
+        "ln2": f.const(1.0, (Ld, d), ("layers", "embed")),
+        "cross_attn": init_cross_attention(cfg, f, layers=Ld),
+        "ln3": f.const(1.0, (Ld, d), ("layers", "embed")),
+        "mlp": init_mlp(cfg, f, cfg.d_ff, layers=Ld),
+    }
+    return {
+        "frontend_proj": f.param((d, d), ("embed", None)),
+        "embed": f.param((V, d), ("vocab", "embed"), scale=0.02),
+        "enc": enc,
+        "enc_norm": f.const(1.0, (d,), ("embed",)),
+        "dec": dec,
+        "final_norm": f.const(1.0, (d,), ("embed",)),
+        "unembed": f.param((V, d), ("vocab", "embed"), scale=0.02),
+    }
+
+
+def encdec_encode(cfg, params: dict, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_enc, d) stub embeddings -> encoder memory (B, S_enc, d)."""
+    x = jnp.einsum("bsd,de->bse", frames.astype(cfg.activation_dtype),
+                   params["frontend_proj"])
+    x = shard_hint(x, ("batch", "seq", "embed"))
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        x = x + attn_full(cfg, lp["attn"], h, positions, causal=False)
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + mlp_apply(cfg, lp["mlp"], h), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = _scan_or_unroll(cfg, fn, x, params["enc"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def encdec_forward(cfg, params: dict, frames: jax.Array, dec_tokens: jax.Array,
+                   return_hidden: bool = False):
+    """Teacher-forced logits (B, S_dec, V)."""
+    memory = encdec_encode(cfg, params, frames)
+    x = jnp.take(params["embed"], dec_tokens, axis=0).astype(cfg.activation_dtype)
+    x = shard_hint(x, ("batch", "seq", "embed"))
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        x = x + attn_full(cfg, lp["self_attn"], h, positions, causal=True)
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + cross_attn_full(cfg, lp["cross_attn"], h, memory)
+        h = rms_norm(x, lp["ln3"], cfg.norm_eps)
+        return x + mlp_apply(cfg, lp["mlp"], h), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = _scan_or_unroll(cfg, fn, x, params["dec"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x
+    logits = jnp.einsum("bsd,vd->bsv", x, params["unembed"])
+    return shard_hint(logits, ("batch", "seq", "vocab"))
+
+
+def encdec_loss(cfg, params, frames, dec_tokens, labels):
+    hidden = encdec_forward(cfg, params, frames, dec_tokens, return_hidden=True)
+    return cross_entropy(cfg, hidden, params["unembed"], labels)
+
+
+def make_encdec_cache(cfg, f: ParamFactory, batch: int, max_seq: int, enc_len: int):
+    L = cfg.n_layers
+    layout = cache_layout(cfg, max_seq)
+    kv = (L, batch, layout.seq, cfg.n_kv_heads, cfg.head_dim)
+    ckv = (L, batch, enc_len, cfg.n_kv_heads, cfg.head_dim)
+    lax_ = ("layers", "batch", "cache_seq", "cache_kv_heads", "head_dim")
+    return {
+        "k": f.param(kv, lax_, zero=True),
+        "v": f.param(kv, lax_, zero=True),
+        "cross_k": f.param(ckv, lax_, zero=True),
+        "cross_v": f.param(ckv, lax_, zero=True),
+        "pos": f.param((), (), zero=True, dtype=jnp.int32),
+    }
+
+
+def prefill_cross_kv(cfg, params: dict, frames: jax.Array):
+    """Encoder pass + per-layer cross K/V (the static part of the cache)."""
+    memory = encdec_encode(cfg, params, frames)
+
+    def body(_, lp):
+        k, v = precompute_cross_kv(cfg, lp["cross_attn"], memory)
+        return None, (k, v)
+
+    _, (ck, cv) = _scan_or_unroll(cfg, body, None, params["dec"])
+    return memory, ck, cv
+
+
+def encdec_decode_step(cfg, params: dict, token: jax.Array, cache: dict, max_seq: int):
+    """One decoder step against precomputed cross K/V."""
+    x = jnp.take(params["embed"], token, axis=0).astype(cfg.activation_dtype)
+    x = shard_hint(x, ("batch", "seq", "embed"))
+    pos = cache["pos"]
+    layout = cache_layout(cfg, max_seq)
+
+    def body(x, xs):
+        lp, kc, vc, ck, cv = xs
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, kc, vc = attn_decode(cfg, lp["self_attn"], h, kc, vc, pos, layout)
+        x = x + a
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + cross_attn_decode(cfg, lp["cross_attn"], h, ck, cv)
+        h = rms_norm(x, lp["ln3"], cfg.norm_eps)
+        return x + mlp_apply(cfg, lp["mlp"], h), (kc, vc)
+
+    x, (k, v) = _scan_or_unroll(
+        cfg, body, x,
+        (params["dec"], cache["k"], cache["v"], cache["cross_k"], cache["cross_v"]),
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["unembed"])
+    logits = shard_hint(logits, ("batch", "seq", "vocab"))
+    new_cache = dict(cache, k=k, v=v, pos=pos + 1)
+    return logits, new_cache

@@ -1,0 +1,156 @@
+"""Hybrid Mamba+Attention+MoE backbone (Jamba-style, 1:7 attn:mamba).
+
+Layers are grouped into *periods* of ``attn_period`` layers: one attention
+layer (at ``attn_offset``) and ``attn_period-1`` Mamba mixers; the MLP is a
+MoE on layers where ``global_idx % moe_every == moe_offset``.  The stack
+scans over periods (compile cost O(1) in depth); within a period the
+fixed layer pattern is unrolled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.logical import shard_hint
+from .attention import attn_decode, attn_full, cache_layout, init_attention
+from .common import ParamFactory, pad_vocab, rms_norm
+from .mlp import init_mlp, mlp_apply
+from .moe import init_moe, moe_apply_with_aux
+from .ssm import init_mamba, mamba_decode, mamba_full, mamba_state_shapes
+from .transformer import _scan_or_unroll, cross_entropy
+
+__all__ = [
+    "init_hybrid",
+    "hybrid_forward",
+    "hybrid_loss",
+    "make_hybrid_cache",
+    "hybrid_decode_step",
+]
+
+
+def _n_periods(cfg) -> int:
+    assert cfg.n_layers % cfg.attn_period == 0
+    return cfg.n_layers // cfg.attn_period
+
+
+def init_hybrid(cfg, f: ParamFactory) -> dict:
+    V = pad_vocab(cfg.vocab_size)
+    d = cfg.d_model
+    P = _n_periods(cfg)
+    period: dict[str, dict] = {}
+    for i in range(cfg.attn_period):
+        lp: dict = {"ln1": f.const(1.0, (P, d), ("layers", "embed"))}
+        if i == cfg.attn_offset:
+            lp["attn"] = init_attention(cfg, f, layers=P)
+        else:
+            lp["mixer"] = init_mamba(cfg, f, layers=P)
+        lp["ln2"] = f.const(1.0, (P, d), ("layers", "embed"))
+        if cfg.n_experts and (i % cfg.moe_every == cfg.moe_offset):
+            lp["moe"] = init_moe(cfg, f, layers=P)
+        else:
+            lp["mlp"] = init_mlp(cfg, f, cfg.d_ff, layers=P)
+        period[f"layer{i}"] = lp
+    return {
+        "embed": f.param((V, d), ("vocab", "embed"), scale=0.02),
+        "periods": period,
+        "final_norm": f.const(1.0, (d,), ("embed",)),
+        "unembed": f.param((V, d), ("vocab", "embed"), scale=0.02),
+    }
+
+
+def hybrid_forward(cfg, params: dict, tokens: jax.Array, return_hidden: bool = False):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype)
+    x = shard_hint(x, ("batch", "seq", "embed"))
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def period_body(carry, pp):
+        x, aux = carry
+        for i in range(cfg.attn_period):
+            lp = pp[f"layer{i}"]
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            if "attn" in lp:
+                x = x + attn_full(cfg, lp["attn"], h, positions, causal=True,
+                                  window=cfg.sliding_window)
+            else:
+                x = x + mamba_full(cfg, lp["mixer"], h)
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if "moe" in lp:
+                m, a = moe_apply_with_aux(cfg, lp["moe"], h)
+                aux = aux + a
+            else:
+                m = mlp_apply(cfg, lp["mlp"], h)
+            x = x + m
+        return (x, aux), None
+
+    fn = jax.checkpoint(period_body) if cfg.remat else period_body
+    (x, aux), _ = _scan_or_unroll(
+        cfg, fn, (x, jnp.zeros((), jnp.float32)), params["periods"]
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, aux
+    logits = jnp.einsum("bsd,vd->bsv", x, params["unembed"])
+    return shard_hint(logits, ("batch", "seq", "vocab")), aux
+
+
+def hybrid_loss(cfg, params, tokens, labels, aux_weight: float = 0.01):
+    hidden, aux = hybrid_forward(cfg, params, tokens, return_hidden=True)
+    nll = cross_entropy(cfg, hidden, params["unembed"], labels)
+    return nll + aux_weight * aux
+
+
+def make_hybrid_cache(cfg, f: ParamFactory, batch: int, max_seq: int) -> dict:
+    P = _n_periods(cfg)
+    n_mamba = cfg.attn_period - 1
+    layout = cache_layout(cfg, max_seq)
+    (cs, hs) = mamba_state_shapes(cfg, batch)
+    kv = (P, batch, layout.seq, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": f.param(kv, ("layers", "batch", "cache_seq", "cache_kv_heads", "head_dim"), zero=True),
+        "v": f.param(kv, ("layers", "batch", "cache_seq", "cache_kv_heads", "head_dim"), zero=True),
+        "conv": f.param((P, n_mamba, *cs), ("layers", None, "batch", "conv", "inner"), zero=True),
+        "h": f.param((P, n_mamba, *hs), ("layers", None, "batch", "inner", "state"),
+                     zero=True, dtype=jnp.float32),
+        "pos": f.param((), (), zero=True, dtype=jnp.int32),
+    }
+
+
+def hybrid_decode_step(cfg, params: dict, token: jax.Array, cache: dict, max_seq: int):
+    x = jnp.take(params["embed"], token, axis=0).astype(cfg.activation_dtype)
+    x = shard_hint(x, ("batch", "seq", "embed"))
+    pos = cache["pos"]
+    layout = cache_layout(cfg, max_seq)
+
+    def period_body(x, xs):
+        pp, kc, vc, conv, h = xs
+        mi = 0
+        new_conv, new_h = [], []
+        for i in range(cfg.attn_period):
+            lp = pp[f"layer{i}"]
+            hn = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            if "attn" in lp:
+                a, kc, vc = attn_decode(cfg, lp["attn"], hn, kc, vc, pos, layout)
+                x = x + a
+            else:
+                out, c2, h2 = mamba_decode(cfg, lp["mixer"], hn, conv[mi], h[mi])
+                new_conv.append(c2)
+                new_h.append(h2)
+                mi += 1
+                x = x + out
+            hn = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if "moe" in lp:
+                m, _ = moe_apply_with_aux(cfg, lp["moe"], hn)
+            else:
+                m = mlp_apply(cfg, lp["mlp"], hn)
+            x = x + m
+        return x, (kc, vc, jnp.stack(new_conv), jnp.stack(new_h))
+
+    x, (k, v, conv, h) = _scan_or_unroll(
+        cfg, period_body, x, (params["periods"], cache["k"], cache["v"],
+                              cache["conv"], cache["h"])
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["unembed"])
+    logits = shard_hint(logits, ("batch", "seq", "vocab"))
+    return logits, {"k": k, "v": v, "conv": conv, "h": h, "pos": pos + 1}

@@ -1,0 +1,146 @@
+"""Token-choice top-k Mixture-of-Experts with capacity-bounded dispatch.
+
+Dispatch uses the sort-free scatter formulation: per-token top-k expert ids
+-> position-in-expert via a cumulative count -> scatter into the (E*C, d)
+expert buffer -> grouped expert FFN -> gather-combine weighted by the
+(renormalized) router gates.  Tokens past an expert's capacity are dropped
+(standard token-choice semantics).
+
+This mirrors the paper's bucket/workload-queue structure exactly: experts
+are buckets, the router assigns work units, capacity is the workload-queue
+bound, and the dense-batched expert FFN is the shared sequential pass.  The
+hybrid gather-vs-dense execution lives in ``kernels/grouped_matmul``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.logical import shard_hint
+from .common import ParamFactory
+from .mlp import act_fn, is_gated
+
+__all__ = ["init_moe", "moe_apply", "moe_capacity"]
+
+
+def init_moe(cfg, f: ParamFactory, layers: int | None = None) -> dict:
+    d, E = cfg.d_model, cfg.n_experts
+    ff = cfg.moe_d_ff or cfg.d_ff
+    L = () if layers is None else (layers,)
+    lax_ = () if layers is None else ("layers",)
+    p = {"router": f.param(L + (d, E), lax_ + ("embed", "experts"), scale=0.02)}
+    if is_gated(cfg.activation):
+        p["wg"] = f.param(L + (E, d, ff), lax_ + ("experts", "embed", "expert_ff"))
+        p["wu"] = f.param(L + (E, d, ff), lax_ + ("experts", "embed", "expert_ff"))
+    else:
+        p["wu"] = f.param(L + (E, d, ff), lax_ + ("experts", "embed", "expert_ff"))
+    p["wd"] = f.param(L + (E, ff, d), lax_ + ("experts", "expert_ff", "embed"))
+    return p
+
+
+def moe_capacity(cfg, n_tokens: int) -> int:
+    """Static per-expert capacity C = ceil(k*T*cf/E), padded to 256.
+
+    The 256 padding (a) tile-aligns the grouped-matmul kernel and (b) keeps
+    C divisible by the 16-way data axis so the 'expert_cap' sharding rule
+    can shard the capacity dim (§Perf: a silent 8-padding made the rule a
+    no-op on mixtral)."""
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return -(-c // 256) * 256
+
+
+def moe_apply(cfg, p: dict, x: jax.Array) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d). Also returns aux losses via cfg hook-free
+    summation (load-balance loss is returned as second output by
+    ``moe_apply_with_aux``)."""
+    out, _ = moe_apply_with_aux(cfg, p, x)
+    return out
+
+
+def _dispatch_onehot(top_idx, E: int, C: int):
+    """Baseline dispatch: position-in-expert via one-hot cumsum.
+
+    O(T*k*E) intermediate — the classic Mesh-TF formulation.  Dominates
+    compiled flops for large E (moonshot: 64 experts); see §Perf."""
+    oh = jax.nn.one_hot(top_idx.reshape(-1), E, dtype=jnp.float32)  # (T*k, E)
+    pos = jnp.cumsum(oh, axis=0) - oh  # exclusive prefix count
+    pos_in_e = jnp.sum(pos * oh, axis=-1)  # (T*k,)
+    within = pos_in_e < C
+    expert_flat = top_idx.reshape(-1)
+    dest = (expert_flat * C + pos_in_e.astype(jnp.int32)).astype(jnp.int32)
+    dest = jnp.where(within, dest, E * C)  # overflow slot (dropped)
+    return dest, within
+
+
+def _dispatch_sort(top_idx, E: int, C: int):
+    """Optimized dispatch: O(T*k log) sort instead of the one-hot cumsum.
+
+    Sort (expert, token) pairs by expert; rank within expert = position -
+    first-position-of-expert (via searchsorted on the sorted keys)."""
+    Tk = top_idx.size
+    flat_e = top_idx.reshape(-1).astype(jnp.int32)
+    order = jnp.argsort(flat_e, stable=True)  # (T*k,)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=jnp.int32))
+    rank = jnp.arange(Tk, dtype=jnp.int32) - starts[sorted_e]
+    within_sorted = rank < C
+    dest_sorted = jnp.where(within_sorted, sorted_e * C + rank, E * C)
+    # Scatter back to (token, choice) order.
+    dest = jnp.zeros((Tk,), jnp.int32).at[order].set(dest_sorted)
+    within = jnp.zeros((Tk,), bool).at[order].set(within_sorted)
+    return dest, within
+
+
+def moe_apply_with_aux(cfg, p: dict, x: jax.Array):
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    C = moe_capacity(cfg, T)
+    act = act_fn(cfg.activation)
+
+    xf = x.reshape(T, d)
+    gates = jax.nn.softmax(
+        jnp.einsum("td,de->te", xf, p["router"], preferred_element_type=jnp.float32),
+        axis=-1,
+    )  # (T, E) f32
+    top_vals, top_idx = jax.lax.top_k(gates, k)  # (T, k)
+    top_vals = top_vals / jnp.sum(top_vals, axis=-1, keepdims=True)
+
+    # Load-balance aux loss (Switch-style): E * sum_e f_e * P_e.
+    me = jnp.mean(gates, axis=0)  # (E,)
+    one_hot_top1 = jax.nn.one_hot(top_idx[:, 0], E, dtype=jnp.float32)
+    fe = jnp.mean(one_hot_top1, axis=0)
+    aux_loss = E * jnp.sum(fe * me)
+
+    if getattr(cfg, "moe_dispatch", "onehot") == "sort":
+        dest, within = _dispatch_sort(top_idx, E, C)
+    else:
+        dest, within = _dispatch_onehot(top_idx, E, C)
+    e_idx = jnp.minimum(dest // C, E - 1).astype(jnp.int32)
+    # overflow -> rank C: out-of-bounds scatter indices are DROPPED under
+    # jit, which implements capacity dropping with no overflow row.
+    rank = jnp.where(within, dest - e_idx * C, C).astype(jnp.int32)
+
+    x_rep = jnp.repeat(xf, k, axis=0)  # (T*k, d)
+    buf = shard_hint(
+        jnp.zeros((E, C, d), dtype=x.dtype), ("experts", "expert_cap", "embed")
+    )
+    xe = buf.at[e_idx, rank].add(x_rep, mode="drop")
+    xe = shard_hint(xe, ("experts", "expert_cap", "embed"))
+
+    # Grouped expert FFN — a dense batched pass per expert bucket.
+    up = jnp.einsum("ecd,edf->ecf", xe, p["wu"])
+    up = shard_hint(up, ("experts", "expert_cap", "expert_ff"))
+    if is_gated(cfg.activation):
+        gate = jnp.einsum("ecd,edf->ecf", xe, p["wg"])
+        h = act(gate) * up
+    else:
+        h = act(up)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wd"])
+    ye = shard_hint(ye, ("experts", "expert_cap", "embed"))
+
+    y_rep = ye[e_idx, jnp.minimum(rank, C - 1)]  # (T*k, d)
+    w = (top_vals.reshape(-1) * within).astype(x.dtype)[:, None]  # overflow -> 0
+    y = (y_rep * w).reshape(T, k, d).sum(axis=1)
+    y = shard_hint(y.reshape(B, S, d), ("batch", "seq", "embed"))
+    return y, aux_loss

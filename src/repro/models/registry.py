@@ -1,0 +1,221 @@
+"""Unified model API over all families: init / loss / forward / decode.
+
+Every architecture exposes the same four callables regardless of family,
+so the launcher, dry-run, trainer and serving engine are arch-agnostic:
+
+  init_params(cfg, key|mode)        -> params pytree (arrays/abstract/axes)
+  loss_fn(cfg)(params, batch)       -> scalar loss        [train shapes]
+  forward_fn(cfg)(params, batch)    -> logits             [prefill shapes]
+  decode_fn(cfg, max_seq)(params, token, cache) -> (logits, cache) [decode]
+  make_cache(cfg, batch, max_seq, mode) -> cache pytree
+  input_specs(cfg, shape)           -> ShapeDtypeStruct batch for lowering
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from .common import ParamFactory
+from . import encdec as _encdec
+from . import hybrid as _hybrid
+from . import transformer as _lm
+
+__all__ = [
+    "init_params",
+    "param_axes",
+    "loss_fn",
+    "forward_fn",
+    "decode_fn",
+    "make_cache",
+    "cache_axes",
+    "input_specs",
+    "batch_axes",
+]
+
+
+def _factory(cfg, key=None, mode="init"):
+    dtype = cfg.activation_dtype
+    return ParamFactory(key, dtype=dtype, mode=mode)
+
+
+def init_params(cfg: ModelConfig, key: Optional[jax.Array] = None, mode="init"):
+    f = _factory(cfg, key, mode)
+    if cfg.family == "encdec":
+        return _encdec.init_encdec(cfg, f)
+    if cfg.family == "hybrid":
+        return _hybrid.init_hybrid(cfg, f)
+    return _lm.init_lm(cfg, f)
+
+
+def param_axes(cfg: ModelConfig):
+    return init_params(cfg, mode="axes")
+
+
+def abstract_params(cfg: ModelConfig):
+    return init_params(cfg, mode="abstract")
+
+
+# ------------------------------------------------------------------ train
+def loss_fn(cfg: ModelConfig):
+    if cfg.family == "encdec":
+
+        def loss(params, batch):
+            return _encdec.encdec_loss(
+                cfg, params, batch["frames"], batch["dec_tokens"], batch["labels"]
+            )
+
+        return loss
+    if cfg.family == "hybrid":
+
+        def loss(params, batch):
+            return _hybrid.hybrid_loss(cfg, params, batch["tokens"], batch["labels"])
+
+        return loss
+    if cfg.family == "vlm":
+
+        def loss(params, batch):
+            return _lm.lm_loss(
+                cfg, params, batch["tokens"], batch["labels"],
+                prefix_embeds=batch["patches"],
+            )
+
+        return loss
+
+    def loss(params, batch):
+        return _lm.lm_loss(cfg, params, batch["tokens"], batch["labels"])
+
+    return loss
+
+
+# ------------------------------------------------------------------ prefill
+def forward_fn(cfg: ModelConfig):
+    if cfg.family == "encdec":
+
+        def fwd(params, batch):
+            return _encdec.encdec_forward(
+                cfg, params, batch["frames"], batch["dec_tokens"]
+            )
+
+        return fwd
+    if cfg.family == "hybrid":
+
+        def fwd(params, batch):
+            return _hybrid.hybrid_forward(cfg, params, batch["tokens"])[0]
+
+        return fwd
+    if cfg.family == "vlm":
+
+        def fwd(params, batch):
+            return _lm.lm_forward(
+                cfg, params, batch["tokens"], prefix_embeds=batch["patches"]
+            )[0]
+
+        return fwd
+
+    def fwd(params, batch):
+        return _lm.lm_forward(cfg, params, batch["tokens"])[0]
+
+    return fwd
+
+
+# ------------------------------------------------------------------ decode
+def decode_fn(cfg: ModelConfig, max_seq: int):
+    if cfg.family == "encdec":
+
+        def step(params, token, cache):
+            return _encdec.encdec_decode_step(cfg, params, token, cache, max_seq)
+
+        return step
+    if cfg.family == "hybrid":
+
+        def step(params, token, cache):
+            return _hybrid.hybrid_decode_step(cfg, params, token, cache, max_seq)
+
+        return step
+
+    def step(params, token, cache):
+        return _lm.lm_decode_step(cfg, params, token, cache, max_seq)
+
+    return step
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_seq: int, mode="init",
+               enc_len: Optional[int] = None):
+    f = _factory(cfg, jax.random.PRNGKey(0) if mode == "init" else None, mode)
+    if cfg.family == "encdec":
+        return _encdec.make_encdec_cache(cfg, f, batch, max_seq, enc_len or max_seq)
+    if cfg.family == "hybrid":
+        return _hybrid.make_hybrid_cache(cfg, f, batch, max_seq)
+    return _lm.make_decode_cache(cfg, f, batch, max_seq)
+
+
+def cache_axes(cfg: ModelConfig, batch: int, max_seq: int, enc_len=None):
+    return make_cache(cfg, batch, max_seq, mode="axes", enc_len=enc_len)
+
+
+# ------------------------------------------------------------------ input specs
+def _tok(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for one step's data inputs (no allocation).
+
+    train:   token/label batch            -> loss_fn
+    prefill: token batch (no labels)      -> forward_fn
+    decode:  one new token (cache separate; see ``make_cache(mode='abstract')``)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    act = cfg.activation_dtype
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            return {
+                "frames": _tok((B, S, d), act),
+                "dec_tokens": _tok((B, S)),
+                "labels": _tok((B, S)),
+            }
+        if cfg.family == "vlm":
+            P = cfg.n_prefix
+            return {
+                "patches": _tok((B, P, d), act),
+                "tokens": _tok((B, S - P)),
+                "labels": _tok((B, S - P)),
+            }
+        return {"tokens": _tok((B, S)), "labels": _tok((B, S))}
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {"frames": _tok((B, S, d), act), "dec_tokens": _tok((B, S))}
+        if cfg.family == "vlm":
+            P = cfg.n_prefix
+            return {"patches": _tok((B, P, d), act), "tokens": _tok((B, S - P))}
+        return {"tokens": _tok((B, S))}
+    if shape.kind == "decode":
+        return {"token": _tok((B, 1))}
+    raise ValueError(shape.kind)
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Logical axes for each input (drives in_shardings)."""
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            ax = {
+                "frames": ("batch", "seq", "embed"),
+                "dec_tokens": ("batch", "seq"),
+            }
+            if shape.kind == "train":
+                ax["labels"] = ("batch", "seq")
+            return ax
+        if cfg.family == "vlm":
+            ax = {"patches": ("batch", "seq", "embed"), "tokens": ("batch", "seq")}
+            if shape.kind == "train":
+                ax["labels"] = ("batch", "seq")
+            return ax
+        ax = {"tokens": ("batch", "seq")}
+        if shape.kind == "train":
+            ax["labels"] = ("batch", "seq")
+        return ax
+    return {"token": ("batch", "seq")}

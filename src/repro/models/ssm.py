@@ -1,0 +1,123 @@
+"""Mamba-1 selective state-space block (falcon-mamba / jamba mixer).
+
+Full-sequence path runs the selective scan with ``jax.lax.scan`` over time
+(O(1) compile in sequence length); decode keeps O(1) state per layer:
+a (conv-1)-sample convolution tail and the (d_inner, N) SSM state — this is
+why SSM archs run the ``long_500k`` shape that full attention cannot.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.logical import shard_hint
+from .common import ParamFactory
+
+__all__ = ["init_mamba", "mamba_full", "mamba_decode", "mamba_state_shapes"]
+
+
+def init_mamba(cfg, f: ParamFactory, layers: int | None = None) -> dict:
+    d, di, ns, dr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank_actual
+    cw = cfg.ssm_conv
+    L = () if layers is None else (layers,)
+    lax_ = () if layers is None else ("layers",)
+    return {
+        "in_proj": f.param(L + (d, 2 * di), lax_ + ("embed", "inner")),
+        "conv_w": f.param(L + (cw, di), lax_ + ("conv", "inner"), scale=0.5),
+        "conv_b": f.param(L + (di,), lax_ + ("inner",), zero=True),
+        "x_proj": f.param(L + (di, dr + 2 * ns), lax_ + ("inner", None)),
+        "dt_proj": f.param(L + (dr, di), lax_ + ("dt", "inner")),
+        "dt_bias": f.const(0.1, L + (di,), lax_ + ("inner",), dtype=jnp.float32),
+        "A_log": f.const(0.5, L + (di, ns), lax_ + ("inner", "state"), dtype=jnp.float32),
+        "D": f.const(1.0, L + (di,), lax_ + ("inner",), dtype=jnp.float32),
+        "out_proj": f.param(L + (di, d), lax_ + ("inner", "embed")),
+    }
+
+
+def _conv_full(p, xs):
+    """Causal depthwise conv over time. xs: (B, S, di)."""
+    cw = p["conv_w"].shape[0]
+    pad = jnp.pad(xs, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xs)
+    for i in range(cw):  # tiny static loop (cw=4)
+        out = out + pad[:, i : i + xs.shape[1], :] * p["conv_w"][i]
+    return out + p["conv_b"]
+
+
+def _ssm_params(cfg, p, xc):
+    """Project to (delta, B, C) and discretize. xc: (B, S, di)."""
+    dr, ns = cfg.dt_rank_actual, cfg.ssm_state
+    dbc = jnp.einsum("bsi,ir->bsr", xc, p["x_proj"])
+    dt, B_, C_ = jnp.split(dbc, [dr, dr + ns], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"]
+    )  # (B, S, di) f32
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di, ns)
+    return delta, B_.astype(jnp.float32), C_.astype(jnp.float32), A
+
+
+def mamba_full(cfg, p: dict, x: jax.Array) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xz = shard_hint(xz, ("batch", "seq", "inner"))
+    xp, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_conv_full(p, xp))
+
+    delta, B_, C_, A = _ssm_params(cfg, p, xc)
+    dA = jnp.exp(delta[..., None] * A)  # (B, S, di, ns)
+    dBx = delta[..., None] * B_[:, :, None, :] * xc.astype(jnp.float32)[..., None]
+
+    def step(h, t):
+        dA_t, dBx_t, C_t = t
+        h = h * dA_t + dBx_t  # (B, di, ns)
+        y = jnp.einsum("bin,bn->bi", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    _, ys = jax.lax.scan(
+        step,
+        h0,
+        (
+            jnp.moveaxis(dA, 1, 0),
+            jnp.moveaxis(dBx, 1, 0),
+            jnp.moveaxis(C_, 1, 0),
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1)  # (B, S, di)
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return shard_hint(out, ("batch", "seq", "embed"))
+
+
+def mamba_state_shapes(cfg, batch: int):
+    """Decode state: conv tail (B, conv-1, di) + SSM state (B, di, ns)."""
+    return (
+        (batch, cfg.ssm_conv - 1, cfg.d_inner),
+        (batch, cfg.d_inner, cfg.ssm_state),
+    )
+
+
+def mamba_decode(cfg, p: dict, x: jax.Array, conv_state: jax.Array, h: jax.Array):
+    """One token. x: (B, 1, d); returns (out, new_conv_state, new_h)."""
+    B = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])[:, 0]  # (B, 2di)
+    xp, z = jnp.split(xz, 2, axis=-1)
+
+    # conv ring: state holds the last (cw-1) inputs.
+    cw = cfg.ssm_conv
+    hist = jnp.concatenate([conv_state, xp[:, None, :]], axis=1)  # (B, cw, di)
+    xc = jnp.einsum("bci,ci->bi", hist, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    new_conv = hist[:, 1:, :]
+
+    delta, B_, C_, A = _ssm_params(cfg, p, xc[:, None, :])
+    delta, B_, C_ = delta[:, 0], B_[:, 0], C_[:, 0]
+    dA = jnp.exp(delta[..., None] * A)  # (B, di, ns)
+    h = h * dA + delta[..., None] * B_[:, None, :] * xc.astype(jnp.float32)[..., None]
+    y = jnp.einsum("bin,bn->bi", h, C_) + xc.astype(jnp.float32) * p["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"])[:, None, :]
+    return shard_hint(out, ("batch", "seq", "embed")), new_conv, h

@@ -1,0 +1,264 @@
+"""Decoder-only LM backbone: dense / MoE / VLM-prefix / SSM families.
+
+One scanned, remat'd layer stack (compile cost O(1) in depth).  Forward
+(train/prefill), prefill-with-cache, and single-token decode paths share
+the same parameter structure.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.logical import shard_hint
+from .attention import attn_decode, attn_full, cache_layout, init_attention
+from .common import ParamFactory, pad_vocab, rms_norm
+from .mlp import init_mlp, mlp_apply
+from .moe import init_moe, moe_apply_with_aux
+from .ssm import init_mamba, mamba_decode, mamba_full, mamba_state_shapes
+
+__all__ = [
+    "init_lm",
+    "lm_forward",
+    "lm_loss",
+    "make_decode_cache",
+    "lm_decode_step",
+]
+
+
+# ------------------------------------------------------------------ init
+def _init_layer_stack(cfg, f: ParamFactory) -> dict:
+    L = cfg.n_layers
+    d = cfg.d_model
+    p = {"ln1": f.const(1.0, (L, d), ("layers", "embed"))}
+    if cfg.family == "ssm":
+        p["mixer"] = init_mamba(cfg, f, layers=L)
+        return p
+    p["attn"] = init_attention(cfg, f, layers=L)
+    p["ln2"] = f.const(1.0, (L, d), ("layers", "embed"))
+    if cfg.n_experts and cfg.moe_every == 1:
+        p["moe"] = init_moe(cfg, f, layers=L)
+    else:
+        p["mlp"] = init_mlp(cfg, f, cfg.d_ff, layers=L)
+    return p
+
+
+def init_lm(cfg, f: ParamFactory) -> dict:
+    V = pad_vocab(cfg.vocab_size)
+    d = cfg.d_model
+    params = {
+        "embed": f.param((V, d), ("vocab", "embed"), scale=0.02),
+        "final_norm": f.const(1.0, (d,), ("embed",)),
+        "layers": _init_layer_stack(cfg, f),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = f.param((V, d), ("vocab", "embed"), scale=0.02)
+    if cfg.family == "vlm":
+        # Stub frontend adapter: precomputed patch embeddings -> d_model.
+        params["vision_proj"] = f.param((d, d), ("embed", None))
+    return params
+
+
+# ------------------------------------------------------------------ blocks
+def _block_full(cfg, lp: dict, x: jax.Array, positions: jax.Array, prefix_len: int):
+    """One layer, full-sequence. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.family == "ssm":
+        return x + mamba_full(cfg, lp["mixer"], h), aux
+    a = attn_full(
+        cfg,
+        lp["attn"],
+        h,
+        positions,
+        causal=True,
+        window=cfg.sliding_window,
+        prefix_len=prefix_len,
+    )
+    x = x + a
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        m, aux = moe_apply_with_aux(cfg, lp["moe"], h)
+    else:
+        m = mlp_apply(cfg, lp["mlp"], h)
+    return x + m, aux
+
+
+# ------------------------------------------------------------------ forward
+def _embed_inputs(cfg, params, tokens, prefix_embeds):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype)
+    if cfg.family == "vlm":
+        assert prefix_embeds is not None
+        pe = jnp.einsum("bpd,de->bpe", prefix_embeds.astype(cfg.activation_dtype),
+                        params["vision_proj"])
+        x = jnp.concatenate([pe, x], axis=1)
+    return shard_hint(x, ("batch", "seq", "embed"))
+
+
+def lm_forward(
+    cfg,
+    params: dict,
+    tokens: jax.Array,  # (B, S_text)
+    prefix_embeds: Optional[jax.Array] = None,  # (B, P, d) for VLM
+    return_hidden: bool = False,
+) -> jax.Array:
+    """Logits over the padded vocab: (B, S_total, V)."""
+    x = _embed_inputs(cfg, params, tokens, prefix_embeds)
+    B, S, d = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    prefix_len = prefix_embeds.shape[1] if prefix_embeds is not None else 0
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = _block_full(cfg, lp, x, positions, prefix_len)
+        return (x, aux + a), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    else:  # unrolled: used by dry-run cost calibration (exact per-layer flops)
+        carry = (x, jnp.zeros((), jnp.float32))
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda t: t[i], params["layers"])
+            carry, _ = fn(carry, lp)
+        x, aux = carry
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, aux
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    logits = shard_hint(logits, ("batch", "seq", "vocab"))
+    return logits, aux
+
+
+def cross_entropy(cfg, hidden: jax.Array, table: jax.Array, labels: jax.Array):
+    """CE over the padded vocab; optionally token-chunked (cfg.loss_chunk).
+
+    The chunked path never materializes the full (B, S, V) f32 logits —
+    each unrolled chunk computes (B, c, V), reduces to per-token nll, and
+    is dead after use.  This is the §Perf 'memory-term' optimization for
+    vocab-heavy archs; the full path is the paper-faithful baseline."""
+    B, S, d = hidden.shape
+    V = table.shape[0]
+    vmask = jnp.arange(V) < cfg.vocab_size
+
+    def chunk_nll(xc, lc):
+        logits = jnp.einsum("bsd,vd->bsv", xc, table)
+        logits = shard_hint(logits, ("batch", "seq", "vocab"))
+        logits = jnp.where(
+            vmask[None, None, :], logits.astype(jnp.float32), -1e30
+        )
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - ll)
+
+    c = cfg.loss_chunk
+    if not c or c >= S:
+        return chunk_nll(hidden, labels) / (B * S)
+    total = jnp.zeros((), jnp.float32)
+    # Unrolled (not scanned) so HLO cost analysis sees every chunk.
+    for i in range(0, S, c):
+        total = total + chunk_nll(hidden[:, i : i + c], labels[:, i : i + c])
+    return total / (B * S)
+
+
+def lm_loss(
+    cfg,
+    params: dict,
+    tokens: jax.Array,
+    labels: jax.Array,
+    prefix_embeds: Optional[jax.Array] = None,
+    aux_weight: float = 0.01,
+) -> jax.Array:
+    hidden, aux = lm_forward(cfg, params, tokens, prefix_embeds, return_hidden=True)
+    if cfg.family == "vlm":  # loss only on the text positions
+        P = prefix_embeds.shape[1]
+        hidden = hidden[:, P:, :]
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    nll = cross_entropy(cfg, hidden, table, labels)
+    return nll + aux_weight * aux
+
+
+# ------------------------------------------------------------------ decode
+def _scan_or_unroll(cfg, body, carry, xs):
+    """lax.scan over stacked layers, or an unrolled python loop that stacks
+    the per-layer outputs (dry-run cost calibration path)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree_util.tree_map(lambda t: t[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    stacked = jax.tree_util.tree_map(lambda *ts: jnp.stack(ts), *ys)
+    return carry, stacked
+
+
+def make_decode_cache(cfg, f: ParamFactory, batch: int, max_seq: int) -> dict:
+    """Pre-allocated decode cache pytree (zeros / abstract / axes by mode)."""
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        (cs, hs) = mamba_state_shapes(cfg, batch)
+        return {
+            "conv": f.param((L, *cs), ("layers", "batch", "conv", "inner"), zero=True),
+            "h": f.param(
+                (L, *hs), ("layers", "batch", "inner", "state"),
+                zero=True, dtype=jnp.float32,
+            ),
+            "pos": f.param((), (), zero=True, dtype=jnp.int32),
+        }
+    layout = cache_layout(cfg, max_seq)
+    kv = (L, batch, layout.seq, cfg.n_kv_heads, cfg.head_dim)
+    lax_ = ("layers", "batch", "cache_seq", "cache_kv_heads", "head_dim")
+    return {
+        "k": f.param(kv, lax_, zero=True),
+        "v": f.param(kv, lax_, zero=True),
+        "pos": f.param((), (), zero=True, dtype=jnp.int32),
+    }
+
+
+def lm_decode_step(cfg, params: dict, token: jax.Array, cache: dict, max_seq: int):
+    """One decode step. token: (B, 1) int32. Returns (logits (B,1,V), cache)."""
+    x = jnp.take(params["embed"], token, axis=0).astype(cfg.activation_dtype)
+    x = shard_hint(x, ("batch", "seq", "embed"))
+    pos = cache["pos"]
+
+    if cfg.family == "ssm":
+
+        def body(x, xs):
+            lp, conv, h = xs
+            hn = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            out, conv, h = mamba_decode(cfg, lp["mixer"], hn, conv, h)
+            return x + out, (conv, h)
+
+        x, (conv, h) = _scan_or_unroll(
+            cfg, body, x, (params["layers"], cache["conv"], cache["h"])
+        )
+        new_cache = {"conv": conv, "h": h, "pos": pos + 1}
+    else:
+        layout = cache_layout(cfg, max_seq)
+
+        def body(x, xs):
+            lp, kc, vc = xs
+            hn = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            a, kc, vc = attn_decode(cfg, lp["attn"], hn, kc, vc, pos, layout)
+            x = x + a
+            hn = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if "moe" in lp:
+                m, _ = moe_apply_with_aux(cfg, lp["moe"], hn)
+            else:
+                m = mlp_apply(cfg, lp["mlp"], hn)
+            return x + m, (kc, vc)
+
+        x, (k, v) = _scan_or_unroll(
+            cfg, body, x, (params["layers"], cache["k"], cache["v"])
+        )
+        new_cache = {"k": k, "v": v, "pos": pos + 1}
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    logits = shard_hint(logits, ("batch", "seq", "vocab"))
+    return logits, new_cache

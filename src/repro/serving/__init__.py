@@ -1,0 +1,5 @@
+from .engine import AdapterSpec, LifeRaftEngine, Request, ServeConfig
+from .kvcache import PagePool, SequenceAllocation
+
+__all__ = ["AdapterSpec", "LifeRaftEngine", "Request", "ServeConfig",
+           "PagePool", "SequenceAllocation"]

@@ -1,0 +1,14 @@
+from .logical import (
+    DEFAULT_RULES,
+    DECODE_RULES,
+    ShardingRules,
+    activate,
+    current_rules,
+    named_sharding,
+    shard_hint,
+)
+
+__all__ = [
+    "DEFAULT_RULES", "DECODE_RULES", "ShardingRules", "activate",
+    "current_rules", "named_sharding", "shard_hint",
+]

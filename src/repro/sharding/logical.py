@@ -1,0 +1,147 @@
+"""Logical-axis sharding rules with divisibility-aware fallback.
+
+Model code annotates tensors with *logical* axis names ("batch", "heads",
+"ff", ...).  A ``ShardingRules`` table maps logical names to mesh axes; a
+rule is silently dropped for a given tensor when the dimension is not
+divisible by the mesh-axis size (so every (arch x shape x mesh) cell
+compiles — e.g. 8 KV heads on a 16-way model axis fall back to replicated
+KV + sequence-sharded cache).
+
+Models call ``shard_hint(x, names)``; outside an active mesh context this
+is a no-op, so smoke tests on 1 CPU device never touch device state.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ShardingRules",
+    "DEFAULT_RULES",
+    "DECODE_RULES",
+    "activate",
+    "current_rules",
+    "shard_hint",
+    "logical_to_spec",
+    "named_sharding",
+]
+
+# Logical name -> tuple of mesh axis names (tried in order; non-dividing
+# axes are dropped per-tensor).  None = always replicated.
+DEFAULT_RULES: dict[str, Optional[tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "ff": ("model",),
+    "ff_in": ("model",),  # row-parallel input dim of the down projection
+    "vocab": ("model",),
+    "experts": ("model",),
+    # When n_experts doesn't divide the model axis (mixtral: 8 < 16) the
+    # experts dim falls back to replicated and the per-expert FF dim picks
+    # up the model axis instead (tensor-parallel experts) — the used-axis
+    # set in spec_for prevents double assignment otherwise.
+    "expert_ff": ("model",),
+    "expert_cap": None,  # hillclimb: ("data",) shards the capacity dim
+    "layers": None,
+    "state": None,
+    "conv": None,
+    "dt": None,
+    "inner": ("model",),  # mamba d_inner
+    "kv_seq": None,  # training: KV seq replicated
+    "opt": ("data",),  # ZeRO-1: optimizer-state extra sharding axis
+    "cache_seq": None,
+    "cache_kv_heads": ("model",),
+}
+
+# Decode-time overrides: when KV heads cannot take the model axis (kv < 16)
+# the KV *sequence* takes it instead (sequence-parallel decode attention).
+DECODE_RULES = dict(
+    DEFAULT_RULES,
+    cache_seq=("model",),
+    cache_kv_heads=None,
+)
+
+
+class ShardingRules:
+    def __init__(self, mesh: Mesh, rules: Optional[dict] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES if rules is None else rules)
+
+    def axis_size(self, names: tuple[str, ...]) -> int:
+        size = 1
+        for n in names:
+            size *= self.mesh.shape[n]
+        return size
+
+    def spec_for(self, logical: Sequence[Optional[str]], shape: Sequence[int]) -> P:
+        """PartitionSpec for a tensor with given logical axes and shape."""
+        parts = []
+        used: set[str] = set()
+        for name, dim in zip(logical, shape):
+            entry = self.rules.get(name) if name else None
+            if entry is None:
+                parts.append(None)
+                continue
+            axes = tuple(a for a in entry if a in self.mesh.shape and a not in used)
+            if axes and dim % self.axis_size(axes) == 0:
+                parts.append(axes if len(axes) > 1 else axes[0])
+                used.update(axes)
+            else:
+                # Divisibility fallback: try a prefix of the axes tuple.
+                ok = None
+                for k in range(len(axes) - 1, 0, -1):
+                    sub = axes[:k]
+                    if dim % self.axis_size(sub) == 0:
+                        ok = sub
+                        break
+                if ok:
+                    parts.append(ok if len(ok) > 1 else ok[0])
+                    used.update(ok)
+                else:
+                    parts.append(None)
+        return P(*parts)
+
+    def sharding_for(self, logical, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(logical, shape))
+
+
+_STATE = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def activate(rules: Optional[ShardingRules]):
+    """Activate sharding rules for model tracing (launch code only)."""
+    prev = current_rules()
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def shard_hint(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Annotate an activation with logical axes; no-op without active rules."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.spec_for(logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def logical_to_spec(rules: ShardingRules, logical, shape) -> P:
+    return rules.spec_for(logical, shape)
+
+
+def named_sharding(rules: ShardingRules, logical, shape) -> NamedSharding:
+    return rules.sharding_for(logical, shape)

@@ -1,0 +1,12 @@
+from .optimizer import Optimizer, cosine_schedule, global_norm, make_optimizer
+from .train_step import (
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    tree_shardings,
+)
+
+__all__ = [
+    "Optimizer", "cosine_schedule", "global_norm", "make_optimizer",
+    "make_prefill_step", "make_serve_step", "make_train_step", "tree_shardings",
+]

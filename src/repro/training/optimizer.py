@@ -1,0 +1,247 @@
+"""Optimizers built from scratch (no optax): AdamW, 8-bit AdamW, Adafactor.
+
+8-bit AdamW stores both moments block-quantized (int8 + per-block f32
+scale, block=256), cutting optimizer state from 8 to ~2.03 bytes/param —
+the difference between nemotron-4-340b fitting a 16 GB v5e chip or not
+(DESIGN.md §5).  Quantization error is bounded per-block and re-absorbed
+every step because moments are re-quantized from the f32 update.
+
+API:  opt = make_optimizer(cfg_like)
+      state  = opt.init(params)                    (works under eval_shape)
+      params, state = opt.update(grads, state, params)
+      axes   = opt.state_axes(param_axes)          (for sharding specs)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "make_optimizer", "cosine_schedule", "global_norm"]
+
+_QBLOCK = 256
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda x: x * scale, tree), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+# ---------------------------------------------------------------- quantization
+def _quantize(x: jax.Array):
+    """f32 -> (int8 blocks, f32 scales). Shape (n_blocks, _QBLOCK)."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % _QBLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+# ---------------------------------------------------------------- optimizer API
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+    state_axes: Callable[[Any], Any]
+
+
+def make_optimizer(
+    name: str = "adamw",
+    lr: float | Callable = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    if name == "adamw":
+        return _adamw(lr_fn, b1, b2, eps, weight_decay, clip_norm, bits8=False)
+    if name == "adamw8bit":
+        return _adamw(lr_fn, b1, b2, eps, weight_decay, clip_norm, bits8=True)
+    if name == "adafactor":
+        return _adafactor(lr_fn, weight_decay, clip_norm)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+# ---------------------------------------------------------------- AdamW (+8bit)
+def _adamw(lr_fn, b1, b2, eps, wd, clip_norm, bits8: bool) -> Optimizer:
+    def init(params):
+        def per_leaf(p):
+            if bits8:
+                nb = -(-_size(p.shape) // _QBLOCK)
+                return {
+                    "m_q": jnp.zeros((nb, _QBLOCK), jnp.int8),
+                    "m_s": jnp.zeros((nb, 1), jnp.float32),
+                    "v_q": jnp.zeros((nb, _QBLOCK), jnp.int8),
+                    "v_s": jnp.zeros((nb, 1), jnp.float32),
+                }
+            return {
+                "m": jnp.zeros(p.shape, jnp.float32),
+                "v": jnp.zeros(p.shape, jnp.float32),
+            }
+
+        return {
+            "mu": jax.tree_util.tree_map(per_leaf, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def per_leaf(p, g, s):
+            g = g.astype(jnp.float32)
+            if bits8:
+                m = _dequantize(s["m_q"], s["m_s"], p.shape)
+                v = _dequantize(s["v_q"], s["v_s"], p.shape)
+            else:
+                m, v = s["m"], s["v"]
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            upd = upd + wd * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+            if bits8:
+                mq, ms = _quantize(m)
+                vq, vs = _quantize(v)
+                return new_p, {"m_q": mq, "m_s": ms, "v_q": vq, "v_s": vs}
+            return new_p, {"m": m, "v": v}
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["mu"])
+        out = [per_leaf(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_mu = tdef.unflatten([o[1] for o in out])
+        return new_params, {"mu": new_mu, "step": step}, {"grad_norm": gnorm, "lr": lr}
+
+    def state_axes(param_axes):
+        def per_leaf(ax):
+            if bits8:
+                return {
+                    "m_q": ("opt", None),
+                    "m_s": ("opt", None),
+                    "v_q": ("opt", None),
+                    "v_s": ("opt", None),
+                }
+            return {"m": ax, "v": ax}
+
+        return {
+            "mu": jax.tree_util.tree_map(
+                per_leaf, param_axes, is_leaf=lambda x: isinstance(x, tuple)
+            ),
+            "step": (),
+        }
+
+    return Optimizer("adamw8bit" if bits8 else "adamw", init, update, state_axes)
+
+
+# ---------------------------------------------------------------- Adafactor
+def _adafactor(lr_fn, wd, clip_norm) -> Optimizer:
+    eps = 1e-30
+
+    def init(params):
+        def per_leaf(p):
+            if len(p.shape) >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "mu": jax.tree_util.tree_map(per_leaf, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(step)
+        decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+        def per_leaf(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if len(p.shape) >= 2:
+                vr = decay * s["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * s["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                mean_r = jnp.mean(vr, axis=-1, keepdims=True)
+                pre = (vr / jnp.maximum(mean_r, eps))[..., None] * vc[..., None, :]
+                upd = g / jnp.sqrt(jnp.maximum(pre, eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = decay * s["v"] + (1 - decay) * g2
+                upd = g / jnp.sqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            upd = upd + wd * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), new_s
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["mu"])
+        out = [per_leaf(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        return (
+            tdef.unflatten([o[0] for o in out]),
+            {"mu": tdef.unflatten([o[1] for o in out]), "step": step},
+            {"grad_norm": gnorm, "lr": lr},
+        )
+
+    def state_axes(param_axes):
+        def per_leaf(ax):
+            if len(ax) >= 2:
+                return {"vr": tuple(ax[:-1]), "vc": tuple(ax[:-2]) + (ax[-1],)}
+            return {"v": tuple(ax)}
+
+        return {
+            "mu": jax.tree_util.tree_map(
+                per_leaf, param_axes, is_leaf=lambda x: isinstance(x, tuple)
+            ),
+            "step": (),
+        }
+
+    return Optimizer("adafactor", init, update, state_axes)
+
+
+def _size(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= s
+    return n

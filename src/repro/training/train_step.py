@@ -1,0 +1,105 @@
+"""Train step assembly: loss -> grads (with microbatch accumulation) ->
+optimizer update, plus the sharding-spec derivation used by the launcher
+and the multi-pod dry-run."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import registry as R
+from ..sharding.logical import ShardingRules
+from .optimizer import Optimizer
+
+__all__ = ["make_train_step", "make_serve_step", "make_prefill_step", "tree_shardings"]
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple)
+
+
+def tree_shardings(rules: ShardingRules, axes_tree, abstract_tree, zero1: bool = False):
+    """NamedSharding pytree from (logical axes, abstract shapes) twins.
+
+    ``zero1``: additionally shard dim-0 of any leaf whose dim-0 is
+    unsharded over the 'data' axis when divisible (optimizer states)."""
+
+    def one(ax, ab):
+        shape = ab.shape
+        spec = rules.spec_for(ax, shape)
+        if zero1 and shape:
+            parts = list(spec) + [None] * (len(shape) - len(spec))
+            if parts[0] is None and "data" in rules.mesh.shape:
+                if shape[0] % rules.mesh.shape["data"] == 0:
+                    used = {a for p in parts if p for a in ((p,) if isinstance(p, str) else p)}
+                    if "data" not in used:
+                        parts[0] = "data"
+                        spec = jax.sharding.PartitionSpec(*parts)
+        return jax.sharding.NamedSharding(rules.mesh, spec)
+
+    return jax.tree_util.tree_map(one, axes_tree, abstract_tree, is_leaf=_is_axes)
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    loss_fn = R.loss_fn(cfg)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        micro = cfg.microbatch
+        lead = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        if micro and micro < lead:
+            n_acc = lead // micro
+            mb = jax.tree_util.tree_map(
+                lambda x: x.reshape(n_acc, micro, *x.shape[1:]), batch
+            )
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def acc_step(carry, b):
+                lsum, gsum = carry
+                l, g = grads_of(params, b)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(jnp.float32), gsum, g
+                )
+                return (lsum + l, gsum), None
+
+            (lsum, gsum), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), zero_g), mb
+            )
+            loss = lsum / n_acc
+            grads = jax.tree_util.tree_map(lambda g: g / n_acc, gsum)
+        else:
+            loss, grads = grads_of(params, batch)
+        params, opt_state, om = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, max_seq: int, greedy: bool = True):
+    """decode: (params, token (B,1), cache) -> (next_token (B,1), cache)."""
+    step_fn = R.decode_fn(cfg, max_seq)
+
+    def serve_step(params, token, cache):
+        logits, cache = step_fn(params, token, cache)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    fwd = R.forward_fn(cfg)
+
+    def prefill_step(params, batch):
+        logits = fwd(params, batch)
+        return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+
+    return prefill_step

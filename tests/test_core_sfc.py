@@ -1,0 +1,93 @@
+"""Unit + property tests for space-filling curves."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sfc
+
+
+class TestHTM:
+    def test_root_ids_in_range(self):
+        pts = sfc.unit_vectors(500, seed=0)
+        ids = sfc.htm_id(pts, level=0)
+        assert ((ids >= 8) & (ids < 16)).all()
+
+    def test_level_bit_layout(self):
+        pts = sfc.unit_vectors(100, seed=1)
+        for level in (0, 3, 7, 14):
+            ids = sfc.htm_id(pts, level=level)
+            lo, hi = 8 * 4**level, 16 * 4**level
+            assert (ids >= lo).all() and (ids < hi).all()
+            assert sfc.htm_level_of(int(ids[0])) == level
+
+    def test_hierarchy_consistency(self):
+        """Parent id at level L-1 is the child id >> 2."""
+        pts = sfc.unit_vectors(200, seed=2)
+        deep = sfc.htm_id(pts, level=8)
+        shallow = sfc.htm_id(pts, level=7)
+        np.testing.assert_array_equal(deep >> np.uint64(2), shallow)
+
+    def test_spatial_locality(self):
+        """Perturbed points land in the same (or adjacent) deep trixel."""
+        rng = np.random.default_rng(3)
+        pts = sfc.unit_vectors(100, seed=3)
+        eps = pts + 1e-9 * rng.normal(size=pts.shape)
+        eps /= np.linalg.norm(eps, axis=1, keepdims=True)
+        a = sfc.htm_id(pts, level=10)
+        b = sfc.htm_id(eps, level=10)
+        assert (a == b).mean() > 0.95
+
+    def test_partition_is_total(self):
+        """Every point gets exactly one id; counts cover all 8 roots."""
+        pts = sfc.unit_vectors(4000, seed=4)
+        roots = sfc.htm_id(pts, level=0)
+        assert len(np.unique(roots)) == 8
+
+    def test_level14_fits_32bits(self):
+        pts = sfc.unit_vectors(64, seed=5)
+        ids = sfc.htm_id(pts, level=14)
+        assert ids.max() < 2**32  # the paper's 32-bit HTM ids
+
+
+class TestMorton:
+    @given(
+        st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=50),
+        st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=50),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_roundtrip_2d(self, xs, ys):
+        n = min(len(xs), len(ys))
+        x = np.array(xs[:n], dtype=np.uint64)
+        y = np.array(ys[:n], dtype=np.uint64)
+        code = sfc.morton2d(x, y)
+        x2, y2 = sfc.morton2d_decode(code)
+        np.testing.assert_array_equal(x, x2)
+        np.testing.assert_array_equal(y, y2)
+
+    def test_monotone_along_axis(self):
+        x = np.arange(100, dtype=np.uint64)
+        z = np.zeros(100, dtype=np.uint64)
+        codes = sfc.morton2d(x, z)
+        assert (np.diff(codes.astype(np.int64)) > 0).all()
+
+    def test_3d_distinct(self):
+        rng = np.random.default_rng(0)
+        x, y, z = (rng.integers(0, 2**20, 1000).astype(np.uint64) for _ in range(3))
+        codes = sfc.morton3d(x, y, z)
+        # Collisions only if (x,y,z) collide
+        _, counts = np.unique(codes, return_counts=True)
+        tuples = set(zip(x.tolist(), y.tolist(), z.tolist()))
+        assert (counts > 1).sum() <= 1000 - len(tuples)
+
+
+class TestConversions:
+    def test_radec_poles(self):
+        v = sfc.radec_to_unit(np.array([0.0]), np.array([90.0]))
+        np.testing.assert_allclose(v, [[0, 0, 1]], atol=1e-12)
+
+    def test_radec_unit_norm(self):
+        rng = np.random.default_rng(1)
+        ra = rng.uniform(0, 360, 100)
+        dec = rng.uniform(-90, 90, 100)
+        v = sfc.radec_to_unit(ra, dec)
+        np.testing.assert_allclose(np.linalg.norm(v, axis=1), 1.0, atol=1e-12)

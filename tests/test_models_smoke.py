@@ -1,0 +1,108 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step +
+one decode step on CPU; assert output shapes and no NaNs (brief req. (f))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, list_archs, smoke_config
+from repro.models import registry as R
+from repro.models.common import pad_vocab
+
+B, S = 2, 32
+
+
+def _batch(cfg, rng):
+    V = cfg.vocab_size
+    if cfg.family == "encdec":
+        return {
+            "frames": jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32),
+            "dec_tokens": jnp.asarray(rng.integers(0, V, (B, S)), jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, V, (B, S)), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        P = cfg.n_prefix
+        return {
+            "patches": jnp.asarray(rng.normal(size=(B, P, cfg.d_model)), jnp.float32),
+            "tokens": jnp.asarray(rng.integers(0, V, (B, S - P)), jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, V, (B, S - P)), jnp.int32),
+        }
+    return {
+        "tokens": jnp.asarray(rng.integers(0, V, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, V, (B, S)), jnp.int32),
+    }
+
+
+@pytest.fixture(scope="module", params=list_archs())
+def arch_setup(request):
+    cfg = smoke_config(request.param)
+    params = R.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+class TestForward:
+    def test_loss_finite(self, arch_setup):
+        cfg, params = arch_setup
+        rng = np.random.default_rng(0)
+        loss = R.loss_fn(cfg)(params, _batch(cfg, rng))
+        assert loss.shape == ()
+        assert jnp.isfinite(loss), f"{cfg.name}: loss={loss}"
+        # Random init + masked padded vocab: loss ~ ln(V)
+        assert float(loss) < 3 * np.log(cfg.vocab_size)
+
+    def test_logits_shape(self, arch_setup):
+        cfg, params = arch_setup
+        rng = np.random.default_rng(1)
+        batch = _batch(cfg, rng)
+        batch.pop("labels", None)
+        logits = R.forward_fn(cfg)(params, batch)
+        V = pad_vocab(cfg.vocab_size)
+        assert logits.shape == (B, S, V), (cfg.name, logits.shape)
+        assert not jnp.isnan(logits).any()
+
+    def test_grads_finite(self, arch_setup):
+        cfg, params = arch_setup
+        rng = np.random.default_rng(2)
+        g = jax.grad(lambda p: R.loss_fn(cfg)(p, _batch(cfg, rng)))(params)
+        leaves = jax.tree_util.tree_leaves(g)
+        assert leaves
+        for leaf in leaves:
+            assert jnp.isfinite(leaf).all(), cfg.name
+
+
+class TestDecode:
+    def test_decode_step(self, arch_setup):
+        cfg, params = arch_setup
+        max_seq = 64
+        cache = R.make_cache(cfg, B, max_seq, enc_len=S)
+        step = R.decode_fn(cfg, max_seq)
+        token = jnp.zeros((B, 1), jnp.int32)
+        logits, cache = step(params, token, cache)
+        V = pad_vocab(cfg.vocab_size)
+        assert logits.shape == (B, 1, V), cfg.name
+        assert not jnp.isnan(logits).any(), cfg.name
+        assert int(cache["pos"]) == 1
+        logits2, cache = step(params, token, cache)
+        assert int(cache["pos"]) == 2
+        assert not jnp.isnan(logits2).any(), cfg.name
+
+    def test_decode_matches_prefill_tail(self, arch_setup):
+        """Greedy decode logits == full-forward logits at the same position
+        (cache correctness), for token-only families."""
+        cfg, params = arch_setup
+        if cfg.family in ("encdec", "vlm"):
+            pytest.skip("prefix/cross caches compared in dedicated tests")
+        rng = np.random.default_rng(3)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 8)), jnp.int32)
+        full_logits = R.forward_fn(cfg)(params, {"tokens": toks})
+        cache = R.make_cache(cfg, B, 16)
+        step = R.decode_fn(cfg, 16)
+        logits = None
+        for t in range(8):
+            logits, cache = step(params, toks[:, t : t + 1], cache)
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]),
+            np.asarray(full_logits[:, -1]),
+            rtol=2e-2,
+            atol=2e-2,
+        )

@@ -1,0 +1,126 @@
+"""Sharding rules: divisibility fallback, used-axis exclusion, ZeRO-1
+augmentation, and logical->spec derivation for model params."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.sharding.logical import DECODE_RULES, DEFAULT_RULES, ShardingRules
+from repro.training.train_step import tree_shardings
+
+
+def _mesh():
+    # single device, but axis SIZES are what the rules consult -> use a
+    # fake multi-axis mesh over 1 device via reshape
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+class _FakeMesh:
+    """Shape-only stand-in (rules only read mesh.shape)."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+
+
+def _rules(shape=None, table=None):
+    r = ShardingRules.__new__(ShardingRules)
+    r.mesh = _FakeMesh(shape or {"pod": 2, "data": 16, "model": 16})
+    r.rules = dict(DEFAULT_RULES if table is None else table)
+    return r
+
+
+class TestSpecFor:
+    def test_batch_takes_pod_and_data(self):
+        spec = _rules().spec_for(("batch", "seq"), (256, 4096))
+        assert spec == P(("pod", "data"), None)
+
+    def test_divisibility_fallback_drops_axis(self):
+        # 8 kv heads on a 16-way model axis -> replicated
+        spec = _rules().spec_for(("kv_heads",), (8,))
+        assert spec == P(None)
+
+    def test_divisibility_fallback_prefix(self):
+        # batch 16 can't take pod*data=32, falls back to pod=2 prefix
+        spec = _rules().spec_for(("batch",), (16,))
+        assert spec == P("pod")
+
+    def test_used_axis_not_reassigned(self):
+        # experts take model; expert_ff then must NOT also take model
+        spec = _rules().spec_for(("experts", "embed", "expert_ff"), (64, 1024, 2048))
+        assert spec == P("model", None, None)
+
+    def test_expert_ff_picks_up_when_experts_cant(self):
+        # mixtral: 8 experts < 16 -> expert_ff gets the model axis
+        spec = _rules().spec_for(("experts", "embed", "expert_ff"), (8, 1024, 2048))
+        assert spec == P(None, None, "model")
+
+    def test_decode_rules_shard_cache_seq(self):
+        r = _rules(table=DECODE_RULES)
+        spec = r.spec_for(
+            ("layers", "batch", "cache_seq", "cache_kv_heads", "head_dim"),
+            (32, 128, 32768, 8, 128),
+        )
+        assert spec[2] == "model"  # seq sharded
+        assert spec[3] is None  # kv heads replicated (8 % 16 != 0)
+
+    def test_vocab_padded_shards(self):
+        spec = _rules().spec_for(("vocab", "embed"), (256256, 1024))
+        assert spec == P("model", None)
+
+    def test_unknown_logical_name_replicates(self):
+        spec = _rules().spec_for(("nonexistent", None), (7, 13))
+        assert spec == P(None, None)
+
+
+class TestTreeShardings:
+    def test_zero1_augments_dim0(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        rules = ShardingRules(mesh, dict(DEFAULT_RULES))
+        axes = {"m": ("embed", "ff")}
+        abstract = {"m": jax.ShapeDtypeStruct((64, 32), "float32")}
+        sh = tree_shardings(rules, axes, abstract, zero1=True)
+        assert sh["m"].spec[0] == "data"
+
+    def test_zero1_skips_when_data_already_used(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        rules = ShardingRules(mesh, dict(DEFAULT_RULES))
+        axes = {"m": ("batch", "ff")}  # batch already uses data
+        abstract = {"m": jax.ShapeDtypeStruct((64, 32), "float32")}
+        sh = tree_shardings(rules, axes, abstract, zero1=True)
+        spec0 = sh["m"].spec[0]
+        assert spec0 in (("pod", "data"), "data", ("data",))  # not doubled
+
+    def test_structure_preserved(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        rules = ShardingRules(mesh, dict(DEFAULT_RULES))
+        axes = {"a": {"b": ("embed",)}, "c": ()}
+        abstract = {
+            "a": {"b": jax.ShapeDtypeStruct((8,), "float32")},
+            "c": jax.ShapeDtypeStruct((), "int32"),
+        }
+        sh = tree_shardings(rules, axes, abstract)
+        assert set(sh) == {"a", "c"}
+
+
+class TestParamAxesCoverage:
+    """Every param leaf of every arch gets a well-formed axes tuple."""
+
+    @pytest.mark.parametrize("arch", [
+        "codeqwen1.5-7b", "mixtral-8x22b", "falcon-mamba-7b",
+        "jamba-v0.1-52b", "seamless-m4t-large-v2", "paligemma-3b",
+    ])
+    def test_axes_match_abstract_shapes(self, arch):
+        from repro.configs import get_config
+        from repro.models import registry as R
+
+        cfg = get_config(arch)
+        axes = R.param_axes(cfg)
+        abstract = R.init_params(cfg, mode="abstract")
+        flat_a = jax.tree_util.tree_leaves(
+            axes, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        flat_s = jax.tree_util.tree_leaves(abstract)
+        assert len(flat_a) == len(flat_s)
+        for ax, st in zip(flat_a, flat_s):
+            assert len(ax) == len(st.shape), (arch, ax, st.shape)

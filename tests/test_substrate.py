@@ -1,0 +1,320 @@
+"""Substrate tests: data pipeline, checkpointing, optimizers, compression,
+fault tolerance, serving engine, KV page pool."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.data import DataConfig, TokenPipeline
+from repro.dist import (
+    StragglerPolicy,
+    dequantize_blockwise,
+    error_feedback_compress,
+    quantize_blockwise,
+    simulate_training_with_failures,
+    topk_compress,
+)
+from repro.dist.ft import HeartbeatMonitor
+from repro.serving import AdapterSpec, LifeRaftEngine, PagePool, Request, ServeConfig
+from repro.training.optimizer import cosine_schedule, make_optimizer
+
+
+# ------------------------------------------------------------------ data
+class TestPipeline:
+    def test_deterministic_across_restarts(self):
+        cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4, seed=3)
+        p1 = TokenPipeline(cfg)
+        batches = [p1.next_batch() for _ in range(3)]
+        p2 = TokenPipeline.restore(cfg, {"step": 2, "seed": 3})
+        np.testing.assert_array_equal(p2.next_batch()["tokens"], batches[2]["tokens"])
+
+    def test_shards_disjoint_and_cover(self):
+        cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=8, seed=0)
+        full = TokenPipeline(cfg, dp_rank=0, dp_size=1).next_batch()["tokens"]
+        shards = [
+            TokenPipeline(cfg, dp_rank=r, dp_size=4).next_batch()["tokens"]
+            for r in range(4)
+        ]
+        np.testing.assert_array_equal(np.concatenate(shards), full)
+
+    def test_labels_shifted(self):
+        cfg = DataConfig(vocab_size=50, seq_len=12, global_batch=2)
+        b = TokenPipeline(cfg).next_batch()
+        assert b["tokens"].shape == b["labels"].shape == (2, 12)
+
+
+# ------------------------------------------------------------------ checkpoint
+class TestCheckpoint:
+    def _tree(self, seed=0):
+        k = jax.random.PRNGKey(seed)
+        return {
+            "a": jax.random.normal(k, (4, 8)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32), "c": jnp.float32(3.5)},
+        }
+
+    def test_roundtrip(self, tmp_path):
+        tree = self._tree()
+        save_checkpoint(tmp_path, 7, tree)
+        restored, step = restore_checkpoint(tmp_path, None, tree)
+        assert step == 7
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+            tree, restored,
+        )
+
+    def test_latest_step_and_atomicity(self, tmp_path):
+        save_checkpoint(tmp_path, 1, self._tree(1))
+        save_checkpoint(tmp_path, 5, self._tree(2))
+        assert latest_step(tmp_path) == 5
+        # a stale .tmp dir must not be picked up
+        (tmp_path / "step_00000009.tmp").mkdir()
+        assert latest_step(tmp_path) == 5
+
+    def test_async_checkpointer(self, tmp_path):
+        ck = AsyncCheckpointer(tmp_path)
+        tree = self._tree(3)
+        ck.save(2, tree)
+        ck.wait()
+        restored, step = restore_checkpoint(tmp_path, None, tree)
+        assert step == 2
+
+    def test_structure_mismatch_raises(self, tmp_path):
+        save_checkpoint(tmp_path, 1, {"a": jnp.zeros((2, 2))})
+        with pytest.raises(AssertionError):
+            restore_checkpoint(tmp_path, 1, {"a": jnp.zeros((3, 3))})
+
+
+# ------------------------------------------------------------------ optimizer
+class TestOptimizers:
+    def _quadratic(self, opt, steps=60):
+        target = jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)), jnp.float32)
+        params = {"w": jnp.zeros((8, 8), jnp.float32)}
+        state = opt.init(params)
+        loss = lambda p: jnp.mean((p["w"] - target) ** 2)
+        for _ in range(steps):
+            g = jax.grad(loss)(params)
+            params, state, _ = opt.update(g, state, params)
+        return float(loss(params))
+
+    @pytest.mark.parametrize("name", ["adamw", "adamw8bit", "adafactor"])
+    def test_optimizers_descend(self, name):
+        opt = make_optimizer(name, lr=0.05, weight_decay=0.0)
+        final = self._quadratic(opt)
+        assert final < 0.3, (name, final)
+
+    def test_8bit_state_is_small(self):
+        opt = make_optimizer("adamw8bit")
+        params = {"w": jnp.zeros((1024, 64), jnp.bfloat16)}
+        state = opt.init(params)
+        mu = state["mu"]["w"]
+        int8_bytes = mu["m_q"].size + mu["v_q"].size
+        scale_bytes = (mu["m_s"].size + mu["v_s"].size) * 4
+        f32_bytes = 2 * 1024 * 64 * 4
+        assert int8_bytes + scale_bytes < 0.3 * f32_bytes
+
+    def test_state_axes_structure_matches(self):
+        opt = make_optimizer("adamw")
+        params = {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))}
+        axes = {"w": ("embed", "ff"), "b": ("ff",)}
+        sa = opt.state_axes(axes)
+        state = opt.init(params)
+        jax.tree_util.tree_map(
+            lambda *_: None, sa, state, is_leaf=lambda x: isinstance(x, tuple)
+        )  # structure compatibility check (raises on mismatch)
+
+    def test_cosine_schedule(self):
+        lr = cosine_schedule(1.0, warmup=10, total=110)
+        assert float(lr(0)) == 0.0
+        assert float(lr(10)) == pytest.approx(1.0)
+        assert float(lr(110)) == pytest.approx(0.0, abs=1e-6)
+
+
+# ------------------------------------------------------------------ compression
+class TestCompression:
+    @given(st.integers(1, 5000))
+    @settings(max_examples=25, deadline=None)
+    def test_quantize_roundtrip_bounded(self, n):
+        x = jnp.asarray(np.random.default_rng(n).normal(size=n), jnp.float32)
+        q, s = quantize_blockwise(x)
+        y = dequantize_blockwise(q, s, x.shape)
+        blk_max = np.abs(np.asarray(x)).max()
+        assert float(jnp.abs(x - y).max()) <= blk_max / 127.0 + 1e-6
+
+    def test_error_feedback_converges(self):
+        """Sum of dequantized payloads + final residual == sum of grads."""
+        rng = np.random.default_rng(0)
+        total = np.zeros(100, np.float32)
+        recovered = np.zeros(100, np.float32)
+        res = None
+        for i in range(20):
+            g = jnp.asarray(rng.normal(size=100), jnp.float32)
+            total += np.asarray(g)
+            (q, s), res = error_feedback_compress(g, res)
+            recovered += np.asarray(dequantize_blockwise(q, s, g.shape))
+        np.testing.assert_allclose(recovered + np.asarray(res), total, atol=1e-3)
+
+    def test_topk_keeps_largest(self):
+        g = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05], jnp.float32)
+        kept, res = topk_compress(g, 0.4, None)
+        assert float(kept[1]) == -5.0 and float(kept[3]) == 3.0
+        assert float(kept[0]) == 0.0
+        np.testing.assert_allclose(np.asarray(kept + res), np.asarray(g), atol=1e-7)
+
+
+# ------------------------------------------------------------------ fault tolerance
+class TestFaultTolerance:
+    def test_heartbeat_detects_failure(self):
+        hb = HeartbeatMonitor([0, 1, 2], timeout=10.0)
+        for t in (0.0, 5.0):
+            hb.beat(0, t)
+            hb.beat(1, t)
+        hb.beat(2, 0.0)
+        assert hb.check(12.0) == [2]
+        assert set(hb.alive) == {0, 1}
+
+    def test_straggler_policy(self):
+        p = StragglerPolicy(factor=2.0)
+        for _ in range(10):
+            assert not p.observe(1.0)
+        assert p.observe(5.0)
+        assert p.backup_cutoff() == pytest.approx(2.0, rel=0.1)
+
+    def test_backup_tasks_reduce_walltime(self):
+        kw = dict(n_steps=400, straggler_rate=0.1, straggler_slowdown=8.0,
+                  failure_rate=0.0, seed=1)
+        with_b = simulate_training_with_failures(backup_tasks=True, **kw)
+        without = simulate_training_with_failures(backup_tasks=False, **kw)
+        assert with_b.wall_time < without.wall_time
+        assert with_b.n_backup_dispatches > 0
+
+    def test_failures_roll_back_to_checkpoint(self):
+        r = simulate_training_with_failures(
+            n_steps=300, failure_rate=3e-6, checkpoint_every=20, seed=2
+        )
+        assert r.steps_done == 300
+        if r.n_failures:
+            assert r.lost_steps <= r.n_failures * 20
+
+
+# ------------------------------------------------------------------ page pool
+class TestPagePool:
+    def test_allocate_and_release(self):
+        pool = PagePool(n_pages=8, page_size=4, n_kv=2, head_dim=8)
+        pool.create(0)
+        for _ in range(9):  # 3 pages worth
+            pool.append_token_slot(0)
+        assert pool.free_pages == 5
+        pool.release(0)
+        assert pool.free_pages == 8
+
+    def test_prefix_sharing_refcount(self):
+        pool = PagePool(n_pages=8, page_size=4, n_kv=2, head_dim=8)
+        pool.create(0)
+        for _ in range(8):
+            pool.append_token_slot(0)
+        used = 8 - pool.free_pages
+        pool.create(1, prefix_of=0)  # shares both pages
+        assert 8 - pool.free_pages == used
+        pool.release(0)
+        assert 8 - pool.free_pages == used  # still referenced by seq 1
+        pool.release(1)
+        assert pool.free_pages == 8
+
+    def test_copy_on_write_on_shared_tail(self):
+        pool = PagePool(n_pages=8, page_size=4, n_kv=2, head_dim=8)
+        pool.create(0)
+        for _ in range(6):  # page 2 half-full
+            pool.append_token_slot(0)
+        pool.create(1, prefix_of=0)
+        p0_pages = list(pool._seqs[0].pages)
+        pool.append_token_slot(1)  # must CoW the shared tail page
+        assert pool._seqs[1].pages[-1] != p0_pages[-1]
+
+    def test_exhaustion(self):
+        pool = PagePool(n_pages=1, page_size=2, n_kv=1, head_dim=4)
+        pool.create(0)
+        pool.append_token_slot(0)
+        pool.append_token_slot(0)
+        with pytest.raises(MemoryError):
+            pool.append_token_slot(0)
+
+    def test_page_table(self):
+        pool = PagePool(n_pages=8, page_size=4, n_kv=2, head_dim=8)
+        pool.create(0)
+        for _ in range(5):
+            pool.append_token_slot(0)
+        pt, lens = pool.page_table([0], pad_to=4)
+        assert pt.shape == (1, 4)
+        assert int(lens[0]) == 5
+
+
+# ------------------------------------------------------------------ serving engine
+def _trace(n=120, n_adapters=8, rate=200.0, zipf=1.5, seed=0):
+    rng = np.random.default_rng(seed)
+    w = 1.0 / np.arange(1, n_adapters + 1) ** zipf
+    w /= w.sum()
+    t = 0.0
+    out = []
+    for i in range(n):
+        t += rng.exponential(1.0 / rate)
+        out.append(
+            Request(
+                request_id=i,
+                adapter_id=int(rng.choice(n_adapters, p=w)),
+                arrival_time=t,
+                prompt_len=int(rng.integers(8, 64)),
+                max_new_tokens=16,
+            )
+        )
+    return out
+
+
+def _adapters(n=8, nbytes=8 << 30):
+    return [AdapterSpec(i, nbytes) for i in range(n)]
+
+
+class TestServingEngine:
+    def test_all_requests_complete(self):
+        for policy in ("liferaft", "rr", "noshare"):
+            eng = LifeRaftEngine(_adapters(), ServeConfig(policy=policy))
+            s = eng.run(_trace())
+            assert s["n_completed"] == 120, policy
+
+    def test_liferaft_beats_noshare_throughput(self):
+        lr = LifeRaftEngine(_adapters(), ServeConfig(policy="liferaft", alpha=0.0))
+        ns = LifeRaftEngine(_adapters(), ServeConfig(policy="noshare"))
+        s1, s2 = lr.run(_trace(seed=1)), ns.run(_trace(seed=1))
+        assert s1["token_throughput"] > 1.3 * s2["token_throughput"]
+
+    def test_batching_amortizes_adapter_loads(self):
+        eng = LifeRaftEngine(_adapters(), ServeConfig(policy="liferaft", alpha=0.0))
+        s = eng.run(_trace(seed=2))
+        assert s["cache_hit_rate"] > 0.2
+        assert s["batches"] < 120 * 2  # far fewer scheduling rounds than tokens/quantum naive
+
+    def test_aging_prevents_starvation(self):
+        """alpha=1 must bound p95 response vs pure greedy under skew."""
+        t = _trace(n=200, zipf=2.5, rate=400.0, seed=3)
+        greedy = LifeRaftEngine(_adapters(), ServeConfig(policy="liferaft", alpha=0.0)).run(t)
+        aged = LifeRaftEngine(_adapters(), ServeConfig(policy="liferaft", alpha=1.0)).run(t)
+        assert aged["p95_response"] <= greedy["p95_response"] * 1.5
+        assert greedy["token_throughput"] >= aged["token_throughput"] * 0.95
+
+    def test_real_decode_hook_called(self):
+        calls = []
+        eng = LifeRaftEngine(
+            _adapters(2),
+            ServeConfig(policy="liferaft"),
+            decode_batch_fn=lambda a, b, q: calls.append((a, len(b), q)),
+        )
+        eng.run(_trace(n=10, n_adapters=2))
+        assert calls and all(q == 16 for _, _, q in calls)

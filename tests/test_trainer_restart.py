@@ -1,0 +1,49 @@
+"""Fault-tolerance integration: kill-and-resume training reproduces the
+uninterrupted run exactly (checkpoint + deterministic data pipeline)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def _cfg():
+    base = smoke_config("codeqwen1.5-7b")
+    return dataclasses.replace(base, n_layers=1, d_model=32, d_ff=64,
+                               n_heads=2, n_kv_heads=2, head_dim=16,
+                               vocab_size=128)
+
+
+def _tcfg(steps, ckpt_dir):
+    return TrainerConfig(steps=steps, checkpoint_every=5, log_every=1000,
+                         checkpoint_dir=str(ckpt_dir), lr=1e-3,
+                         global_batch=2, seq_len=16)
+
+
+class TestRestart:
+    def test_resume_matches_uninterrupted(self, tmp_path):
+        # uninterrupted 10-step run
+        t_full = Trainer(_cfg(), _tcfg(10, tmp_path / "full"), log_fn=lambda s: None)
+        hist_full = t_full.run()
+
+        # run to step 5 (checkpoint lands), then a NEW trainer resumes
+        t_a = Trainer(_cfg(), _tcfg(5, tmp_path / "resume"), log_fn=lambda s: None)
+        t_a.run()
+        t_b = Trainer(_cfg(), _tcfg(10, tmp_path / "resume"), log_fn=lambda s: None)
+        assert t_b.start_step == 5  # picked up the checkpoint
+        hist_b = t_b.run()
+
+        full_tail = {h["step"]: h["loss"] for h in hist_full if h["step"] > 5}
+        resumed = {h["step"]: h["loss"] for h in hist_b}
+        assert set(resumed) == set(full_tail)
+        for step in full_tail:
+            np.testing.assert_allclose(resumed[step], full_tail[step],
+                                       rtol=1e-4, atol=1e-5)
+
+    def test_straggler_flag_recorded(self, tmp_path):
+        t = Trainer(_cfg(), _tcfg(3, tmp_path / "s"), log_fn=lambda s: None)
+        hist = t.run()
+        assert all("straggler" in h for h in hist)
