@@ -13,6 +13,7 @@ import time
 def main() -> None:
     t0 = time.time()
     from . import (  # noqa: E402
+        bench_scheduler,
         fig2_hybrid_join,
         fig5_bucket_reuse,
         fig6_workload_cdf,
@@ -30,6 +31,7 @@ def main() -> None:
         ("Fig.6 cumulative workload CDF", fig6_workload_cdf.main),
         ("Fig.7 schedulers (throughput / response / cache)", fig7_schedulers.main),
         ("Fig.8 saturation trade-off + adaptive alpha", fig8_tradeoff.main),
+        ("Scheduler hot path: incremental vs naive + compile counts", bench_scheduler.main),
         ("Serving: multi-tenant LifeRaft engine", serving_bench.main),
         ("Kernels: micro-benchmarks", kernel_bench.main),
         ("Fault tolerance: goodput under failures", ft_bench.main),

@@ -23,6 +23,7 @@ from .metrics import (
 from .adaptive import AlphaController, SaturationEstimator, TradeoffPoint, TradeoffTable
 from .scheduler import (
     LifeRaftScheduler,
+    NaiveLifeRaftScheduler,
     OrderedScheduler,
     RoundRobinScheduler,
     SchedulerDecision,
@@ -49,6 +50,7 @@ __all__ = [
     "TradeoffPoint",
     "TradeoffTable",
     "LifeRaftScheduler",
+    "NaiveLifeRaftScheduler",
     "OrderedScheduler",
     "RoundRobinScheduler",
     "SchedulerDecision",

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Hashable, Iterable, Optional
+from typing import Callable, Hashable, Iterable, Optional
 
 __all__ = ["CacheStats", "BucketCache"]
 
@@ -42,6 +42,22 @@ class BucketCache:
         self._entries: OrderedDict[Hashable, object] = OrderedDict()
         self._pinned: set[Hashable] = set()
         self.stats = CacheStats()
+        self._listeners: list[Callable[[Hashable], None]] = []
+
+    # -- change notification -------------------------------------------------
+    def subscribe(self, fn: Callable[[Hashable], None]) -> Callable[[Hashable], None]:
+        """Register ``fn(bucket_id)`` to fire whenever a bucket's *residency*
+        changes (insert or eviction) — phi(i) in Eq. 1 flipped for that id."""
+        self._listeners.append(fn)
+        return fn
+
+    def unsubscribe(self, fn: Callable[[Hashable], None]) -> None:
+        if fn in self._listeners:
+            self._listeners.remove(fn)
+
+    def _notify(self, bucket_id: Hashable) -> None:
+        for fn in self._listeners:
+            fn(bucket_id)
 
     def contains(self, bucket_id: Hashable) -> bool:
         """Residency probe — does NOT count as an access or touch LRU."""
@@ -59,6 +75,7 @@ class BucketCache:
         self.stats.misses += 1
         self._entries[bucket_id] = payload
         self._entries.move_to_end(bucket_id)
+        self._notify(bucket_id)
         while len(self._entries) > self.capacity:
             victim = self._pick_victim()
             if victim is None:  # everything pinned; allow overflow
@@ -66,6 +83,7 @@ class BucketCache:
             self._entries.pop(victim)
             self.stats.evictions += 1
             evicted.append(victim)
+            self._notify(victim)
         return evicted
 
     def _pick_victim(self) -> Optional[Hashable]:
@@ -73,6 +91,11 @@ class BucketCache:
             if k not in self._pinned:
                 return k
         return None
+
+    def note_bypass_miss(self) -> None:
+        """Record a read that bypassed residency (an indexed cold read):
+        counts as a miss in hit_rate without inserting or evicting."""
+        self.stats.misses += 1
 
     def get(self, bucket_id: Hashable) -> object:
         return self._entries.get(bucket_id)
@@ -85,7 +108,9 @@ class BucketCache:
 
     def invalidate(self, bucket_ids: Iterable[Hashable]) -> None:
         for b in bucket_ids:
-            self._entries.pop(b, None)
+            if b in self._entries:
+                self._entries.pop(b)
+                self._notify(b)
 
     def resident(self) -> list[Hashable]:
         return list(self._entries)

@@ -5,20 +5,40 @@ current workload queues, cache residency, and clock.  Batching (servicing a
 bucket evaluates every pending work unit on it in one pass) is handled by
 the caller — NoShare is the exception and is modeled by the simulator as
 per-query evaluation in arrival order.
+
+Two LifeRaft implementations share one contract:
+
+* ``NaiveLifeRaftScheduler`` — the oracle: rescores every nonempty queue on
+  every ``select()`` with ``aged_workload_throughput`` (O(B) per decision).
+* ``LifeRaftScheduler`` — incremental: exploits the identity
+
+      U_a(i) = U_t(i)*(1-alpha) + (now - oldest_i)*1e3*alpha
+             = [U_t(i)*(1-alpha) - oldest_i*1e3*alpha] + now*1e3*alpha
+
+  The bracketed *rebased priority* S(i) is independent of ``now`` and the
+  trailing term is constant across candidates, so argmax_i U_a == argmax_i S
+  and S only changes when a bucket's queue or residency changes.  A lazy
+  max-heap over S, fed by change notifications from the WorkloadManager and
+  BucketCache, makes a decision O(dirty * log B) instead of O(B).  To stay
+  decision-identical to the oracle under floating point, the top of the heap
+  is widened to a tolerance window and the finalists are re-ranked with the
+  oracle's own arithmetic.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Optional, Protocol
 
 from .cache import BucketCache
-from .metrics import CostModel, aged_workload_throughput
+from .metrics import CostModel, aged_workload_throughput, workload_throughput
 from .workload import WorkloadManager
 
 __all__ = [
     "SchedulerDecision",
     "BucketScheduler",
     "LifeRaftScheduler",
+    "NaiveLifeRaftScheduler",
     "RoundRobinScheduler",
     "OrderedScheduler",
 ]
@@ -38,8 +58,33 @@ class BucketScheduler(Protocol):
     ) -> Optional[SchedulerDecision]: ...
 
 
+@dataclasses.dataclass
+class _Entry:
+    """Per-bucket incremental state (inputs to Eq. 1/2 + the rebased key)."""
+
+    version: int
+    key: float  # S(i) = ut*(1-alpha) - oldest_ms*alpha
+    ut: float
+    oldest: float
+    size: int
+    cached: bool
+
+
 class LifeRaftScheduler:
-    """Greedy-by-U_a bucket selection (Eq. 2). alpha=0 greedy, alpha=1 aged."""
+    """Greedy-by-U_a bucket selection (Eq. 2). alpha=0 greedy, alpha=1 aged.
+
+    Incremental by default: subscribes to the WorkloadManager's queue
+    changes and the BucketCache's residency changes, maintaining a lazy
+    max-heap over the rebased priority.  Falls back to the full rescan when
+    ``normalized=True`` (normalization couples every candidate's score) or
+    when the workload/cache objects do not support ``subscribe`` (e.g. the
+    serving engine's lightweight façade).
+
+    External mutation of queue internals that bypasses
+    ``WorkloadManager.submit/complete_bucket`` is invisible to the
+    incremental index — call :meth:`rebuild` (or ``mark_dirty(bucket)``)
+    after such surgery.
+    """
 
     name = "liferaft"
 
@@ -49,30 +94,264 @@ class LifeRaftScheduler:
         alpha: float = 0.0,
         normalized: bool = False,
     ) -> None:
+        if not 0.0 <= alpha <= 1.0:
+            raise ValueError(f"alpha must be in [0,1], got {alpha}")
         self.cost_model = cost_model
-        self.alpha = float(alpha)
+        self._alpha = float(alpha)
         self.normalized = normalized
+        # -- incremental state ------------------------------------------------
+        self._wm: Optional[WorkloadManager] = None
+        self._cache: Optional[BucketCache] = None
+        self._entries: dict[int, _Entry] = {}
+        self._heap: list[tuple[float, int, int]] = []  # (-key, bucket, version)
+        self._dirty: set[int] = set()
+        self._version = 0
+        self._alpha_dirty = False
 
+    # -- alpha is hot-swappable (adaptive controller) -------------------------
+    @property
+    def alpha(self) -> float:
+        return self._alpha
+
+    @alpha.setter
+    def alpha(self, value: float) -> None:
+        value = float(value)
+        if not 0.0 <= value <= 1.0:
+            raise ValueError(f"alpha must be in [0,1], got {value}")
+        if value != self._alpha:
+            self._alpha = value
+            # Every rebased key embeds alpha; defer to a bulk O(B) re-key
+            # (the stored ut/oldest inputs are alpha-independent).
+            self._alpha_dirty = True
+
+    # -- public maintenance hooks ---------------------------------------------
+    def mark_dirty(self, bucket_id: int) -> None:
+        self._dirty.add(bucket_id)
+
+    def rebuild(self) -> None:
+        """Drop the incremental index; it re-seeds on the next select()."""
+        self._unbind()
+        self._entries.clear()
+        self._heap.clear()
+        self._dirty.clear()
+        self._alpha_dirty = False
+
+    # -- selection -------------------------------------------------------------
     def select(
         self, wm: WorkloadManager, cache: BucketCache, now: float
     ) -> Optional[SchedulerDecision]:
-        queues = wm.nonempty_queues()
-        if not queues:
+        if self._use_naive(wm, cache):
+            return _naive_select(self, wm, cache, now)
+        self._bind(wm, cache)
+        self._flush_dirty()
+        return self._select_one(now)
+
+    def select_topk(
+        self, wm: WorkloadManager, cache: BucketCache, now: float, k: int
+    ) -> list[SchedulerDecision]:
+        """Top-k distinct buckets by U_a, best first (fused multi-bucket
+        execution services all k in one grouped device call)."""
+        if k <= 1:
+            d = self.select(wm, cache, now)
+            return [] if d is None else [d]
+        if self._use_naive(wm, cache):
+            return _naive_topk(self, wm, cache, now, k)
+        self._bind(wm, cache)
+        self._flush_dirty()
+        out: list[SchedulerDecision] = []
+        suspended: list[int] = []
+        for _ in range(k):
+            d = self._select_one(now)
+            if d is None:
+                break
+            out.append(d)
+            # Invalidate the winner so the next pop yields the runner-up.
+            self._entries.pop(d.bucket_id, None)
+            suspended.append(d.bucket_id)
+        self._dirty.update(suspended)  # restore on the next flush
+        return out
+
+    # -- incremental machinery --------------------------------------------------
+    def _use_naive(self, wm, cache) -> bool:
+        return (
+            self.normalized
+            or not hasattr(wm, "subscribe")
+            or not hasattr(cache, "subscribe")
+        )
+
+    def _unbind(self) -> None:
+        for src in (self._wm, self._cache):
+            if src is not None and hasattr(src, "unsubscribe"):
+                src.unsubscribe(self._on_change)
+        self._wm = None
+        self._cache = None
+
+    def _bind(self, wm: WorkloadManager, cache: BucketCache) -> None:
+        if self._wm is wm and self._cache is cache:
+            return
+        self._unbind()
+        self._entries.clear()
+        self._heap.clear()
+        self._dirty.clear()
+        self._wm = wm
+        self._cache = cache
+        wm.subscribe(self._on_change)
+        cache.subscribe(self._on_change)
+        for q in wm.nonempty_queues():
+            self._dirty.add(q.bucket_id)
+
+    def _on_change(self, bucket_id: int) -> None:
+        self._dirty.add(bucket_id)
+
+    def _flush_dirty(self) -> None:
+        if self._alpha_dirty:
+            # Bulk re-key: ut/oldest are alpha-independent, so this needs no
+            # wm/cache reads — O(B) rebuild instead of B dirty heappushes.
+            self._alpha_dirty = False
+            alpha = self._alpha
+            for e in self._entries.values():
+                self._version += 1
+                e.version = self._version
+                e.key = e.ut * (1.0 - alpha) - e.oldest * 1e3 * alpha
+            self._heap = [
+                (-e.key, b, e.version) for b, e in self._entries.items()
+            ]
+            heapq.heapify(self._heap)
+        if not self._dirty:
+            return
+        wm, cache, alpha = self._wm, self._cache, self._alpha
+        for b in self._dirty:
+            q = wm.queues.get(b)
+            if q is None or not q:
+                self._entries.pop(b, None)  # heap entries go stale
+                continue
+            size = q.size
+            cached = bool(cache.contains(b))
+            ut = workload_throughput(size, cached, self.cost_model)
+            oldest = q.oldest_arrival
+            key = ut * (1.0 - alpha) - oldest * 1e3 * alpha
+            self._version += 1
+            self._entries[b] = _Entry(self._version, key, ut, oldest, size, cached)
+            heapq.heappush(self._heap, (-key, b, self._version))
+        self._dirty.clear()
+        if len(self._heap) > 4 * max(len(self._entries), 8):
+            self._compact()
+
+    def _compact(self) -> None:
+        self._heap = [
+            (-e.key, b, e.version) for b, e in self._entries.items()
+        ]
+        heapq.heapify(self._heap)
+
+    def _pop_stale(self) -> None:
+        heap = self._heap
+        while heap:
+            _, b, ver = heap[0]
+            e = self._entries.get(b)
+            if e is None or e.version != ver:
+                heapq.heappop(heap)
+            else:
+                return
+
+    def _select_one(self, now: float) -> Optional[SchedulerDecision]:
+        self._pop_stale()
+        if not self._heap:
             return None
-        sizes = {q.bucket_id: q.size for q in queues}
-        cached = {q.bucket_id: cache.contains(q.bucket_id) for q in queues}
-        ages = wm.ages_ms(now)
-        ua = aged_workload_throughput(
-            sizes, ages, cached, self.cost_model, self.alpha, self.normalized
-        )
-        # Deterministic tie-break on bucket id for reproducibility.
-        best = max(ua, key=lambda b: (ua[b], -b))
+        alpha = self._alpha
+        s_max = -self._heap[0][0]
+        # Widen to a tolerance window: the rebased key and the oracle's
+        # U_a formula round differently, so any bucket within a few-ulp
+        # band of the top could be the oracle argmax.  1e-9 relative is
+        # ~4000x the double-precision rounding error of either formula.
+        tol = 1e-9 * (abs(s_max) + abs(now) * 1e3 * alpha + 1.0)
+        popped: list[tuple[float, int, int]] = []
+        finalists: list[tuple[int, _Entry]] = []
+        while self._heap:
+            negk, b, ver = self._heap[0]
+            e = self._entries.get(b)
+            if e is None or e.version != ver:
+                heapq.heappop(self._heap)
+                continue
+            if -negk < s_max - tol:
+                break
+            heapq.heappop(self._heap)
+            popped.append((negk, b, ver))
+            finalists.append((b, e))
+        for item in popped:
+            heapq.heappush(self._heap, item)
+        # Re-rank finalists with the oracle's exact arithmetic + tie-break.
+        def ua(be):
+            b, e = be
+            age = (now - e.oldest) * 1e3
+            return (e.ut * (1.0 - alpha) + age * alpha, -b)
+
+        b, e = max(finalists, key=ua)
         return SchedulerDecision(
-            bucket_id=best,
-            score=ua[best],
-            in_cache=cached[best],
-            queue_size=sizes[best],
+            bucket_id=b,
+            score=ua((b, e))[0],
+            in_cache=e.cached,
+            queue_size=e.size,
         )
+
+
+class NaiveLifeRaftScheduler(LifeRaftScheduler):
+    """The O(B)-per-decision oracle: full rescore on every select().
+
+    Kept as the reference implementation the incremental scheduler is
+    property-tested against, and as the baseline in BENCH_scheduler."""
+
+    name = "liferaft-naive"
+
+    def select(self, wm, cache, now):
+        return _naive_select(self, wm, cache, now)
+
+    def select_topk(self, wm, cache, now, k):
+        if k <= 1:
+            d = self.select(wm, cache, now)
+            return [] if d is None else [d]
+        return _naive_topk(self, wm, cache, now, k)
+
+
+def _naive_scores(sched, wm, cache, now):
+    queues = wm.nonempty_queues()
+    if not queues:
+        return None
+    sizes = {q.bucket_id: q.size for q in queues}
+    cached = {q.bucket_id: cache.contains(q.bucket_id) for q in queues}
+    ages = wm.ages_ms(now)
+    ua = aged_workload_throughput(
+        sizes, ages, cached, sched.cost_model, sched.alpha, sched.normalized
+    )
+    return sizes, cached, ua
+
+
+def _naive_select(sched, wm, cache, now) -> Optional[SchedulerDecision]:
+    scored = _naive_scores(sched, wm, cache, now)
+    if scored is None:
+        return None
+    sizes, cached, ua = scored
+    # Deterministic tie-break on bucket id for reproducibility.
+    best = max(ua, key=lambda b: (ua[b], -b))
+    return SchedulerDecision(
+        bucket_id=best,
+        score=ua[best],
+        in_cache=cached[best],
+        queue_size=sizes[best],
+    )
+
+
+def _naive_topk(sched, wm, cache, now, k) -> list[SchedulerDecision]:
+    scored = _naive_scores(sched, wm, cache, now)
+    if scored is None:
+        return []
+    sizes, cached, ua = scored
+    order = sorted(ua, key=lambda b: (ua[b], -b), reverse=True)
+    return [
+        SchedulerDecision(
+            bucket_id=b, score=ua[b], in_cache=cached[b], queue_size=sizes[b]
+        )
+        for b in order[:k]
+    ]
 
 
 class RoundRobinScheduler:
@@ -100,6 +379,17 @@ class RoundRobinScheduler:
             in_cache=cache.contains(nxt),
             queue_size=q.size,
         )
+
+    def select_topk(self, wm, cache, now, k):
+        decisions = []
+        seen = set()
+        for _ in range(max(k, 1)):
+            d = self.select(wm, cache, now)
+            if d is None or d.bucket_id in seen:
+                break
+            seen.add(d.bucket_id)
+            decisions.append(d)
+        return decisions
 
 
 class OrderedScheduler:

@@ -17,11 +17,12 @@ from typing import Callable, Iterable, Optional, Sequence
 import numpy as np
 
 from .cache import BucketCache
-from .hybrid import HybridCostModel, HybridPlanner
+from .hybrid import HybridPlanner
 from .metrics import CostModel
 from .scheduler import (
     BucketScheduler,
     LifeRaftScheduler,
+    NaiveLifeRaftScheduler,
     RoundRobinScheduler,
 )
 from .workload import Query, WorkloadManager
@@ -43,6 +44,7 @@ class SimResult:
     busy_time: float
     n_batches: int
     indexed_batches: int = 0
+    n_dispatches: int = 0  # scheduling rounds (== n_batches unless fused)
 
     def row(self) -> dict:
         return dataclasses.asdict(self)
@@ -57,6 +59,7 @@ def _collect(
     n_batches: int,
     total_objects: int,
     indexed_batches: int = 0,
+    n_dispatches: int | None = None,
 ) -> SimResult:
     resp = np.array(sorted(wm.response_times().values()), dtype=np.float64)
     makespan = max(makespan, 1e-9)
@@ -73,6 +76,7 @@ def _collect(
         busy_time=busy,
         n_batches=n_batches,
         indexed_batches=indexed_batches,
+        n_dispatches=n_batches if n_dispatches is None else n_dispatches,
     )
 
 
@@ -85,11 +89,15 @@ def simulate_batched(
     hybrid: Optional[HybridPlanner] = None,
     alpha_hook: Optional[Callable[[float], float]] = None,
     bucket_of_keys=None,
+    fuse_k: int = 1,
 ) -> SimResult:
     """Batched policies (LifeRaft any alpha, RR): one bucket batch at a time.
 
     ``alpha_hook(t) -> alpha`` lets the adaptive controller retune the
     scheduler on every arrival (used by the workload-adaptive experiments).
+    ``fuse_k > 1`` services the top-k buckets per scheduling round (the
+    fused multi-bucket execution path); residency/cost accounting stays
+    per-bucket, but only one dispatch is counted.
     """
     queries = sorted(queries, key=lambda q: q.arrival_time)
     wm = WorkloadManager(bucket_of_range, bucket_of_keys)
@@ -98,6 +106,7 @@ def simulate_batched(
     busy = 0.0
     i = 0
     n_batches = 0
+    n_dispatches = 0
     indexed_batches = 0
     total_objects = 0
 
@@ -117,29 +126,52 @@ def simulate_batched(
             admit(clock)
             continue
         admit(clock)
-        decision = scheduler.select(wm, cache, clock)
-        assert decision is not None
-        if hybrid is not None:
-            plan = hybrid.plan(decision.queue_size, decision.in_cache)
-            step = plan.est_cost
-            if plan.strategy == "indexed":
-                indexed_batches += 1
-            else:
-                cache.access(decision.bucket_id)
+        if fuse_k > 1 and hasattr(scheduler, "select_topk"):
+            decisions = scheduler.select_topk(wm, cache, clock, fuse_k)
         else:
-            step = cost.batch_cost(decision.queue_size, decision.in_cache)
-            cache.access(decision.bucket_id)
-        clock += step
-        busy += step
-        total_objects += decision.queue_size
-        n_batches += 1
-        wm.complete_bucket(decision.bucket_id, clock)
+            d = scheduler.select(wm, cache, clock)
+            decisions = [d] if d is not None else []
+        assert decisions
+        round_cost = 0.0
+        for decision in decisions:
+            # Re-probe residency: within a fused round an earlier bucket's
+            # insertion can evict a later one; cost must track the actual
+            # read (for fuse_k == 1 this equals the decision snapshot).
+            in_cache = cache.contains(decision.bucket_id)
+            if hybrid is not None:
+                plan = hybrid.plan(decision.queue_size, in_cache)
+                step = plan.est_cost
+                if plan.strategy == "indexed":
+                    indexed_batches += 1
+                    # Same accounting as CrossMatchEngine._plan_and_fetch:
+                    # resident indexed reads are hits, cold ones are misses
+                    # that establish no residency.
+                    if in_cache:
+                        cache.access(decision.bucket_id)
+                    else:
+                        cache.note_bypass_miss()
+                else:
+                    cache.access(decision.bucket_id)
+            else:
+                step = cost.batch_cost(decision.queue_size, in_cache)
+                cache.access(decision.bucket_id)
+            round_cost += step
+            busy += step
+            total_objects += decision.queue_size
+            n_batches += 1
+        # One dispatch per round: all fused buckets complete together at
+        # dispatch end, matching the engines' fused semantics.
+        clock += round_cost
+        for decision in decisions:
+            wm.complete_bucket(decision.bucket_id, clock)
+        n_dispatches += 1
 
     name = getattr(scheduler, "name", type(scheduler).__name__)
     if isinstance(scheduler, LifeRaftScheduler):
-        name = f"liferaft(a={scheduler.alpha:g})"
+        name = f"{scheduler.name}(a={scheduler.alpha:g})"
     return _collect(
-        name, wm, cache, clock, busy, n_batches, total_objects, indexed_batches
+        name, wm, cache, clock, busy, n_batches, total_objects, indexed_batches,
+        n_dispatches,
     )
 
 
@@ -187,8 +219,10 @@ def run_policy(
     hybrid: Optional[HybridPlanner] = None,
     normalized: bool = False,
     bucket_of_keys=None,
+    fuse_k: int = 1,
 ) -> SimResult:
-    """Convenience dispatcher used by benchmarks: 'noshare'|'rr'|'liferaft'."""
+    """Convenience dispatcher used by benchmarks:
+    'noshare'|'rr'|'liferaft'|'liferaft-naive'."""
     if policy == "noshare":
         return simulate_noshare(
             queries, bucket_of_range, cost, cache_capacity,
@@ -198,9 +232,11 @@ def run_policy(
         sched: BucketScheduler = RoundRobinScheduler(cost)
     elif policy == "liferaft":
         sched = LifeRaftScheduler(cost, alpha=alpha, normalized=normalized)
+    elif policy == "liferaft-naive":
+        sched = NaiveLifeRaftScheduler(cost, alpha=alpha, normalized=normalized)
     else:
         raise ValueError(f"unknown policy {policy!r}")
     return simulate_batched(
         queries, bucket_of_range, sched, cost, cache_capacity, hybrid,
-        bucket_of_keys=bucket_of_keys,
+        bucket_of_keys=bucket_of_keys, fuse_k=fuse_k,
     )

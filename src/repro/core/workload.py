@@ -57,19 +57,23 @@ class WorkUnit:
 class WorkloadQueue:
     """Pending work units for one bucket."""
 
-    __slots__ = ("bucket_id", "units", "_size")
+    __slots__ = ("bucket_id", "units", "_size", "_oldest")
 
     def __init__(self, bucket_id: int) -> None:
         self.bucket_id = bucket_id
         self.units: list[WorkUnit] = []
         self._size = 0
+        self._oldest = np.inf
 
     def push(self, unit: WorkUnit) -> None:
         self.units.append(unit)
         self._size += unit.size
+        if unit.arrival_time < self._oldest:
+            self._oldest = unit.arrival_time
 
     def drain(self) -> list[WorkUnit]:
         units, self.units, self._size = self.units, [], 0
+        self._oldest = np.inf
         return units
 
     @property
@@ -79,7 +83,9 @@ class WorkloadQueue:
 
     @property
     def oldest_arrival(self) -> float:
-        return min(u.arrival_time for u in self.units) if self.units else np.inf
+        """Arrival time of the oldest pending unit, O(1) (maintained on
+        push; units are only removed wholesale by drain)."""
+        return self._oldest if self.units else np.inf
 
     def __len__(self) -> int:
         return len(self.units)
@@ -110,6 +116,23 @@ class WorkloadManager:
         self.outstanding: dict[int, set[int]] = {}  # query_id -> bucket ids
         self.queries: dict[int, Query] = {}
         self.completed: dict[int, float] = {}  # query_id -> completion time
+        self._listeners: list[Callable[[int], None]] = []
+
+    # -- change notification -------------------------------------------------
+    def subscribe(self, fn: Callable[[int], None]) -> Callable[[int], None]:
+        """Register ``fn(bucket_id)`` to fire whenever a bucket's queue
+        contents change (submit/drain).  Incremental schedulers use this to
+        rescore only touched buckets instead of rescanning every queue."""
+        self._listeners.append(fn)
+        return fn
+
+    def unsubscribe(self, fn: Callable[[int], None]) -> None:
+        if fn in self._listeners:
+            self._listeners.remove(fn)
+
+    def _notify(self, bucket_id: int) -> None:
+        for fn in self._listeners:
+            fn(bucket_id)
 
     def _decompose(self, query: Query) -> dict[int, list[int]]:
         per_bucket: dict[int, list[int]] = defaultdict(list)
@@ -150,6 +173,7 @@ class WorkloadManager:
             )
             self.queues.setdefault(b, WorkloadQueue(b)).push(unit)
             units.append(unit)
+            self._notify(b)
         if not per_bucket:  # degenerate empty query completes immediately
             self.completed[query.query_id] = query.arrival_time
             del self.outstanding[query.query_id]
@@ -177,6 +201,8 @@ class WorkloadManager:
         q = self.queues.get(bucket_id)
         if q is None:
             return done
+        if q:
+            self._notify(bucket_id)
         for unit in q.drain():
             pending = self.outstanding.get(unit.query_id)
             if pending is None:

@@ -4,15 +4,22 @@ This is the paper's Fig. 3 wired together:
 
   Query Pre-Processor  -> WorkloadManager.submit
   Workload Manager     -> per-bucket workload queues + ages
-  LifeRaft Scheduler   -> argmax U_a bucket selection
+  LifeRaft Scheduler   -> argmax U_a bucket selection (incremental index)
   Join Evaluator       -> hybrid plan + the cross-match kernel
   Bucket Cache         -> LRU over bucket payloads
 
 The join itself runs as real JAX compute (``repro.kernels.crossmatch``):
 probe objects of *every* pending query for the chosen bucket are batched
-into one device call — the paper's single shared pass.  Per-query
-predicates (here: magnitude cuts) are applied on the matched tuples before
-results are routed back to their parent queries.
+into one device call — the paper's single shared pass.  With
+``fuse_k > 1`` the engine goes one step further: the top-k buckets by U_a
+are evaluated in ONE segment-masked device call (``crossmatch_fused``),
+amortizing dispatch across buckets the way the paper amortizes disk reads
+across queries.  Probe batches are shape-bucketed to powers of two inside
+the kernel wrappers, so a long trace compiles O(log max_batch) kernel
+variants instead of one per distinct batch size.
+
+Per-query predicates (here: magnitude cuts) are applied on the matched
+tuples before results are routed back to their parent queries.
 """
 from __future__ import annotations
 
@@ -22,9 +29,9 @@ from typing import Optional, Sequence
 import numpy as np
 
 from ..core.cache import BucketCache
-from ..core.hybrid import HybridCostModel, HybridPlanner
+from ..core.hybrid import HybridPlanner
 from ..core.metrics import CostModel
-from ..core.scheduler import BucketScheduler, LifeRaftScheduler
+from ..core.scheduler import BucketScheduler, LifeRaftScheduler, SchedulerDecision
 from ..core.workload import Query, WorkloadManager
 from .catalog import SkyCatalog
 
@@ -53,6 +60,7 @@ class CrossMatchEngine:
         hybrid: Optional[HybridPlanner] = None,
         use_pallas: bool = False,
         mag_cut: float = 24.0,
+        fuse_k: int = 1,
     ) -> None:
         self.catalog = catalog
         self.cost_model = cost_model or CostModel()
@@ -63,63 +71,80 @@ class CrossMatchEngine:
         self.hybrid = hybrid
         self.use_pallas = use_pallas
         self.mag_cut = mag_cut
+        self.fuse_k = max(1, int(fuse_k))
         self.results: dict[int, list[MatchResult]] = {}
         self.sim_clock = 0.0
-        self.batches = 0
+        self.batches = 0  # buckets serviced
+        self.dispatches = 0  # device calls (== batches unless fused)
+        self.max_probe_batch = 0  # largest probe batch sent to the device
 
     # -- intake ----------------------------------------------------------------
     def submit(self, query: Query) -> None:
         self.wm.submit(query)
         self.results.setdefault(query.query_id, [])
 
-    # -- one scheduling step -----------------------------------------------------
-    def step(self) -> Optional[int]:
-        """Service one bucket batch; returns the bucket id or None if idle."""
-        decision = self.scheduler.select(self.wm, self.cache, self.sim_clock)
-        if decision is None:
-            return None
+    # -- per-bucket plumbing ---------------------------------------------------
+    def _plan_and_fetch(self, decision: SchedulerDecision):
+        """Hybrid plan + bucket payload with unified cache accounting:
+        every resident read records a hit via ``cache.access`` (the indexed
+        plan used to read through ``cache.get`` and skew the hit-rate);
+        only scan plans establish residency on a miss.
+
+        Residency is re-probed here rather than taken from the decision:
+        within a fused dispatch an earlier bucket's insertion can evict a
+        later one, and plan/cost must reflect the read that actually
+        happens (the decision's snapshot only fed the priority score)."""
         b = decision.bucket_id
+        in_cache = self.cache.contains(b)
         plan = (
-            self.hybrid.plan(decision.queue_size, decision.in_cache)
+            self.hybrid.plan(decision.queue_size, in_cache)
             if self.hybrid
             else None
         )
-        # Bucket payload through the cache (the 'disk read').
-        payload = self.cache.get(b) if self.cache.contains(b) else None
-        if payload is None:
-            payload = self.catalog.store.read(b)
-        if plan is None or plan.strategy == "scan":
-            self.cache.access(b, payload)
+        if in_cache:
+            payload = self.cache.get(b)
+            self.cache.access(b)  # counts the hit, refreshes LRU
+        else:
+            payload = self.catalog.store.read(b)  # the 'disk read'
+            if plan is None or plan.strategy == "scan":
+                self.cache.access(b, payload)
+            else:
+                # Indexed cold read: no residency, but hit_rate must see
+                # the miss or skewed stats return (symmetric accounting).
+                self.cache.note_bypass_miss()
+        cost = (
+            plan.est_cost
+            if plan is not None
+            else self.cost_model.batch_cost(decision.queue_size, in_cache)
+        )
+        return plan, payload, cost
 
-        units = list(self.wm.queue(b).units)
+    def _gather_probes(self, bucket_id: int):
+        units = list(self.wm.queue(bucket_id).units)
         probe_pos = np.concatenate(
-            [self.wm.queries[u.query_id].payload["positions"][u.object_idx] for u in units]
+            [
+                self.wm.queries[u.query_id].payload["positions"][u.object_idx]
+                for u in units
+            ]
         )
         owners = np.concatenate(
             [np.full(u.size, u.query_id, dtype=np.int64) for u in units]
         )
         probe_local = np.concatenate([u.object_idx for u in units])
+        return units, probe_pos, owners, probe_local
 
-        # --- the shared pass: one batched device call for every query ---
-        from ..kernels.crossmatch import ops as cm_ops
-
-        best_idx, best_dot, n_cand = cm_ops.crossmatch(
-            np.asarray(payload["positions"], dtype=np.float32),
-            probe_pos.astype(np.float32),
-            self.cos_thr,
-            use_pallas=self.use_pallas,
-        )
-        best_idx = np.asarray(best_idx)
-        best_dot = np.asarray(best_dot)
-        n_cand = np.asarray(n_cand)
-
+    def _route(
+        self, bucket_id, units, owners, probe_local, best_idx, best_dot, n_cand,
+        payload,
+    ) -> None:
         matched = n_cand > 0
         # Per-query predicate on the joined tuples (paper: "query specific
         # predicates are applied on the output tuples that succeed").
-        mags = np.asarray(payload["mags"])[np.clip(best_idx, 0, len(payload["mags"]) - 1)]
+        mags = np.asarray(payload["mags"])[
+            np.clip(best_idx, 0, len(payload["mags"]) - 1)
+        ]
         matched &= mags <= self.mag_cut
-        global_rows = self.catalog.partitioner.object_slice(b)
-
+        global_rows = self.catalog.partitioner.object_slice(bucket_id)
         for u in units:
             sel = (owners == u.query_id) & matched
             if not sel.any():
@@ -133,15 +158,95 @@ class CrossMatchEngine:
                     n_candidates=n_cand[sel],
                 )
             )
-        cost = (
-            plan.est_cost
-            if plan is not None
-            else self.cost_model.batch_cost(decision.queue_size, decision.in_cache)
-        )
-        self.sim_clock += cost
-        self.batches += 1
-        self.wm.complete_bucket(b, self.sim_clock)
-        return b
+
+    # -- one scheduling step -----------------------------------------------------
+    def step(self) -> Optional[int]:
+        """Service one scheduling round (1 bucket, or top-k fused); returns
+        the highest-priority bucket id serviced, or None if idle."""
+        if self.fuse_k > 1 and hasattr(self.scheduler, "select_topk"):
+            decisions = self.scheduler.select_topk(
+                self.wm, self.cache, self.sim_clock, self.fuse_k
+            )
+        else:
+            d = self.scheduler.select(self.wm, self.cache, self.sim_clock)
+            decisions = [] if d is None else [d]
+        if not decisions:
+            return None
+
+        from ..kernels.crossmatch import ops as cm_ops
+
+        total_cost = 0.0
+        if len(decisions) == 1:
+            decision = decisions[0]
+            b = decision.bucket_id
+            _, payload, cost = self._plan_and_fetch(decision)
+            total_cost += cost
+            units, probe_pos, owners, probe_local = self._gather_probes(b)
+            self.max_probe_batch = max(self.max_probe_batch, len(probe_pos))
+            # --- the shared pass: one batched device call for every query ---
+            best_idx, best_dot, n_cand = cm_ops.crossmatch(
+                np.asarray(payload["positions"], dtype=np.float32),
+                probe_pos.astype(np.float32),
+                self.cos_thr,
+                use_pallas=self.use_pallas,
+            )
+            self._route(
+                b, units, owners, probe_local,
+                np.asarray(best_idx), np.asarray(best_dot), np.asarray(n_cand),
+                payload,
+            )
+        else:
+            # --- fused multi-bucket pass: top-k buckets, ONE device call ---
+            per_bucket = []
+            bucket_parts, probe_parts, bseg, pseg = [], [], [], []
+            row_off = 0
+            for s, decision in enumerate(decisions):
+                b = decision.bucket_id
+                _, payload, cost = self._plan_and_fetch(decision)
+                total_cost += cost
+                units, probe_pos, owners, probe_local = self._gather_probes(b)
+                pos = np.asarray(payload["positions"], dtype=np.float32)
+                bucket_parts.append(pos)
+                probe_parts.append(probe_pos.astype(np.float32))
+                bseg.append(np.full(len(pos), s, np.int32))
+                pseg.append(np.full(len(probe_pos), s, np.int32))
+                per_bucket.append(
+                    (b, payload, units, owners, probe_local, row_off,
+                     len(probe_pos))
+                )
+                row_off += len(pos)
+            self.max_probe_batch = max(
+                self.max_probe_batch, sum(len(p) for p in probe_parts)
+            )
+            best_idx, best_dot, n_cand = cm_ops.crossmatch_fused(
+                np.concatenate(bucket_parts),
+                np.concatenate(probe_parts),
+                np.concatenate(bseg),
+                np.concatenate(pseg),
+                self.cos_thr,
+                use_pallas=self.use_pallas,
+            )
+            best_idx = np.asarray(best_idx)
+            best_dot = np.asarray(best_dot)
+            n_cand = np.asarray(n_cand)
+            p_off = 0
+            for b, payload, units, owners, probe_local, row_off, n_p in per_bucket:
+                sl = slice(p_off, p_off + n_p)
+                p_off += n_p
+                local_idx = np.clip(
+                    best_idx[sl] - row_off, 0, len(payload["mags"]) - 1
+                )
+                self._route(
+                    b, units, owners, probe_local,
+                    local_idx, best_dot[sl], n_cand[sl], payload,
+                )
+
+        self.sim_clock += total_cost
+        self.batches += len(decisions)
+        self.dispatches += 1
+        for decision in decisions:
+            self.wm.complete_bucket(decision.bucket_id, self.sim_clock)
+        return decisions[0].bucket_id
 
     # -- drive a whole trace -------------------------------------------------------
     def run(self, queries: Sequence[Query]) -> dict[int, list[MatchResult]]:
@@ -159,6 +264,7 @@ class CrossMatchEngine:
         return {
             "n_queries": len(rt),
             "n_batches": self.batches,
+            "n_dispatches": self.dispatches,
             "mean_response": float(np.mean(list(rt.values()))) if rt else 0.0,
             "cache_hit_rate": self.cache.stats.hit_rate,
             "makespan": self.sim_clock,

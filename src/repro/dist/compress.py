@@ -1,0 +1,72 @@
+"""Gradient compression: blockwise int8 quantization, top-k sparsification,
+and error feedback.
+
+Blockwise absmax quantization keeps the worst-case dequantization error at
+``block_absmax / 127`` per element; error feedback folds the residual into
+the next step so the compressed stream is unbiased in the long run
+(sum of payloads + final residual == sum of gradients, exactly).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "quantize_blockwise",
+    "dequantize_blockwise",
+    "error_feedback_compress",
+    "topk_compress",
+]
+
+_BLOCK = 256
+
+
+def quantize_blockwise(x: jnp.ndarray, block: int = _BLOCK):
+    """Symmetric int8 quantization with per-block absmax scales.
+
+    Returns ``(q, scales)`` where ``q`` is int8 of shape (n_blocks, block)
+    (zero-padded) and ``scales`` is float32 of shape (n_blocks,).
+    """
+    flat = jnp.ravel(x).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=1)
+    scales = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scales[:, None]), -127, 127).astype(jnp.int8)
+    return q, scales
+
+
+def dequantize_blockwise(q: jnp.ndarray, scales: jnp.ndarray, shape):
+    """Inverse of :func:`quantize_blockwise` (up to the quantization error)."""
+    flat = (q.astype(jnp.float32) * scales[:, None]).ravel()
+    size = 1
+    for d in shape:
+        size *= int(d)
+    return flat[:size].reshape(shape)
+
+
+def error_feedback_compress(grad: jnp.ndarray, residual=None, block: int = _BLOCK):
+    """Quantize ``grad + residual``; return ``((q, scales), new_residual)``.
+
+    The residual carries the quantization error forward so nothing is lost:
+    sum(dequantized payloads) + final residual == sum(grads).
+    """
+    acc = grad if residual is None else grad + residual
+    q, s = quantize_blockwise(acc, block)
+    new_residual = acc - dequantize_blockwise(q, s, acc.shape)
+    return (q, s), new_residual
+
+
+def topk_compress(grad: jnp.ndarray, frac: float, residual=None):
+    """Keep the top ``frac`` fraction of entries by magnitude; the rest go
+    into the returned residual.  ``kept + residual == grad + old_residual``."""
+    acc = grad if residual is None else grad + residual
+    flat = jnp.ravel(acc)
+    n = flat.shape[0]
+    k = max(1, int(round(frac * n)))
+    thresh = jnp.sort(jnp.abs(flat))[n - k]
+    keep = jnp.abs(acc) >= thresh
+    kept = jnp.where(keep, acc, 0.0)
+    return kept, acc - kept

@@ -22,11 +22,28 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["crossmatch_pallas", "COORD_PAD"]
+__all__ = ["crossmatch_pallas", "crossmatch_fused_pallas", "COORD_PAD", "PAD_SEG"]
 
 COORD_PAD = 8  # zero-padded coordinate dimension (MXU K alignment)
 _NEG = -2.0  # dots lie in [-1, 1]
 _BIG = 2**30
+PAD_SEG = float(2**20)  # segment id assigned to padded rows (sorts last,
+#                         exactly representable in f32, matches no real seg)
+
+
+def _accumulate(dots, j, bn, cos_thr, idx_ref, dot_ref, cnt_ref):
+    """Fold one (bm, bn) tile of dots into the running max/argmin-id/count."""
+    ids = jax.lax.broadcasted_iota(jnp.int32, dots.shape, 1) + j * bn
+    tile_best = jnp.max(dots, axis=1)
+    is_best = dots >= tile_best[:, None]
+    tile_idx = jnp.min(jnp.where(is_best, ids, jnp.int32(_BIG)), axis=1)
+    tile_cnt = jnp.sum((dots >= cos_thr).astype(jnp.int32), axis=1)
+
+    run_best = dot_ref[...]
+    improved = tile_best > run_best
+    dot_ref[...] = jnp.where(improved, tile_best, run_best)
+    idx_ref[...] = jnp.where(improved, tile_idx, idx_ref[...])
+    cnt_ref[...] = cnt_ref[...] + tile_cnt
 
 
 def _kernel(bucket_ref, probe_ref, idx_ref, dot_ref, cnt_ref, *, cos_thr, bn, band):
@@ -48,17 +65,7 @@ def _kernel(bucket_ref, probe_ref, idx_ref, dot_ref, cnt_ref, *, cos_thr, bn, ba
             (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
         )  # (bm, bn)
-        ids = jax.lax.broadcasted_iota(jnp.int32, dots.shape, 1) + j * bn
-        tile_best = jnp.max(dots, axis=1)
-        is_best = dots >= tile_best[:, None]
-        tile_idx = jnp.min(jnp.where(is_best, ids, jnp.int32(_BIG)), axis=1)
-        tile_cnt = jnp.sum((dots >= cos_thr).astype(jnp.int32), axis=1)
-
-        run_best = dot_ref[...]
-        improved = tile_best > run_best
-        dot_ref[...] = jnp.where(improved, tile_best, run_best)
-        idx_ref[...] = jnp.where(improved, tile_idx, idx_ref[...])
-        cnt_ref[...] = cnt_ref[...] + tile_cnt
+        _accumulate(dots, j, bn, cos_thr, idx_ref, dot_ref, cnt_ref)
 
     if band is None:
         _body()
@@ -107,4 +114,84 @@ def crossmatch_pallas(
         ],
         interpret=interpret,
     )(bucket, probes)
+    return out
+
+
+def _fused_kernel(
+    bucket_ref, probe_ref, bseg_ref, pseg_ref, idx_ref, dot_ref, cnt_ref,
+    *, cos_thr, bn
+):
+    """Segmented (multi-bucket) cross-match tile.
+
+    Probe row m may only match bucket rows whose segment id equals
+    ``pseg[m]`` — the grouped_matmul trick applied to the join: k buckets'
+    payloads and probe queues are concatenated segment-by-segment and
+    evaluated in ONE device call, amortizing dispatch the way the paper
+    amortizes disk reads across queries.  Both inputs arrive sorted by
+    segment, so the valid region is block-diagonal; tiles whose segment
+    ranges don't overlap are skipped entirely.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        dot_ref[...] = jnp.full_like(dot_ref, jnp.float32(_NEG))
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    ps = pseg_ref[...]  # (bm,) f32 segment ids, ascending
+    bs = bseg_ref[...]  # (bn,) f32 segment ids, ascending
+
+    def _body():
+        p = probe_ref[...]
+        b = bucket_ref[...]
+        dots = jax.lax.dot_general(
+            p, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bm, bn)
+        same = ps[:, None] == bs[None, :]
+        dots = jnp.where(same, dots, jnp.float32(_NEG))
+        _accumulate(dots, j, bn, cos_thr, idx_ref, dot_ref, cnt_ref)
+
+    overlap = (jnp.min(bs) <= jnp.max(ps)) & (jnp.max(bs) >= jnp.min(ps))
+    pl.when(overlap)(_body)
+
+
+@functools.partial(jax.jit, static_argnames=("cos_thr", "bm", "bn", "interpret"))
+def crossmatch_fused_pallas(
+    bucket: jnp.ndarray,  # (N, COORD_PAD) f32, N % bn == 0, seg-sorted
+    probes: jnp.ndarray,  # (M, COORD_PAD) f32, M % bm == 0, seg-sorted
+    bucket_seg: jnp.ndarray,  # (N,) f32 segment id per bucket row
+    probe_seg: jnp.ndarray,  # (M,) f32 segment id per probe row
+    cos_thr: float,
+    bm: int = 128,
+    bn: int = 512,
+    interpret: bool = True,
+):
+    m, kp = probes.shape
+    n, kb = bucket.shape
+    assert kp == COORD_PAD and kb == COORD_PAD, (kp, kb)
+    assert m % bm == 0 and n % bn == 0, (m, bm, n, bn)
+    grid = (m // bm, n // bn)
+    kern = functools.partial(_fused_kernel, cos_thr=cos_thr, bn=bn)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, COORD_PAD), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, COORD_PAD), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.int32),  # best_idx (concat rows)
+            jax.ShapeDtypeStruct((m,), jnp.float32),  # best_dot
+            jax.ShapeDtypeStruct((m,), jnp.int32),  # n_cand
+        ],
+        interpret=interpret,
+    )(bucket, probes, bucket_seg, probe_seg)
     return out

@@ -1,8 +1,28 @@
-"""Jitted public wrapper for the cross-match kernel.
+"""Jitted public wrappers for the cross-match kernels.
 
-Handles padding (coordinate axis -> COORD_PAD, M/N -> block multiples),
-dispatches to the Pallas kernel or the jnp reference, and slices padding
-back off.  The engine calls this; tests sweep shapes against ``ref``.
+Handles padding and dispatch for two entry points:
+
+``crossmatch``        — one bucket vs its probe batch.  Probe and bucket
+                        counts are padded to the next power of two
+                        (*shape bucketing*), so a query trace triggers
+                        O(log max_M) jit compilations instead of one per
+                        distinct batch size; ``jit_cache_size()`` exposes
+                        the compile count for benchmarks.
+``crossmatch_fused``  — k buckets in ONE device call: payloads and probe
+                        batches are concatenated with segment ids and the
+                        join is evaluated as a segment-masked matmul
+                        (grouped_matmul-style), amortizing dispatch the
+                        way the paper amortizes disk reads.
+
+Padded-row correctness: coordinates are zero-padded to ``COORD_PAD`` and a
+*marker column* is used so padded bucket rows dot to exactly -2 with every
+probe (probes carry 1.0 in the marker column, padded bucket rows -2.0,
+real bucket rows 0.0).  -2 is below any real dot (unit vectors give
+dots in [-1, 1]) and any threshold, so padded rows can never win the
+argmax nor inflate ``n_cand`` — including when ``cos_thr <= 0`` (match
+radius >= pi/2), which used to count every zero-padded row.  The fused
+path gets the same guarantee from its segment mask (padded rows carry
+segment ``PAD_SEG``, which matches no real segment).
 """
 from __future__ import annotations
 
@@ -12,10 +32,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import COORD_PAD, crossmatch_pallas
-from .ref import crossmatch_ref
+from .kernel import COORD_PAD, PAD_SEG, crossmatch_fused_pallas, crossmatch_pallas
+from .ref import crossmatch_fused_ref, crossmatch_ref
 
-__all__ = ["crossmatch"]
+__all__ = ["crossmatch", "crossmatch_fused", "jit_cache_size"]
+
+_MARKER_COL = 3  # first zero-padded coordinate column; see module docstring
+_MIN_SHAPE = 8  # floor for power-of-two shape buckets
+
+
+def _pow2_ceil(n: int, floor: int = _MIN_SHAPE) -> int:
+    n = max(int(n), floor)
+    return 1 << (n - 1).bit_length()
 
 
 def _pad_rows(x: jnp.ndarray, mult: int) -> jnp.ndarray:
@@ -26,28 +54,55 @@ def _pad_rows(x: jnp.ndarray, mult: int) -> jnp.ndarray:
     return x
 
 
-def _pad_coords(x: jnp.ndarray) -> jnp.ndarray:
-    return jnp.pad(x, ((0, 0), (0, COORD_PAD - x.shape[1])))
+def _mark_probes(probes8: jnp.ndarray) -> jnp.ndarray:
+    """Every probe row carries 1.0 in the marker column."""
+    return probes8.at[:, _MARKER_COL].set(1.0)
+
+
+def _sentinel_bucket_rows(bucket8: jnp.ndarray, n_real: int) -> jnp.ndarray:
+    """Rows past ``n_real`` get -2.0 in the marker column: their dot with
+    any (marked) probe is exactly -2, below every real dot and threshold."""
+    if bucket8.shape[0] > n_real:
+        bucket8 = bucket8.at[n_real:, _MARKER_COL].set(-2.0)
+    return bucket8
+
+
+def _host_prepare(bucket, probes):
+    """Pow2-pad, COORD_PAD-widen, and marker/sentinel-mark both operands in
+    host numpy — one array build + one transfer per operand at the jit
+    boundary instead of a chain of eager device pads."""
+    bucket = np.asarray(bucket, np.float32)
+    probes = np.asarray(probes, np.float32)
+    if bucket.shape[1] > _MARKER_COL or probes.shape[1] > _MARKER_COL:
+        raise ValueError(
+            f"coordinate width must be <= {_MARKER_COL}; column "
+            f"{_MARKER_COL} is reserved for the padded-row marker"
+        )
+    n_true, m_true = bucket.shape[0], probes.shape[0]
+    b8 = np.zeros((_pow2_ceil(n_true), COORD_PAD), np.float32)
+    b8[:n_true, : bucket.shape[1]] = bucket
+    b8[n_true:, _MARKER_COL] = -2.0
+    p8 = np.zeros((_pow2_ceil(m_true), COORD_PAD), np.float32)
+    p8[:m_true, : probes.shape[1]] = probes
+    p8[:, _MARKER_COL] = 1.0
+    return b8, p8, n_true, m_true
 
 
 @functools.partial(
     jax.jit, static_argnames=("cos_thr", "use_pallas", "bm", "bn", "band", "interpret")
 )
-def _crossmatch_jit(
-    bucket, probes, cos_thr, use_pallas, bm, bn, band, interpret
-):
-    m = probes.shape[0]
+def _crossmatch_jit(bucket8, probes8, cos_thr, use_pallas, bm, bn, band, interpret):
+    """Inputs are already COORD_PAD wide, marker-marked, and pow2-padded;
+    padded bucket rows dot to -2 with every probe on both paths."""
+    m = probes8.shape[0]
     if not use_pallas:
-        return crossmatch_ref(bucket, probes, cos_thr)
-    bucket_p = _pad_coords(_pad_rows(bucket.astype(jnp.float32), bn))
-    probes_p = _pad_coords(_pad_rows(probes.astype(jnp.float32), bm))
+        return crossmatch_ref(bucket8, probes8, cos_thr)
+    n_in = bucket8.shape[0]
+    bucket_p = _sentinel_bucket_rows(_pad_rows(bucket8, bn), n_in)
+    probes_p = _mark_probes(_pad_rows(probes8, bm))
     idx, dot, cnt = crossmatch_pallas(
         bucket_p, probes_p, cos_thr, bm=bm, bn=bn, band=band, interpret=interpret
     )
-    # Padded bucket rows are all-zero -> dot 0; they can only win when every
-    # real dot is negative, in which case best_dot < cos_thr anyway.
-    n_real = bucket.shape[0]
-    idx = jnp.minimum(idx, n_real - 1)
     return idx[:m], dot[:m], cnt[:m]
 
 
@@ -66,9 +121,93 @@ def crossmatch(
     Returns (best_idx, best_dot, n_cand), each of length len(probes).
     ``use_pallas=False`` uses the jnp reference path (fast on CPU);
     ``use_pallas=True`` runs the TPU kernel (interpret mode off-TPU).
+
+    Both operands are padded to the next power of two (in host numpy)
+    before entering the jitted core, so the number of distinct compiled
+    shapes over a whole trace is O(log2(max probe count)) rather than
+    O(#batches).
     """
-    bucket = jnp.asarray(bucket, dtype=jnp.float32)
-    probes = jnp.asarray(probes, dtype=jnp.float32)
-    return _crossmatch_jit(
-        bucket, probes, float(cos_thr), use_pallas, bm, bn, band, interpret
+    bucket8, probes8, n_true, m_true = _host_prepare(bucket, probes)
+    idx, dot, cnt = _crossmatch_jit(
+        bucket8, probes8, float(cos_thr), use_pallas, bm, bn, band, interpret
     )
+    # Padded rows cannot win (marker dot -2), but clamp for belt-and-braces.
+    idx = jnp.minimum(idx[:m_true], max(n_true - 1, 0))
+    return idx, dot[:m_true], cnt[:m_true]
+
+
+def jit_cache_size() -> int:
+    """Number of shapes the single-bucket core has compiled (benchmarks)."""
+    try:
+        return int(_crossmatch_jit._cache_size())
+    except AttributeError:  # very old jax
+        return -1
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cos_thr", "use_pallas", "bm", "bn", "interpret")
+)
+def _crossmatch_fused_jit(
+    bucket8, probes8, bucket_seg, probe_seg, cos_thr, use_pallas, bm, bn, interpret
+):
+    m = probes8.shape[0]
+    if not use_pallas:
+        return crossmatch_fused_ref(bucket8, probes8, bucket_seg, probe_seg, cos_thr)
+    n_in = bucket8.shape[0]
+    bucket_p = _pad_rows(bucket8, bn)
+    probes_p = _pad_rows(probes8, bm)
+    pad_b = bucket_p.shape[0] - n_in
+    if pad_b:
+        bucket_seg = jnp.concatenate(
+            [bucket_seg, jnp.full((pad_b,), PAD_SEG, jnp.float32)]
+        )
+    pad_p = probes_p.shape[0] - m
+    if pad_p:
+        probe_seg = jnp.concatenate(
+            [probe_seg, jnp.full((pad_p,), PAD_SEG, jnp.float32)]
+        )
+    idx, dot, cnt = crossmatch_fused_pallas(
+        bucket_p, probes_p, bucket_seg, probe_seg, cos_thr,
+        bm=bm, bn=bn, interpret=interpret,
+    )
+    return idx[:m], dot[:m], cnt[:m]
+
+
+def crossmatch_fused(
+    bucket,
+    probes,
+    bucket_seg,
+    probe_seg,
+    cos_thr: float,
+    use_pallas: bool = False,
+    bm: int = 128,
+    bn: int = 512,
+    interpret: bool = True,
+):
+    """Fused multi-bucket cross-match: ONE device call for k buckets.
+
+    ``bucket``/``probes`` are the segment-sorted concatenations of the k
+    bucket payloads / probe batches; ``bucket_seg``/``probe_seg`` give each
+    row's segment (0..k-1).  A probe only matches bucket rows of its own
+    segment; ``best_idx`` indexes the *concatenated* bucket array (callers
+    subtract their segment's row offset).  A probe whose segment is empty
+    gets n_cand == 0.
+
+    Shapes are padded to powers of two (padded rows get segment
+    ``PAD_SEG``), bounding compile count over a trace.
+    """
+    bucket8, probes8, n_true, m_true = _host_prepare(bucket, probes)
+    # The segment mask replaces the marker column: padded/real row fencing
+    # comes from PAD_SEG, so neutralize the marker values set above.
+    bucket8[:, _MARKER_COL] = 0.0
+    probes8[:, _MARKER_COL] = 0.0
+    bseg = np.full(bucket8.shape[0], PAD_SEG, np.float32)
+    bseg[:n_true] = np.asarray(bucket_seg, np.float32)
+    pseg = np.full(probes8.shape[0], PAD_SEG, np.float32)
+    pseg[:m_true] = np.asarray(probe_seg, np.float32)
+    idx, dot, cnt = _crossmatch_fused_jit(
+        bucket8, probes8, jnp.asarray(bseg), jnp.asarray(pseg),
+        float(cos_thr), use_pallas, bm, bn, interpret,
+    )
+    idx = jnp.minimum(idx[:m_true], max(n_true - 1, 0))
+    return idx, dot[:m_true], cnt[:m_true]

@@ -14,11 +14,30 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["crossmatch_ref"]
+__all__ = ["crossmatch_ref", "crossmatch_fused_ref"]
 
 
 def crossmatch_ref(bucket: jnp.ndarray, probes: jnp.ndarray, cos_thr: float):
     dots = jnp.dot(probes, bucket.T)  # (M, N)
+    best_idx = jnp.argmax(dots, axis=1).astype(jnp.int32)
+    best_dot = jnp.max(dots, axis=1)
+    n_cand = jnp.sum(dots >= cos_thr, axis=1).astype(jnp.int32)
+    return best_idx, best_dot, n_cand
+
+
+def crossmatch_fused_ref(
+    bucket: jnp.ndarray,
+    probes: jnp.ndarray,
+    bucket_seg: jnp.ndarray,
+    probe_seg: jnp.ndarray,
+    cos_thr: float,
+):
+    """Segmented oracle: probe m only considers bucket rows with
+    ``bucket_seg == probe_seg[m]``; other pairs get dot -2 (below any real
+    dot and any threshold).  ``best_idx`` indexes the concatenated bucket."""
+    dots = jnp.dot(probes, bucket.T)  # (M, N)
+    same = probe_seg[:, None] == bucket_seg[None, :]
+    dots = jnp.where(same, dots, jnp.float32(-2.0))
     best_idx = jnp.argmax(dots, axis=1).astype(jnp.int32)
     best_dot = jnp.max(dots, axis=1)
     n_cand = jnp.sum(dots >= cos_thr, axis=1).astype(jnp.int32)

@@ -69,6 +69,7 @@ class ServeConfig:
     hbm_bw: float = 819e9
     per_token_cost: float = 2e-4  # T_m seconds per request-token (marginal)
     hybrid_threshold: int = 2  # batches below this use the gathered path
+    fuse_k: int = 1  # adapters serviced per dispatch (grouped-matmul fusion)
 
 
 class LifeRaftEngine:
@@ -115,7 +116,9 @@ class LifeRaftEngine:
         return sizes, ages, cached
 
     def step(self) -> Optional[int]:
-        """Schedule + execute one adapter batch. Returns adapter id or None."""
+        """Schedule + execute one dispatch (one adapter batch, or the top-k
+        adapters fused into a single grouped call when ``fuse_k > 1``).
+        Returns the highest-priority adapter id, or None when idle."""
         sizes, ages, cached = self._queue_view()
         if not sizes:
             return None
@@ -125,49 +128,65 @@ class LifeRaftEngine:
                 ((a, q[0]) for a, q in self.queues.items() if q),
                 key=lambda ar: ar[1].arrival_time,
             )
-            batch = [req]
+            selected = [adapter]
+            batches = {adapter: [req]}
         else:
-            from ..core.workload import WorkloadManager  # noqa: F401 (doc link)
-
-            # Reuse the scheduler via a lightweight façade over adapter queues.
-            decision = _select(self.scheduler, sizes, ages, cached, self.clock)
-            adapter = decision
-            batch = self.queues[adapter][: self.cfg.max_batch]
-
-        if self.cfg.policy == "noshare":
-            # Paper's NoShare: every request pays its own state load; no
-            # residency is shared between requests.
-            t_load = self.adapters[adapter].nbytes / self.cfg.hbm_bw
-        else:
-            t_load = 0.0
-            if not self.cache.contains(adapter):
-                t_load = self.adapters[adapter].nbytes / self.cfg.hbm_bw
-            use_indexed = (
-                len(batch) < self.cfg.hybrid_threshold
-                and not self.cache.contains(adapter)
+            # Reuse the bucket scheduler via a lightweight façade over the
+            # adapter queues (the grouped-matmul kernel is the execution
+            # analogue: k adapters' batches run as one segmented matmul).
+            selected = _select(
+                self.scheduler, sizes, ages, cached, self.clock,
+                k=max(1, self.cfg.fuse_k),
             )
-            if use_indexed:
-                # Gathered multi-adapter path: no residency established.
-                self.indexed_batches += 1
-                t_load = t_load * 0.25  # stream only the rows touched
+            batches = {a: self.queues[a][: self.cfg.max_batch] for a in selected}
+
+        step_time = 0.0
+        for adapter in selected:
+            batch = batches[adapter]
+            if self.cfg.policy == "noshare":
+                # Paper's NoShare: every request pays its own state load; no
+                # residency is shared between requests.
+                t_load = self.adapters[adapter].nbytes / self.cfg.hbm_bw
             else:
-                self.cache.access(adapter)
+                t_load = 0.0
+                if not self.cache.contains(adapter):
+                    t_load = self.adapters[adapter].nbytes / self.cfg.hbm_bw
+                use_indexed = (
+                    len(batch) < self.cfg.hybrid_threshold
+                    and not self.cache.contains(adapter)
+                )
+                if use_indexed:
+                    # Gathered multi-adapter path: no residency established.
+                    self.indexed_batches += 1
+                    t_load = t_load * 0.25  # stream only the rows touched
+                else:
+                    self.cache.access(adapter)
 
-        quantum = self.cfg.decode_quantum
-        if self.decode_batch_fn is not None:
-            self.decode_batch_fn(adapter, batch, quantum)
+            quantum = self.cfg.decode_quantum
+            if self.decode_batch_fn is not None:
+                self.decode_batch_fn(adapter, batch, quantum)
 
-        # Advance virtual time: load + quantum decode steps for the batch.
-        self.clock += t_load + quantum * self.cfg.per_token_cost * max(len(batch), 1)
-        self.batches += 1
-        for r in batch:
-            r.tokens_done += quantum
-            self.tokens_served += quantum
-            if r.done:
-                r.finish_time = self.clock
-                self.completed.append(r)
-        self.queues[adapter] = [r for r in self.queues[adapter] if not r.done]
-        return adapter
+            # Load + quantum decode steps for the batch.
+            step_time += t_load + quantum * self.cfg.per_token_cost * max(
+                len(batch), 1
+            )
+            self.batches += 1
+            for r in batch:
+                r.tokens_done += quantum
+                self.tokens_served += quantum
+
+        # Advance virtual time once per dispatch; completions share the
+        # dispatch finish time (the fused call returns all segments at once).
+        self.clock += step_time
+        for adapter in selected:
+            for r in batches[adapter]:
+                if r.done and r.finish_time is None:
+                    r.finish_time = self.clock
+                    self.completed.append(r)
+            self.queues[adapter] = [
+                r for r in self.queues[adapter] if not r.done
+            ]
+        return selected[0]
 
     def run(self, requests: list[Request]) -> dict:
         """Replay a request trace to completion; returns summary metrics."""
@@ -200,8 +219,12 @@ class LifeRaftEngine:
         }
 
 
-def _select(scheduler, sizes, ages, cached, now) -> int:
-    """Adapter-queue façade for the bucket schedulers."""
+def _select(scheduler, sizes, ages, cached, now, k: int = 1) -> list[int]:
+    """Adapter-queue façade for the bucket schedulers.
+
+    Returns the top-k adapter ids (best first).  The façade does not
+    support change subscriptions, so the incremental LifeRaft scheduler
+    transparently falls back to its full-rescan path here."""
 
     class _Q:
         def __init__(self, b, n, age):
@@ -230,4 +253,6 @@ def _select(scheduler, sizes, ages, cached, now) -> int:
         def contains(self, b):
             return cached.get(b, False)
 
-    return scheduler.select(_WM(), _Cache(), now).bucket_id
+    if k > 1 and hasattr(scheduler, "select_topk"):
+        return [d.bucket_id for d in scheduler.select_topk(_WM(), _Cache(), now, k)]
+    return [scheduler.select(_WM(), _Cache(), now).bucket_id]

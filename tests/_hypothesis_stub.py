@@ -1,0 +1,121 @@
+"""Minimal stand-in for the `hypothesis` API used by this test suite.
+
+Installed into ``sys.modules`` by ``conftest.py`` ONLY when the real
+hypothesis package is unavailable (it is a dev requirement — see
+requirements-dev.txt).  Supports the subset the suite uses:
+
+  * ``strategies.integers/floats/lists``
+  * ``@given(...)`` — runs boundary examples first (min/max of every
+    strategy, so exact-endpoint assertions like ``alpha == 0.0`` are
+    exercised), then deterministic pseudo-random draws
+  * ``@settings(max_examples=..., deadline=...)``
+
+It performs no shrinking and no example database — it exists so the
+tier-1 suite collects and runs green in hermetic environments.
+"""
+from __future__ import annotations
+
+import inspect
+import itertools
+import sys
+import types
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class SearchStrategy:
+    def __init__(self, edges, draw):
+        self._edges = edges
+        self._draw = draw
+
+    def edges(self):
+        return list(self._edges)
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return SearchStrategy(
+        [min_value, max_value],
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+    )
+
+
+def floats(min_value, max_value):
+    return SearchStrategy(
+        [min_value, max_value, (min_value + max_value) / 2.0],
+        lambda rng: float(rng.uniform(min_value, max_value)),
+    )
+
+
+def lists(elements, min_size=0, max_size=10):
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(n)]
+
+    edge = [elements.edges()[0]] * max(min_size, 1)
+    return SearchStrategy([edge[:min_size] if min_size == 0 else edge], draw)
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        max_examples = getattr(fn, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+
+        def wrapper(*args, **kwargs):
+            import numpy as np
+
+            examples = list(itertools.product(*(s.edges() for s in strategies)))
+            examples = examples[:max_examples]
+            rng = np.random.default_rng(0)
+            while len(examples) < max_examples:
+                examples.append(tuple(s.draw(rng) for s in strategies))
+            for ex in examples:
+                fn(*args, *ex, **kwargs)
+
+        # Hide the strategy-filled parameters from pytest's fixture
+        # resolution: expose only the leading (non-drawn) params, e.g. self.
+        params = list(inspect.signature(fn).parameters.values())
+        keep = params[: len(params) - len(strategies)]
+        wrapper.__signature__ = inspect.Signature(keep)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco
+
+
+def _build_modules():
+    hyp = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists"):
+        setattr(strat, name, globals()[name])
+    strat.SearchStrategy = SearchStrategy
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strat
+    hyp.__version__ = "0.0.stub"
+    return hyp, strat
+
+
+def install():
+    """Register the stub as ``hypothesis`` if the real package is missing."""
+    try:
+        import hypothesis  # noqa: F401
+
+        return False
+    except ImportError:
+        hyp, strat = _build_modules()
+        sys.modules["hypothesis"] = hyp
+        sys.modules["hypothesis.strategies"] = strat
+        return True

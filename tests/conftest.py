@@ -1,0 +1,15 @@
+"""Test-session setup: make ``src`` importable without an editable install
+and fall back to the bundled hypothesis stub when the real package (a dev
+requirement, see requirements-dev.txt) is not installed."""
+import pathlib
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+_SRC = str(_ROOT / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+sys.path.insert(0, str(_ROOT / "tests"))
+import _hypothesis_stub  # noqa: E402
+
+_hypothesis_stub.install()

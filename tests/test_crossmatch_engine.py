@@ -93,6 +93,69 @@ class TestEngineCorrectness:
             })
         assert outs[0] == outs[1] == outs[2]  # scheduling is result-invariant
 
+    def test_fused_multibucket_matches_single(self, catalog):
+        """fuse_k>1 (one segmented device call for the top-k buckets) must
+        produce exactly the matches of the per-bucket path."""
+        trace = make_trace(
+            catalog, TraceConfig(n_queries=16, arrival_rate=2.0,
+                                 objects_median=60, seed=13),
+        )
+        outs = {}
+        for k in (1, 4):
+            eng = CrossMatchEngine(catalog, match_radius_rad=4e-3, fuse_k=k)
+            res = eng.run(trace)
+            outs[k] = {
+                qid: {(int(p), int(m)) for r in groups
+                      for p, m in zip(r.probe_idx, r.match_obj)}
+                for qid, groups in res.items()
+            }
+            if k > 1:  # dispatch amortization actually happened
+                assert eng.dispatches < eng.batches
+        assert outs[1] == outs[4]
+
+    def test_fused_pallas_matches_jnp(self, catalog):
+        rng = np.random.default_rng(2)
+        idx = rng.integers(0, catalog.n_objects, 96)
+        out = {}
+        for use_pallas in (False, True):
+            eng = CrossMatchEngine(
+                catalog, match_radius_rad=2e-3, use_pallas=use_pallas, fuse_k=3
+            )
+            eng.submit(_probe_query(catalog, 0, idx))
+            while eng.step() is not None:
+                pass
+            out[use_pallas] = {
+                (int(p), int(m))
+                for r in eng.results[0]
+                for p, m in zip(r.probe_idx, r.match_obj)
+            }
+        assert out[False] == out[True]
+
+    def test_indexed_plan_records_cache_hit(self, catalog):
+        """Regression: the indexed-plan path read resident payloads via
+        cache.get without recording a hit, skewing stats.hit_rate."""
+        from repro.core import HybridCostModel, HybridPlanner
+
+        planner = HybridPlanner(
+            HybridCostModel(), objects_per_bucket=200, threshold_frac=0.02
+        )
+        eng = CrossMatchEngine(
+            catalog, match_radius_rad=1e-3, hybrid=planner, cache_capacity=50
+        )
+        idx = np.arange(0, 400)
+        # Pass 1: big queues -> scan plans establish residency.
+        eng.submit(_probe_query(catalog, 0, idx))
+        while eng.step() is not None:
+            pass
+        assert eng.cache.stats.misses > 0
+        hits_before = eng.cache.stats.hits
+        # Pass 2: tiny queues on the same buckets -> indexed plans on
+        # resident payloads must now count as hits.
+        eng.submit(_probe_query(catalog, 1, idx[:8]))
+        while eng.step() is not None:
+            pass
+        assert eng.cache.stats.hits > hits_before
+
     def test_batching_shares_bucket_reads(self, catalog):
         """Two queries on the same region -> one bucket pass serves both."""
         eng = CrossMatchEngine(catalog, match_radius_rad=2e-3)

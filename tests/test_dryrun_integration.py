@@ -43,6 +43,8 @@ for shape, extra in [("train_4k", {}), ("prefill_32k", {}), ("decode_32k", {})]:
             "codeqwen1.5-7b", shape, multi_pod=mp, overrides=dict(SMALL, **extra))
         compiled = lowered.compile()
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+            cost = cost[0] if cost else {}
         coll = parse_collectives(compiled.as_text())
         key = f"{shape}|{'multi' if mp else 'single'}"
         out[key] = {

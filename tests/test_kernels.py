@@ -77,6 +77,79 @@ class TestCrossmatch:
         pi, pd, pc = cm_ops.crossmatch(bkt, prb, thr, use_pallas=True)
         np.testing.assert_array_equal(np.asarray(rc), np.asarray(pc))
 
+    @pytest.mark.parametrize("radius", [1.7, 2.0, 3.0])
+    @pytest.mark.parametrize("use_pallas", [False, True])
+    def test_padded_rows_not_counted_at_large_radius(self, radius, use_pallas):
+        """Regression: cos_thr <= 0 used to count every zero-padded bucket
+        row (dot 0 >= cos_thr) in n_cand.  The marker-column sentinel pins
+        padded-row dots at -2, below any threshold."""
+        bkt, prb = _unit(700, 7), _unit(300, 8)  # 700 % bn != 0 forces padding
+        thr = float(np.cos(radius))
+        assert thr <= 0.0
+        ri, rd, rc = crossmatch_ref(jnp.asarray(bkt), jnp.asarray(prb), thr)
+        _, d, c = cm_ops.crossmatch(bkt, prb, thr, use_pallas=use_pallas, bm=128, bn=256)
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(rc))
+        np.testing.assert_allclose(np.asarray(d), np.asarray(rd), rtol=1e-6)
+
+    def test_shape_bucketing_bounds_compiles(self):
+        """Sweeping probe counts must reuse O(log M) compiled shapes."""
+        bkt = _unit(500, 11)
+        thr = float(np.cos(0.05))
+        before = cm_ops.jit_cache_size()
+        for m in (3, 5, 6, 7, 9, 13, 40, 41, 47, 100, 117):
+            cm_ops.crossmatch(bkt, _unit(m, m), thr, use_pallas=False)
+        grown = cm_ops.jit_cache_size() - before
+        # 11 distinct sizes -> pow2 buckets {8, 16, 64, 128} -> <= 4 shapes
+        assert 0 <= grown <= 4, grown
+
+
+class TestCrossmatchFused:
+    def _segments(self, sizes_b, sizes_p, seed=0):
+        bkts = [_unit(n, seed + 10 + i) for i, n in enumerate(sizes_b)]
+        prbs = [_unit(m, seed + 50 + i) for i, m in enumerate(sizes_p)]
+        B, P = np.concatenate(bkts), np.concatenate(prbs)
+        bseg = np.repeat(np.arange(len(sizes_b)), sizes_b)
+        pseg = np.repeat(np.arange(len(sizes_p)), sizes_p)
+        return bkts, prbs, B, P, bseg, pseg
+
+    @pytest.mark.parametrize("use_pallas", [False, True])
+    @pytest.mark.parametrize("radius", [0.05, 0.5])
+    def test_matches_per_segment_oracle(self, use_pallas, radius):
+        sizes_b, sizes_p = [100, 100, 57], [40, 1, 130]
+        bkts, prbs, B, P, bseg, pseg = self._segments(sizes_b, sizes_p)
+        thr = float(np.cos(radius))
+        fi, fd, fc = cm_ops.crossmatch_fused(
+            B, P, bseg, pseg, thr, use_pallas=use_pallas, bm=128, bn=128
+        )
+        fi, fd, fc = map(np.asarray, (fi, fd, fc))
+        off_b = np.cumsum([0] + sizes_b)
+        off_p = np.cumsum([0] + sizes_p)
+        for s in range(len(sizes_b)):
+            ri, rd, rc = map(
+                np.asarray,
+                crossmatch_ref(jnp.asarray(bkts[s]), jnp.asarray(prbs[s]), thr),
+            )
+            sl = slice(off_p[s], off_p[s + 1])
+            np.testing.assert_array_equal(fc[sl], rc)
+            np.testing.assert_allclose(fd[sl], rd, rtol=1e-6)
+            dots = prbs[s] @ bkts[s].T
+            chosen = dots[np.arange(sizes_p[s]), fi[sl] - off_b[s]]
+            np.testing.assert_allclose(chosen, dots.max(axis=1), rtol=1e-5)
+
+    @pytest.mark.parametrize("use_pallas", [False, True])
+    def test_probe_segment_without_bucket_rows(self, use_pallas):
+        """A probe whose segment has no bucket rows matches nothing."""
+        B = _unit(64, 1)
+        P = _unit(10, 2)
+        bseg = np.zeros(64, np.int32)
+        pseg = np.full(10, 3, np.int32)  # segment 3 has no bucket rows
+        _, d, c = cm_ops.crossmatch_fused(
+            B, P, bseg, pseg, float(np.cos(3.0)), use_pallas=use_pallas,
+            bm=128, bn=128,
+        )
+        assert (np.asarray(c) == 0).all()
+        assert (np.asarray(d) <= -1.5).all()  # masked sentinel, never a match
+
 
 # ------------------------------------------------------------------ grouped matmul
 class TestGroupedMatmul:

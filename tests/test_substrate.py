@@ -309,6 +309,18 @@ class TestServingEngine:
         assert aged["p95_response"] <= greedy["p95_response"] * 1.5
         assert greedy["token_throughput"] >= aged["token_throughput"] * 0.95
 
+    def test_fused_dispatch_completes_all(self):
+        """fuse_k>1 services the top-k adapters per dispatch; every request
+        still completes and throughput does not degrade."""
+        t = _trace(seed=4)
+        base = LifeRaftEngine(_adapters(), ServeConfig(policy="liferaft", alpha=0.0))
+        fused = LifeRaftEngine(
+            _adapters(), ServeConfig(policy="liferaft", alpha=0.0, fuse_k=3)
+        )
+        s1, s2 = base.run(_trace(seed=4)), fused.run(t)
+        assert s2["n_completed"] == 120
+        assert s2["token_throughput"] >= 0.8 * s1["token_throughput"]
+
     def test_real_decode_hook_called(self):
         calls = []
         eng = LifeRaftEngine(
