@@ -4,7 +4,12 @@ A reduced moonshot-family MoE model decodes actual tokens while the
 LifeRaft engine schedules which tenant's (adapter's) batch runs next —
 buckets are adapter weight groups, the cache is HBM adapter slots.
 
+With ``--adaptive`` the closed-loop control plane (docs/adaptive.md)
+retunes alpha / fuse_k / §6 spill every scheduling round from live queue
+telemetry instead of running the static knobs.
+
     PYTHONPATH=src python examples/serve_multitenant.py [--policy liferaft]
+    PYTHONPATH=src python examples/serve_multitenant.py --adaptive
 """
 import argparse
 
@@ -24,6 +29,8 @@ def main():
                     choices=["liferaft", "rr", "noshare"])
     ap.add_argument("--alpha", type=float, default=0.25)
     ap.add_argument("--requests", type=int, default=60)
+    ap.add_argument("--adaptive", action="store_true",
+                    help="closed-loop alpha/fuse_k/spill control per round")
     args = ap.parse_args()
 
     cfg = smoke_config("moonshot-v1-16b-a3b")
@@ -65,16 +72,23 @@ def main():
     engine = LifeRaftEngine(
         [AdapterSpec(a, 2 << 30) for a in range(n_adapters)],
         ServeConfig(policy=args.policy, alpha=args.alpha, adapter_slots=2,
-                    max_batch=max_batch, decode_quantum=16),
+                    max_batch=max_batch, decode_quantum=16,
+                    adaptive=args.adaptive, fuse_k_max=4,
+                    spill_budget=4 * max_batch, spill_penalty_s=5e-3),
         decode_batch_fn=decode_batch,
     )
+    mode = "adaptive closed-loop" if args.adaptive else args.policy
     print(f"serving {len(reqs)} requests across {n_adapters} tenants "
-          f"({args.policy}, reduced moonshot MoE, real decode)...")
+          f"({mode}, reduced moonshot MoE, real decode)...")
     s = engine.run(reqs)
     print(f"  completed         : {s['n_completed']}")
     print(f"  token throughput  : {s['token_throughput']:.1f} tok/s (simulated clock)")
     print(f"  mean response     : {s['mean_response']:.3f}s  p95={s['p95_response']:.3f}s")
     print(f"  adapter cache hit : {s['cache_hit_rate']:.2f}")
+    if args.adaptive and engine.control is not None and engine.control.last:
+        vec = engine.control.last
+        print(f"  controller        : alpha={vec.alpha:.2f} fuse_k={vec.fuse_k} "
+              f"rounds={engine.control.rounds} spilled={s['spilled']}")
     print(f"  real tokens decoded per tenant: {decoded_tokens}")
 
 

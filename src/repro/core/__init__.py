@@ -9,6 +9,10 @@ Public surface:
   * schedulers: ``LifeRaftScheduler`` (alpha in [0,1]), ``RoundRobinScheduler``
   * ``HybridPlanner``: scan-vs-indexed per-batch plan (paper §3.4)
   * ``AlphaController``: workload-adaptive alpha (paper §4)
+  * ``ControlLoop``/``ControlVector``: the closed-loop control plane that
+    drives alpha, fuse_k and §6 spill from live telemetry (``control``)
+  * ``DispatchLoop``: the one scheduling inner loop shared by both engines
+    and the simulator (``dispatch``)
   * ``simulate``: the event-driven harness behind Figs. 7/8
 """
 from .bucket import BucketSpec, BucketStore, Partitioner
@@ -21,6 +25,14 @@ from .metrics import (
     workload_throughput,
 )
 from .adaptive import AlphaController, SaturationEstimator, TradeoffPoint, TradeoffTable
+from .control import (
+    ControlConfig,
+    ControlLoop,
+    ControlVector,
+    Telemetry,
+    apply_spill,
+)
+from .dispatch import DispatchLoop, DispatchOutcome
 from .scheduler import (
     LifeRaftScheduler,
     NaiveLifeRaftScheduler,
@@ -49,6 +61,13 @@ __all__ = [
     "SaturationEstimator",
     "TradeoffPoint",
     "TradeoffTable",
+    "ControlConfig",
+    "ControlLoop",
+    "ControlVector",
+    "Telemetry",
+    "apply_spill",
+    "DispatchLoop",
+    "DispatchOutcome",
     "LifeRaftScheduler",
     "NaiveLifeRaftScheduler",
     "OrderedScheduler",

@@ -1,0 +1,228 @@
+"""Closed-loop adaptive control plane (paper §4 adaptation + §6 overflow).
+
+The paper's headline mechanism is *adaptation*: LifeRaft "adaptively and
+incrementally trades off processing queries in arrival order and
+data-driven batch processing" based on workload saturation and queuing
+times.  This module centralizes every run-time knob into one feedback
+loop so both engines and the simulator make identical control decisions:
+
+    telemetry (per scheduling round)          ControlVector (per round)
+    ------------------------------------      -------------------------
+    arrival rate   <- SaturationEstimator     alpha   (Eq. 2 blend)
+    queue depth/age <- WorkloadManager    ->  fuse_k  (buckets/dispatch)
+    cache hit rate <- BucketCache             spill   (§6 overflow)
+    batch occupancy <- executor
+
+* ``alpha`` follows the paper's §4 rule when a ``TradeoffTable`` of
+  offline curves is available (min response s.t. throughput >= (1-tol) *
+  max), and otherwise a table-free fallback that maps EWMA saturation
+  (arrival rate + backlog depth) onto [alpha_min, alpha_max]: idle ->
+  arrival order (low response), saturated -> data-driven (throughput).
+  Either way the step per round is rate-limited (``alpha_step``) so the
+  scheduler shifts *gradually*, per the paper's framing.
+* ``fuse_k`` is AIMD on batch occupancy: when dispatches run underfull
+  and several queues are pending, fuse one more bucket into the next
+  grouped device call; when dispatches saturate, back off.
+* ``spill`` engages §6 workload overflow (with hysteresis) when resident
+  pending objects exceed a budget; ``apply_spill`` enforces it on the
+  WorkloadManager by spilling youngest-first victims (spilled queues pay
+  the cost model's T_spill surcharge in the scheduler score, so they are
+  deprioritized until age reclaims them — never starved).
+
+``DispatchLoop`` (core/dispatch.py) is the single consumer: it snapshots
+telemetry, calls :meth:`ControlLoop.update` once per scheduling round,
+and applies the resulting vector.  Engines never touch the knobs
+directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .adaptive import SaturationEstimator, TradeoffTable
+
+__all__ = [
+    "ControlVector",
+    "Telemetry",
+    "ControlConfig",
+    "ControlLoop",
+    "apply_spill",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlVector:
+    """One scheduling round's control decision, applied by DispatchLoop."""
+
+    alpha: float  # Eq. 2 in-order vs data-driven blend, in [0, 1]
+    fuse_k: int  # buckets serviced per fused dispatch, >= 1
+    spill: bool  # engage §6 workload overflow this round
+
+
+@dataclasses.dataclass(frozen=True)
+class Telemetry:
+    """Per-round sensor snapshot fed to the controller."""
+
+    now: float
+    arrival_rate: float  # EWMA queries/sec (SaturationEstimator)
+    pending_objects: int  # total pending work units across queues
+    resident_objects: int  # pending objects NOT spilled to host
+    n_queues: int  # nonempty workload queues
+    oldest_age_ms: float  # age of the oldest pending request
+    cache_hit_rate: float  # BucketCache lifetime hit rate
+    occupancy: float  # last dispatch's batch fill fraction, [0, 1]
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlConfig:
+    # -- alpha ---------------------------------------------------------------
+    table: Optional[TradeoffTable] = None  # offline §4 curves (preferred)
+    tolerance: float = 0.2  # throughput loss tolerated for response
+    alpha_init: float = 0.5
+    alpha_min: float = 0.0
+    alpha_max: float = 1.0
+    alpha_step: float = 0.1  # max |d alpha| per round (rate limit)
+    halflife_s: float = 30.0  # arrival-rate EWMA halflife
+    rate_knee: float = 0.5  # qps at which the fallback saturates
+    depth_knee: float = 2_000.0  # backlog at which the fallback saturates
+    depth_smoothing: float = 0.2  # EWMA weight for the backlog signal
+    # -- fuse_k --------------------------------------------------------------
+    fuse_k_init: int = 1
+    fuse_k_max: int = 8
+    occ_low: float = 0.5  # below: dispatches underfull -> fuse more
+    occ_high: float = 0.95  # above: dispatches saturated -> back off
+    # -- spill ---------------------------------------------------------------
+    spill_budget_objects: Optional[int] = None  # None disables overflow
+    spill_low_water: float = 0.8  # disengage below this fraction
+
+
+class ControlLoop:
+    """The one feedback loop driving alpha, fuse_k, and spill.
+
+    ``observe_arrival`` is O(1) and called on every query/request intake;
+    ``update`` is called once per scheduling round by the DispatchLoop and
+    returns the ControlVector for that round.
+    """
+
+    def __init__(self, config: ControlConfig = ControlConfig()) -> None:
+        self.cfg = config
+        self.estimator = SaturationEstimator(config.halflife_s)
+        self._alpha = min(max(config.alpha_init, config.alpha_min), config.alpha_max)
+        self._fuse_k = max(1, int(config.fuse_k_init))
+        self._depth_ewma = 0.0
+        self._spilling = False
+        self.rounds = 0
+        self.last: Optional[ControlVector] = None
+
+    # -- sensors ----------------------------------------------------------------
+    def observe_arrival(self, t: float) -> float:
+        return self.estimator.observe_arrival(t)
+
+    @property
+    def arrival_rate(self) -> float:
+        return self.estimator.rate
+
+    # -- the loop ---------------------------------------------------------------
+    def update(self, tel: Telemetry) -> ControlVector:
+        vec = ControlVector(
+            alpha=self._update_alpha(tel),
+            fuse_k=self._update_fuse_k(tel),
+            spill=self._update_spill(tel),
+        )
+        self.last = vec
+        self.rounds += 1
+        return vec
+
+    # -- alpha law --------------------------------------------------------------
+    def _update_alpha(self, tel: Telemetry) -> float:
+        cfg = self.cfg
+        target = None
+        if cfg.table is not None:
+            try:
+                target = cfg.table.select_alpha(tel.arrival_rate, cfg.tolerance)
+            except ValueError:  # empty table -> table-free fallback
+                target = None
+        if target is None:
+            target = self._fallback_target(tel)
+        target = min(max(target, cfg.alpha_min), cfg.alpha_max)
+        delta = max(-cfg.alpha_step, min(cfg.alpha_step, target - self._alpha))
+        self._alpha = min(max(self._alpha + delta, 0.0), 1.0)
+        return self._alpha
+
+    def _fallback_target(self, tel: Telemetry) -> float:
+        """Table-free EWMA law: saturation in [0,1] from arrival rate and
+        backlog depth; idle -> alpha_max (arrival order), saturated ->
+        alpha_min (data-driven batch)."""
+        cfg = self.cfg
+        w = cfg.depth_smoothing
+        self._depth_ewma += w * (tel.pending_objects - self._depth_ewma)
+        sat = max(
+            tel.arrival_rate / cfg.rate_knee if cfg.rate_knee > 0 else 0.0,
+            self._depth_ewma / cfg.depth_knee if cfg.depth_knee > 0 else 0.0,
+        )
+        sat = min(sat, 1.0)
+        return cfg.alpha_max - (cfg.alpha_max - cfg.alpha_min) * sat
+
+    # -- fuse_k law -------------------------------------------------------------
+    def _update_fuse_k(self, tel: Telemetry) -> int:
+        """AIMD on batch occupancy: underfull dispatches with pending breadth
+        fuse one more bucket; saturated dispatches back off."""
+        cfg = self.cfg
+        k = self._fuse_k
+        if tel.occupancy < cfg.occ_low and tel.n_queues > k:
+            k += 1
+        elif tel.occupancy > cfg.occ_high and k > 1:
+            k -= 1
+        k = max(1, min(k, cfg.fuse_k_max, max(tel.n_queues, 1)))
+        self._fuse_k = k
+        return k
+
+    # -- spill law --------------------------------------------------------------
+    def _update_spill(self, tel: Telemetry) -> bool:
+        cfg = self.cfg
+        if cfg.spill_budget_objects is None:
+            return False
+        if tel.resident_objects > cfg.spill_budget_objects:
+            self._spilling = True
+        elif tel.pending_objects <= cfg.spill_budget_objects * cfg.spill_low_water:
+            self._spilling = False
+        return self._spilling
+
+
+def apply_spill(wm, vector: ControlVector, config: ControlConfig) -> list[int]:
+    """Enforce the §6 overflow budget on a workload manager.
+
+    When ``vector.spill``: spill youngest-first victims (their requesters
+    have waited least; the age term reclaims them later) until resident
+    pending objects fit the budget, always leaving at least one resident
+    queue.  When disengaged: page queues back in oldest-first while they
+    fit under the low-water mark.  Returns the bucket ids whose spill
+    state changed this round.
+    """
+    budget = config.spill_budget_objects
+    if budget is None or not hasattr(wm, "spill_bucket"):
+        return []
+    changed: list[int] = []
+    nonempty = [(q.oldest_arrival, q.bucket_id, q.size) for q in wm.nonempty_queues()]
+    resident = [(t, b, n) for t, b, n in nonempty if not wm.is_spilled(b)]
+    resident_total = sum(n for _, _, n in resident)
+    if vector.spill:
+        # Youngest first == largest oldest_arrival first.
+        for t, b, n in sorted(resident, reverse=True):
+            if resident_total <= budget or len(resident) - len(changed) <= 1:
+                break
+            if wm.spill_bucket(b):
+                changed.append(b)
+                resident_total -= n
+    else:
+        low = budget * config.spill_low_water
+        spilled = sorted(
+            (t, b, n) for t, b, n in nonempty if wm.is_spilled(b)
+        )  # oldest first
+        for t, b, n in spilled:
+            if resident_total + n > low:
+                break
+            if wm.unspill_bucket(b):
+                changed.append(b)
+                resident_total += n
+    return changed

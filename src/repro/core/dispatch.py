@@ -1,0 +1,159 @@
+"""The single scheduling inner loop shared by both engines and the simulator.
+
+Before this abstraction existed, ``crossmatch/engine.py``,
+``serving/engine.py`` and ``core/simulate.py`` each re-implemented the
+select -> execute -> complete round with their own (divergent) handling of
+fuse_k, clocks and dispatch counting, and the adaptive controller was only
+consulted by one benchmark.  ``DispatchLoop`` owns that round now:
+
+    round():
+      1. snapshot Telemetry (queues, cache, occupancy, arrival EWMA)
+      2. vector = ControlLoop.update(telemetry)     # the ONE consult point
+      3. apply vector.alpha to the scheduler (hot-swap re-key)
+      4. apply_spill: enforce the §6 overflow budget on the workload
+      5. select the top vector.fuse_k buckets (incremental heap path)
+      6. cost = execute(decisions, vector)          # engine-specific compute
+      7. advance the clock, run completion, count batches/dispatches
+
+Engines supply only ``execute`` (the device call + result routing) and
+optionally ``complete`` (defaults to ``wm.complete_bucket`` per decision).
+Without a ControlLoop the loop emits a static vector from the scheduler's
+current alpha and the configured fuse_k — the adaptive and static paths
+run the same code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+from .control import ControlLoop, ControlVector, Telemetry, apply_spill
+from .scheduler import SchedulerDecision
+
+__all__ = ["DispatchOutcome", "DispatchLoop"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchOutcome:
+    """What one scheduling round did."""
+
+    decisions: tuple[SchedulerDecision, ...]
+    cost: float
+    vector: ControlVector
+    spill_changed: tuple[int, ...] = ()
+
+
+class DispatchLoop:
+    def __init__(
+        self,
+        scheduler,
+        wm,
+        cache,
+        execute: Callable[[Sequence[SchedulerDecision], ControlVector], float],
+        *,
+        control: Optional[ControlLoop] = None,
+        fuse_k: int = 1,
+        complete: Optional[Callable[[Sequence[SchedulerDecision], float], None]] = None,
+        batch_capacity: Optional[int] = None,
+        clock: float = 0.0,
+    ) -> None:
+        self.scheduler = scheduler
+        self.wm = wm
+        self.cache = cache
+        self.control = control
+        self._execute = execute
+        self._complete = complete
+        self._static_fuse_k = max(1, int(fuse_k))
+        self.batch_capacity = batch_capacity  # per-bucket batch cap (serving)
+        self.clock = clock
+        self.batches = 0  # buckets serviced
+        self.dispatches = 0  # device calls / scheduling rounds
+        self.busy = 0.0  # total execute() cost
+        self.last_vector: Optional[ControlVector] = None
+        self._occupancy = 0.0  # last round's batch fill fraction
+
+    # -- intake-side sensor -----------------------------------------------------
+    def observe_arrival(self, t: float) -> None:
+        """Feed one arrival to the controller's saturation estimator."""
+        if self.control is not None:
+            self.control.observe_arrival(t)
+
+    # -- telemetry ---------------------------------------------------------------
+    def telemetry(self) -> Telemetry:
+        # One pass over the nonempty queues (still O(B) per round — the
+        # select itself stays O(dirty·logB); push these into subscription-
+        # maintained counters if B ever dominates the round).
+        wm = self.wm
+        queues = wm.nonempty_queues()
+        is_spilled = getattr(wm, "is_spilled", None)
+        pending = resident = 0
+        oldest = self.clock
+        for q in queues:
+            pending += q.size
+            if is_spilled is None or not is_spilled(q.bucket_id):
+                resident += q.size
+            if q.oldest_arrival < oldest:
+                oldest = q.oldest_arrival
+        return Telemetry(
+            now=self.clock,
+            arrival_rate=self.control.arrival_rate if self.control else 0.0,
+            pending_objects=pending,
+            resident_objects=resident,
+            n_queues=len(queues),
+            oldest_age_ms=max(0.0, (self.clock - oldest) * 1e3),
+            cache_hit_rate=self.cache.stats.hit_rate
+            if hasattr(self.cache, "stats")
+            else 0.0,
+            occupancy=self._occupancy,
+        )
+
+    # -- one scheduling round ----------------------------------------------------
+    def round(self) -> Optional[DispatchOutcome]:
+        if self.control is not None:
+            vector = self.control.update(self.telemetry())
+            if hasattr(self.scheduler, "alpha"):
+                self.scheduler.alpha = vector.alpha
+            spill_changed = apply_spill(self.wm, vector, self.control.cfg)
+        else:
+            vector = ControlVector(
+                alpha=getattr(self.scheduler, "alpha", 0.0),
+                fuse_k=self._static_fuse_k,
+                spill=False,
+            )
+            spill_changed = []
+
+        k = vector.fuse_k
+        if k > 1 and hasattr(self.scheduler, "select_topk"):
+            decisions = self.scheduler.select_topk(self.wm, self.cache, self.clock, k)
+        else:
+            d = self.scheduler.select(self.wm, self.cache, self.clock)
+            decisions = [] if d is None else [d]
+        if not decisions:
+            return None
+
+        cost = self._execute(decisions, vector)
+        self.clock += cost
+        self.busy += cost
+        if self._complete is not None:
+            self._complete(decisions, self.clock)
+        else:
+            for d in decisions:
+                self.wm.complete_bucket(d.bucket_id, self.clock)
+        self.batches += len(decisions)
+        self.dispatches += 1
+        self._occupancy = self._measure_occupancy(decisions)
+        self.last_vector = vector
+        return DispatchOutcome(tuple(decisions), cost, vector, tuple(spill_changed))
+
+    def _measure_occupancy(self, decisions: Sequence[SchedulerDecision]) -> float:
+        """Fill fraction of the dispatch just executed, the fuse_k feedback
+        signal.  With a per-bucket batch cap (serving): serviced work over
+        k * cap.  Without one (crossmatch/simulate): the share of pending
+        work this dispatch covered — many shallow queues read as underfull,
+        pushing k up to amortize dispatch."""
+        serviced = sum(d.queue_size for d in decisions)
+        if self.batch_capacity:
+            cap = self.batch_capacity * len(decisions)
+            serviced = sum(min(d.queue_size, self.batch_capacity) for d in decisions)
+            return min(1.0, serviced / max(cap, 1))
+        remaining = sum(q.size for q in self.wm.nonempty_queues())
+        return min(1.0, serviced / max(serviced + remaining, 1))

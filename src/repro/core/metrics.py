@@ -1,22 +1,30 @@
 """Workload-throughput and aged-workload-throughput metrics (paper §3.2-3.3).
 
-Eq. 1:  U_t(i) = |W_i| / (T_b * phi(i) + T_m * |W_i|)
+Eq. 1:  U_t(i) = |W_i| / (T_b * phi(i) + T_m * |W_i| + T_spill * sigma(i))
 Eq. 2:  U_a(i) = U_t(i) * (1 - alpha) + A(i) * alpha
 
 with |W_i| the bucket's pending-object count, T_b the bucket read cost,
-T_m the per-object match cost, phi(i) = 0 iff the bucket is cached, and
-A(i) the age (ms) of the oldest pending request.
+T_m the per-object match cost, phi(i) = 0 iff the bucket is cached,
+sigma(i) = 1 iff the bucket's workload has been spilled to host (§6
+workload overflow: spilled queues pay a read-back surcharge, so they are
+deprioritized until their age term reclaims them), and A(i) the age (ms)
+of the oldest pending request.
 
 The paper combines U_t (objects/sec) and A (ms) on raw scales; we reproduce
 that faithfully (``normalized=False``) and additionally offer a
-scale-normalized blend (``normalized=True``) that divides each term by its
-max over the candidate set — useful when T_b/T_m differ by orders of
-magnitude from the paper's disk constants (e.g. HBM-derived costs).
+scale-normalized blend (``normalized=True``).  Normalization used to divide
+each term by its max over the candidate set, which coupled every score
+through two global maxima and forced the scheduler back to O(B) rescans.
+It is now *monotone rebased*: U_t is divided by its supremum 1/T_m (so the
+throughput term lands in (0, 1]) and A by the fixed ``age_scale_ms``
+horizon — both are per-bucket quantities, so argmax U_a still admits a
+now-independent rebased key and the incremental heap path applies
+(docs/perf.md §4).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping
+from typing import Mapping, Optional
 
 __all__ = ["CostModel", "workload_throughput", "aged_workload_throughput", "PAPER_COST_MODEL"]
 
@@ -28,24 +36,38 @@ class CostModel:
     For the TPU serving instantiation these are derived from the roofline:
     T_b = bucket_bytes / HBM_bw (state residency cost) and
     T_m = max(flops/peak, bytes/bw) per request.
+
+    ``T_spill`` is the §6 overflow read-back surcharge a spilled workload
+    queue pays on top of the bucket read (0 disables the score effect).
+    ``age_scale_ms`` is the fixed age-normalization horizon used by
+    ``normalized=True`` scoring.
     """
 
     T_b: float = 1.2  # seconds to read one bucket from backing store
     T_m: float = 0.13e-3  # seconds to match one object in memory
+    T_spill: float = 0.0  # seconds to page a spilled workload queue back in
+    age_scale_ms: float = 1e3  # normalized=True age horizon (ms)
 
-    def batch_cost(self, queue_size: int, in_cache: bool) -> float:
+    def batch_cost(
+        self, queue_size: int, in_cache: bool, spilled: bool = False
+    ) -> float:
         """Wall-clock cost of servicing one bucket batch (denominator of Eq. 1)."""
-        return self.T_b * (0.0 if in_cache else 1.0) + self.T_m * queue_size
+        cost = self.T_b * (0.0 if in_cache else 1.0) + self.T_m * queue_size
+        if spilled:
+            cost += self.T_spill
+        return cost
 
 
 PAPER_COST_MODEL = CostModel(T_b=1.2, T_m=0.13e-3)
 
 
-def workload_throughput(queue_size: int, in_cache: bool, cost: CostModel) -> float:
+def workload_throughput(
+    queue_size: int, in_cache: bool, cost: CostModel, spilled: bool = False
+) -> float:
     """Eq. 1 — objects consumed per second if this bucket is scheduled now."""
     if queue_size <= 0:
         return 0.0
-    return queue_size / cost.batch_cost(queue_size, in_cache)
+    return queue_size / cost.batch_cost(queue_size, in_cache, spilled)
 
 
 def aged_workload_throughput(
@@ -55,22 +77,33 @@ def aged_workload_throughput(
     cost: CostModel,
     alpha: float,
     normalized: bool = False,
+    spilled: Optional[Mapping[int, bool]] = None,
 ) -> dict[int, float]:
     """Eq. 2 for every candidate bucket; returns {bucket_id: U_a}.
 
     ``alpha`` = 0 -> pure greedy (most contentious data first);
     ``alpha`` = 1 -> arrival order (oldest request first), I/O sharing intact.
+
+    NOTE: the ``normalized=True`` arithmetic below (multiply by ``cost.T_m``
+    and by the reciprocal of ``cost.age_scale_ms``, then blend) is the
+    oracle expression the incremental scheduler's finalist re-rank
+    reproduces term for term — keep them in lockstep or decision
+    bit-identity breaks (see ``LifeRaftScheduler._select_one``).
     """
     if not 0.0 <= alpha <= 1.0:
         raise ValueError(f"alpha must be in [0,1], got {alpha}")
     ut = {
-        b: workload_throughput(n, bool(cached.get(b, False)), cost)
+        b: workload_throughput(
+            n,
+            bool(cached.get(b, False)),
+            cost,
+            bool(spilled.get(b, False)) if spilled else False,
+        )
         for b, n in queue_sizes.items()
     }
     age = {b: float(ages_ms.get(b, 0.0)) for b in queue_sizes}
     if normalized:
-        mu = max(ut.values(), default=0.0) or 1.0
-        ma = max(age.values(), default=0.0) or 1.0
-        ut = {b: v / mu for b, v in ut.items()}
-        age = {b: v / ma for b, v in age.items()}
+        inv_age = 1.0 / cost.age_scale_ms
+        ut = {b: v * cost.T_m for b, v in ut.items()}
+        age = {b: v * inv_age for b, v in age.items()}
     return {b: ut[b] * (1.0 - alpha) + age[b] * alpha for b in queue_sizes}

@@ -23,6 +23,16 @@ Two LifeRaft implementations share one contract:
   decision-identical to the oracle under floating point, the top of the heap
   is widened to a tolerance window and the finalists are re-ranked with the
   oracle's own arithmetic.
+
+``normalized=True`` scoring rescales each term by a workload-independent
+constant (U_t by 1/T_m, age by ``cost.age_scale_ms`` — see metrics.py), so
+the same rebasing applies with scaled coefficients:
+
+      S_n(i) = U_t(i)*T_m*(1-alpha) - oldest_i*1e3*(1/age_scale_ms)*alpha
+
+and the incremental heap path covers the serving engine's default config
+too (the historical O(B) fallback existed only because normalization used
+to couple scores through candidate-set maxima).
 """
 from __future__ import annotations
 
@@ -63,11 +73,12 @@ class _Entry:
     """Per-bucket incremental state (inputs to Eq. 1/2 + the rebased key)."""
 
     version: int
-    key: float  # S(i) = ut*(1-alpha) - oldest_ms*alpha
+    key: float  # S(i) = ut*(1-alpha) - oldest_ms*alpha (scaled if normalized)
     ut: float
     oldest: float
     size: int
     cached: bool
+    spilled: bool = False
 
 
 class LifeRaftScheduler:
@@ -75,10 +86,9 @@ class LifeRaftScheduler:
 
     Incremental by default: subscribes to the WorkloadManager's queue
     changes and the BucketCache's residency changes, maintaining a lazy
-    max-heap over the rebased priority.  Falls back to the full rescan when
-    ``normalized=True`` (normalization couples every candidate's score) or
-    when the workload/cache objects do not support ``subscribe`` (e.g. the
-    serving engine's lightweight façade).
+    max-heap over the rebased priority (``normalized=True`` uses the same
+    machinery with rescaled coefficients).  Falls back to the full rescan
+    only when the workload/cache objects do not support ``subscribe``.
 
     External mutation of queue internals that bypasses
     ``WorkloadManager.submit/complete_bucket`` is invisible to the
@@ -173,11 +183,18 @@ class LifeRaftScheduler:
 
     # -- incremental machinery --------------------------------------------------
     def _use_naive(self, wm, cache) -> bool:
-        return (
-            self.normalized
-            or not hasattr(wm, "subscribe")
-            or not hasattr(cache, "subscribe")
-        )
+        return not hasattr(wm, "subscribe") or not hasattr(cache, "subscribe")
+
+    def _key_coeffs(self) -> tuple[float, float]:
+        """(ut_scale, age_scale) multiplying U_t and age_ms in Eq. 2.
+
+        ``normalized=True`` rescales by the fixed constants from metrics.py;
+        both are 1.0 on the paper's raw scales.  The multiplications below
+        mirror ``aged_workload_throughput`` term for term so the finalist
+        re-rank stays bit-identical to the oracle."""
+        if self.normalized:
+            return self.cost_model.T_m, 1.0 / self.cost_model.age_scale_ms
+        return 1.0, 1.0
 
     def _unbind(self) -> None:
         for src in (self._wm, self._cache):
@@ -204,6 +221,7 @@ class LifeRaftScheduler:
         self._dirty.add(bucket_id)
 
     def _flush_dirty(self) -> None:
+        uts, ags = self._key_coeffs()
         if self._alpha_dirty:
             # Bulk re-key: ut/oldest are alpha-independent, so this needs no
             # wm/cache reads — O(B) rebuild instead of B dirty heappushes.
@@ -212,7 +230,7 @@ class LifeRaftScheduler:
             for e in self._entries.values():
                 self._version += 1
                 e.version = self._version
-                e.key = e.ut * (1.0 - alpha) - e.oldest * 1e3 * alpha
+                e.key = e.ut * uts * (1.0 - alpha) - e.oldest * 1e3 * ags * alpha
             self._heap = [
                 (-e.key, b, e.version) for b, e in self._entries.items()
             ]
@@ -220,6 +238,7 @@ class LifeRaftScheduler:
         if not self._dirty:
             return
         wm, cache, alpha = self._wm, self._cache, self._alpha
+        is_spilled = getattr(wm, "is_spilled", None)
         for b in self._dirty:
             q = wm.queues.get(b)
             if q is None or not q:
@@ -227,11 +246,14 @@ class LifeRaftScheduler:
                 continue
             size = q.size
             cached = bool(cache.contains(b))
-            ut = workload_throughput(size, cached, self.cost_model)
+            spilled = bool(is_spilled(b)) if is_spilled is not None else False
+            ut = workload_throughput(size, cached, self.cost_model, spilled)
             oldest = q.oldest_arrival
-            key = ut * (1.0 - alpha) - oldest * 1e3 * alpha
+            key = ut * uts * (1.0 - alpha) - oldest * 1e3 * ags * alpha
             self._version += 1
-            self._entries[b] = _Entry(self._version, key, ut, oldest, size, cached)
+            self._entries[b] = _Entry(
+                self._version, key, ut, oldest, size, cached, spilled
+            )
             heapq.heappush(self._heap, (-key, b, self._version))
         self._dirty.clear()
         if len(self._heap) > 4 * max(len(self._entries), 8):
@@ -258,12 +280,13 @@ class LifeRaftScheduler:
         if not self._heap:
             return None
         alpha = self._alpha
+        uts, ags = self._key_coeffs()
         s_max = -self._heap[0][0]
         # Widen to a tolerance window: the rebased key and the oracle's
         # U_a formula round differently, so any bucket within a few-ulp
         # band of the top could be the oracle argmax.  1e-9 relative is
         # ~4000x the double-precision rounding error of either formula.
-        tol = 1e-9 * (abs(s_max) + abs(now) * 1e3 * alpha + 1.0)
+        tol = 1e-9 * (abs(s_max) + abs(now) * 1e3 * ags * alpha + 1.0)
         popped: list[tuple[float, int, int]] = []
         finalists: list[tuple[int, _Entry]] = []
         while self._heap:
@@ -279,11 +302,13 @@ class LifeRaftScheduler:
             finalists.append((b, e))
         for item in popped:
             heapq.heappush(self._heap, item)
-        # Re-rank finalists with the oracle's exact arithmetic + tie-break.
+        # Re-rank finalists with the oracle's exact arithmetic + tie-break
+        # (same multiply order as aged_workload_throughput; uts/ags are 1.0
+        # on the raw scales, where x * 1.0 is an IEEE identity).
         def ua(be):
             b, e = be
             age = (now - e.oldest) * 1e3
-            return (e.ut * (1.0 - alpha) + age * alpha, -b)
+            return ((e.ut * uts) * (1.0 - alpha) + (age * ags) * alpha, -b)
 
         b, e = max(finalists, key=ua)
         return SchedulerDecision(
@@ -318,9 +343,14 @@ def _naive_scores(sched, wm, cache, now):
         return None
     sizes = {q.bucket_id: q.size for q in queues}
     cached = {q.bucket_id: cache.contains(q.bucket_id) for q in queues}
+    is_spilled = getattr(wm, "is_spilled", None)
+    spilled = (
+        {b: bool(is_spilled(b)) for b in sizes} if is_spilled is not None else None
+    )
     ages = wm.ages_ms(now)
     ua = aged_workload_throughput(
-        sizes, ages, cached, sched.cost_model, sched.alpha, sched.normalized
+        sizes, ages, cached, sched.cost_model, sched.alpha, sched.normalized,
+        spilled,
     )
     return sizes, cached, ua
 

@@ -17,6 +17,8 @@ from typing import Callable, Iterable, Optional, Sequence
 import numpy as np
 
 from .cache import BucketCache
+from .control import ControlLoop
+from .dispatch import DispatchLoop
 from .hybrid import HybridPlanner
 from .metrics import CostModel
 from .scheduler import (
@@ -90,11 +92,18 @@ def simulate_batched(
     alpha_hook: Optional[Callable[[float], float]] = None,
     bucket_of_keys=None,
     fuse_k: int = 1,
+    control: Optional[ControlLoop] = None,
 ) -> SimResult:
     """Batched policies (LifeRaft any alpha, RR): one bucket batch at a time.
 
-    ``alpha_hook(t) -> alpha`` lets the adaptive controller retune the
-    scheduler on every arrival (used by the workload-adaptive experiments).
+    The scheduling round itself (controller consult, alpha hot-swap, spill
+    enforcement, top-k select, clock/completion) is the shared
+    ``DispatchLoop`` — the same inner loop both engines run; this harness
+    supplies only the cost-model executor.
+
+    ``control`` plugs in the closed-loop ControlLoop (alpha/fuse_k/spill per
+    round); it overrides ``alpha_hook`` and the static ``fuse_k``.
+    ``alpha_hook(t) -> alpha`` remains for open-loop retuning on arrivals.
     ``fuse_k > 1`` services the top-k buckets per scheduling round (the
     fused multi-bucket execution path); residency/cost accounting stays
     per-bucket, but only one dispatch is counted.
@@ -102,45 +111,22 @@ def simulate_batched(
     queries = sorted(queries, key=lambda q: q.arrival_time)
     wm = WorkloadManager(bucket_of_range, bucket_of_keys)
     cache = BucketCache(cache_capacity)
-    clock = 0.0
-    busy = 0.0
     i = 0
-    n_batches = 0
-    n_dispatches = 0
     indexed_batches = 0
     total_objects = 0
 
-    def admit(until: float) -> None:
-        nonlocal i
-        while i < len(queries) and queries[i].arrival_time <= until:
-            q = queries[i]
-            wm.submit(q)
-            if alpha_hook is not None and isinstance(scheduler, LifeRaftScheduler):
-                scheduler.alpha = alpha_hook(q.arrival_time)
-            i += 1
-
-    while i < len(queries) or wm.n_pending_queries:
-        if not wm.nonempty_queues():
-            # Idle: jump to the next arrival.
-            clock = max(clock, queries[i].arrival_time)
-            admit(clock)
-            continue
-        admit(clock)
-        if fuse_k > 1 and hasattr(scheduler, "select_topk"):
-            decisions = scheduler.select_topk(wm, cache, clock, fuse_k)
-        else:
-            d = scheduler.select(wm, cache, clock)
-            decisions = [d] if d is not None else []
-        assert decisions
+    def execute(decisions, vector) -> float:
+        nonlocal indexed_batches, total_objects
         round_cost = 0.0
         for decision in decisions:
             # Re-probe residency: within a fused round an earlier bucket's
             # insertion can evict a later one; cost must track the actual
             # read (for fuse_k == 1 this equals the decision snapshot).
             in_cache = cache.contains(decision.bucket_id)
+            spilled = wm.is_spilled(decision.bucket_id)
             if hybrid is not None:
                 plan = hybrid.plan(decision.queue_size, in_cache)
-                step = plan.est_cost
+                step = plan.est_cost + (cost.T_spill if spilled else 0.0)
                 if plan.strategy == "indexed":
                     indexed_batches += 1
                     # Same accounting as CrossMatchEngine._plan_and_fetch:
@@ -153,25 +139,48 @@ def simulate_batched(
                 else:
                     cache.access(decision.bucket_id)
             else:
-                step = cost.batch_cost(decision.queue_size, in_cache)
+                step = cost.batch_cost(decision.queue_size, in_cache, spilled)
                 cache.access(decision.bucket_id)
             round_cost += step
-            busy += step
             total_objects += decision.queue_size
-            n_batches += 1
-        # One dispatch per round: all fused buckets complete together at
-        # dispatch end, matching the engines' fused semantics.
-        clock += round_cost
-        for decision in decisions:
-            wm.complete_bucket(decision.bucket_id, clock)
-        n_dispatches += 1
+        return round_cost
+
+    loop = DispatchLoop(
+        scheduler, wm, cache, execute, control=control, fuse_k=fuse_k
+    )
+
+    def admit(until: float) -> None:
+        nonlocal i
+        while i < len(queries) and queries[i].arrival_time <= until:
+            q = queries[i]
+            wm.submit(q)
+            loop.observe_arrival(q.arrival_time)
+            if (
+                control is None
+                and alpha_hook is not None
+                and isinstance(scheduler, LifeRaftScheduler)
+            ):
+                scheduler.alpha = alpha_hook(q.arrival_time)
+            i += 1
+
+    while i < len(queries) or wm.n_pending_queries:
+        if not wm.nonempty_queues():
+            # Idle: jump to the next arrival.
+            loop.clock = max(loop.clock, queries[i].arrival_time)
+            admit(loop.clock)
+            continue
+        admit(loop.clock)
+        outcome = loop.round()
+        assert outcome is not None
 
     name = getattr(scheduler, "name", type(scheduler).__name__)
     if isinstance(scheduler, LifeRaftScheduler):
         name = f"{scheduler.name}(a={scheduler.alpha:g})"
+    if control is not None:
+        name = f"{name}+ctl"
     return _collect(
-        name, wm, cache, clock, busy, n_batches, total_objects, indexed_batches,
-        n_dispatches,
+        name, wm, cache, loop.clock, loop.busy, loop.batches, total_objects,
+        indexed_batches, loop.dispatches,
     )
 
 
@@ -220,6 +229,7 @@ def run_policy(
     normalized: bool = False,
     bucket_of_keys=None,
     fuse_k: int = 1,
+    control: Optional[ControlLoop] = None,
 ) -> SimResult:
     """Convenience dispatcher used by benchmarks:
     'noshare'|'rr'|'liferaft'|'liferaft-naive'."""
@@ -238,5 +248,5 @@ def run_policy(
         raise ValueError(f"unknown policy {policy!r}")
     return simulate_batched(
         queries, bucket_of_range, sched, cost, cache_capacity, hybrid,
-        bucket_of_keys=bucket_of_keys, fuse_k=fuse_k,
+        bucket_of_keys=bucket_of_keys, fuse_k=fuse_k, control=control,
     )

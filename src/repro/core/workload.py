@@ -117,6 +117,7 @@ class WorkloadManager:
         self.queries: dict[int, Query] = {}
         self.completed: dict[int, float] = {}  # query_id -> completion time
         self._listeners: list[Callable[[int], None]] = []
+        self._spilled: set[int] = set()  # §6 workload overflow: queues on host
 
     # -- change notification -------------------------------------------------
     def subscribe(self, fn: Callable[[int], None]) -> Callable[[int], None]:
@@ -194,6 +195,39 @@ class WorkloadManager:
             if q
         }
 
+    # -- §6 workload overflow (spill to host) ----------------------------------
+    def is_spilled(self, bucket_id: int) -> bool:
+        return bucket_id in self._spilled
+
+    def spill_bucket(self, bucket_id: int) -> bool:
+        """Mark a bucket's pending workload as overflowed to host.  The queue
+        stays schedulable but pays the cost model's ``T_spill`` read-back
+        surcharge, so the scheduler deprioritizes it until its age term
+        reclaims it (no starvation).  Returns True if the state changed."""
+        q = self.queues.get(bucket_id)
+        if bucket_id in self._spilled or q is None or not q:
+            return False
+        self._spilled.add(bucket_id)
+        self._notify(bucket_id)
+        return True
+
+    def unspill_bucket(self, bucket_id: int) -> bool:
+        """Page a spilled workload queue back into the resident set."""
+        if bucket_id not in self._spilled:
+            return False
+        self._spilled.discard(bucket_id)
+        self._notify(bucket_id)
+        return True
+
+    def spilled_buckets(self) -> list[int]:
+        return sorted(self._spilled)
+
+    def resident_objects(self) -> int:
+        """Pending objects NOT spilled to host (the overflow budget target)."""
+        return sum(
+            q.size for b, q in self.queues.items() if q and b not in self._spilled
+        )
+
     # -- completion ------------------------------------------------------------
     def complete_bucket(self, bucket_id: int, now: float) -> list[int]:
         """Drain bucket's queue; return ids of queries that fully completed."""
@@ -201,6 +235,7 @@ class WorkloadManager:
         q = self.queues.get(bucket_id)
         if q is None:
             return done
+        self._spilled.discard(bucket_id)  # servicing pages the workload back in
         if q:
             self._notify(bucket_id)
         for unit in q.drain():

@@ -29,6 +29,8 @@ from typing import Optional, Sequence
 import numpy as np
 
 from ..core.cache import BucketCache
+from ..core.control import ControlLoop
+from ..core.dispatch import DispatchLoop
 from ..core.hybrid import HybridPlanner
 from ..core.metrics import CostModel
 from ..core.scheduler import BucketScheduler, LifeRaftScheduler, SchedulerDecision
@@ -61,6 +63,7 @@ class CrossMatchEngine:
         use_pallas: bool = False,
         mag_cut: float = 24.0,
         fuse_k: int = 1,
+        control: Optional[ControlLoop] = None,
     ) -> None:
         self.catalog = catalog
         self.cost_model = cost_model or CostModel()
@@ -73,14 +76,35 @@ class CrossMatchEngine:
         self.mag_cut = mag_cut
         self.fuse_k = max(1, int(fuse_k))
         self.results: dict[int, list[MatchResult]] = {}
-        self.sim_clock = 0.0
-        self.batches = 0  # buckets serviced
-        self.dispatches = 0  # device calls (== batches unless fused)
         self.max_probe_batch = 0  # largest probe batch sent to the device
+        # The shared scheduling inner loop; the controller (when given) is
+        # consulted there, once per round, never here.
+        self.loop = DispatchLoop(
+            self.scheduler, self.wm, self.cache, self._execute,
+            control=control, fuse_k=self.fuse_k,
+        )
+
+    # -- loop-owned counters (kept as attributes for back-compat) --------------
+    @property
+    def sim_clock(self) -> float:
+        return self.loop.clock
+
+    @sim_clock.setter
+    def sim_clock(self, value: float) -> None:
+        self.loop.clock = value
+
+    @property
+    def batches(self) -> int:
+        return self.loop.batches  # buckets serviced
+
+    @property
+    def dispatches(self) -> int:
+        return self.loop.dispatches  # device calls (== batches unless fused)
 
     # -- intake ----------------------------------------------------------------
     def submit(self, query: Query) -> None:
         self.wm.submit(query)
+        self.loop.observe_arrival(query.arrival_time)
         self.results.setdefault(query.query_id, [])
 
     # -- per-bucket plumbing ---------------------------------------------------
@@ -115,7 +139,9 @@ class CrossMatchEngine:
         cost = (
             plan.est_cost
             if plan is not None
-            else self.cost_model.batch_cost(decision.queue_size, in_cache)
+            else self.cost_model.batch_cost(
+                decision.queue_size, in_cache, self.wm.is_spilled(b)
+            )
         )
         return plan, payload, cost
 
@@ -163,16 +189,12 @@ class CrossMatchEngine:
     def step(self) -> Optional[int]:
         """Service one scheduling round (1 bucket, or top-k fused); returns
         the highest-priority bucket id serviced, or None if idle."""
-        if self.fuse_k > 1 and hasattr(self.scheduler, "select_topk"):
-            decisions = self.scheduler.select_topk(
-                self.wm, self.cache, self.sim_clock, self.fuse_k
-            )
-        else:
-            d = self.scheduler.select(self.wm, self.cache, self.sim_clock)
-            decisions = [] if d is None else [d]
-        if not decisions:
-            return None
+        outcome = self.loop.round()
+        return None if outcome is None else outcome.decisions[0].bucket_id
 
+    def _execute(self, decisions, vector) -> float:
+        """DispatchLoop executor: the batched/fused device call + routing.
+        Returns the round's wall-clock cost."""
         from ..kernels.crossmatch import ops as cm_ops
 
         total_cost = 0.0
@@ -241,12 +263,7 @@ class CrossMatchEngine:
                     local_idx, best_dot[sl], n_cand[sl], payload,
                 )
 
-        self.sim_clock += total_cost
-        self.batches += len(decisions)
-        self.dispatches += 1
-        for decision in decisions:
-            self.wm.complete_bucket(decision.bucket_id, self.sim_clock)
-        return decisions[0].bucket_id
+        return total_cost
 
     # -- drive a whole trace -------------------------------------------------------
     def run(self, queries: Sequence[Query]) -> dict[int, list[MatchResult]]:

@@ -1,5 +1,5 @@
-from .engine import AdapterSpec, LifeRaftEngine, Request, ServeConfig
+from .engine import AdapterSpec, AdapterWorkload, LifeRaftEngine, Request, ServeConfig
 from .kvcache import PagePool, SequenceAllocation
 
-__all__ = ["AdapterSpec", "LifeRaftEngine", "Request", "ServeConfig",
-           "PagePool", "SequenceAllocation"]
+__all__ = ["AdapterSpec", "AdapterWorkload", "LifeRaftEngine", "Request",
+           "ServeConfig", "PagePool", "SequenceAllocation"]

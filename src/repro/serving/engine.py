@@ -13,15 +13,24 @@ The paper's scheduler, re-instantiated for TPU serving:
   U_a             = Eq. 2 drives which adapter's batch runs next;
                     NoShare == per-request FCFS, RR == adapter round-robin
 
-Also implements the paper's §6 future work: straggler absorption (an aged
-bucket's priority grows until scheduled — slow workers cannot starve a
-tenant) and workload overflow (pending queues spill to host when the
-device batch budget is exceeded).
+The scheduling round itself is the shared ``DispatchLoop``
+(core/dispatch.py) — the same inner loop the cross-match engine and the
+simulator run.  ``AdapterWorkload`` implements the WorkloadManager
+protocol (change subscriptions, spill marks) over the per-adapter request
+queues, so the incremental lazy-heap scheduler index applies to serving's
+``normalized=True`` default instead of the historical O(B) rescan façade.
 
-The engine runs in two modes: ``simulate=True`` advances a virtual clock
-with the roofline cost model (capacity planning, Fig. 7/8-style sweeps);
-``simulate=False`` executes real decode steps of a (small) model on the
-current devices.
+§6 future work is implemented through the control plane: straggler
+absorption (an aged bucket's priority grows until scheduled) and workload
+overflow (``ServeConfig.spill_budget`` — pending queues spill to host
+when the budget is exceeded, paying ``spill_penalty_s`` to page back in).
+With ``adaptive=True`` a ``ControlLoop`` retunes alpha / fuse_k / spill
+every round from live queue state.
+
+The engine runs in two modes: the default advances a virtual clock with
+the roofline cost model (capacity planning, Fig. 7/8-style sweeps);
+``decode_batch_fn`` executes real decode steps of a (small) model on the
+current devices alongside.
 """
 from __future__ import annotations
 
@@ -31,11 +40,18 @@ from typing import Callable, Optional
 import numpy as np
 
 from ..core.cache import BucketCache
-from ..core.hybrid import HybridCostModel, HybridPlanner
+from ..core.control import ControlConfig, ControlLoop
+from ..core.dispatch import DispatchLoop
 from ..core.metrics import CostModel
 from ..core.scheduler import LifeRaftScheduler, RoundRobinScheduler
 
-__all__ = ["Request", "AdapterSpec", "ServeConfig", "LifeRaftEngine"]
+__all__ = [
+    "Request",
+    "AdapterSpec",
+    "ServeConfig",
+    "AdapterWorkload",
+    "LifeRaftEngine",
+]
 
 
 @dataclasses.dataclass
@@ -70,6 +86,127 @@ class ServeConfig:
     per_token_cost: float = 2e-4  # T_m seconds per request-token (marginal)
     hybrid_threshold: int = 2  # batches below this use the gathered path
     fuse_k: int = 1  # adapters serviced per dispatch (grouped-matmul fusion)
+    # -- closed-loop control plane (core/control.py) --------------------------
+    adaptive: bool = False  # retune alpha/fuse_k/spill every round
+    fuse_k_max: int = 8
+    alpha_step: float = 0.1
+    control_halflife_s: float = 2.0  # arrival EWMA halflife (request scale)
+    rate_knee: float = 200.0  # req/s at which saturation maxes out
+    depth_knee: float = 64.0  # pending requests at which backlog maxes out
+    spill_budget: Optional[int] = None  # §6 overflow: resident request budget
+    spill_penalty_s: float = 0.0  # T_spill host read-back surcharge
+
+
+class _AdapterQueue:
+    """WorkloadQueue façade over one adapter's pending request list."""
+
+    __slots__ = ("bucket_id", "requests")
+
+    def __init__(self, bucket_id: int) -> None:
+        self.bucket_id = bucket_id
+        self.requests: list[Request] = []
+
+    @property
+    def size(self) -> int:
+        return len(self.requests)
+
+    @property
+    def oldest_arrival(self) -> float:
+        if not self.requests:
+            return float("inf")
+        return min(r.arrival_time for r in self.requests)
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+    def __bool__(self) -> bool:
+        return bool(self.requests)
+
+
+class AdapterWorkload:
+    """WorkloadManager protocol (subscriptions, ages, §6 spill marks) over
+    per-adapter request queues.
+
+    Having a stable, subscribable workload object — instead of the façades
+    the old ``_select`` helper rebuilt on every call — is what lets the
+    serving engine ride the scheduler's incremental heap index."""
+
+    def __init__(self, adapter_ids=()) -> None:
+        self.queues: dict[int, _AdapterQueue] = {
+            a: _AdapterQueue(a) for a in adapter_ids
+        }
+        self._listeners: list[Callable[[int], None]] = []
+        self._spilled: set[int] = set()
+
+    # -- change notification ---------------------------------------------------
+    def subscribe(self, fn: Callable[[int], None]) -> Callable[[int], None]:
+        self._listeners.append(fn)
+        return fn
+
+    def unsubscribe(self, fn: Callable[[int], None]) -> None:
+        if fn in self._listeners:
+            self._listeners.remove(fn)
+
+    def _notify(self, adapter_id: int) -> None:
+        for fn in self._listeners:
+            fn(adapter_id)
+
+    # -- intake / service ------------------------------------------------------
+    def push(self, req: Request) -> None:
+        q = self.queues.setdefault(req.adapter_id, _AdapterQueue(req.adapter_id))
+        q.requests.append(req)
+        self._notify(req.adapter_id)
+
+    def take(self, adapter_id: int, n: int) -> list[Request]:
+        """The next batch (does not remove; ``retire`` trims finished)."""
+        return self.queues[adapter_id].requests[:n]
+
+    def retire(self, adapter_id: int) -> None:
+        """Drop finished requests after a dispatch; servicing also pages a
+        spilled adapter back in (mirrors WorkloadManager.complete_bucket)."""
+        q = self.queues[adapter_id]
+        q.requests = [r for r in q.requests if not r.done]
+        self._spilled.discard(adapter_id)
+        self._notify(adapter_id)
+
+    # -- scheduler-facing protocol ---------------------------------------------
+    def nonempty_queues(self) -> list[_AdapterQueue]:
+        return [q for q in self.queues.values() if q]
+
+    def queue(self, adapter_id: int) -> _AdapterQueue:
+        return self.queues.setdefault(adapter_id, _AdapterQueue(adapter_id))
+
+    def ages_ms(self, now: float) -> dict[int, float]:
+        return {
+            a: (now - q.oldest_arrival) * 1e3
+            for a, q in self.queues.items()
+            if q
+        }
+
+    def pending_objects(self) -> int:
+        return sum(q.size for q in self.queues.values())
+
+    # -- §6 workload overflow ---------------------------------------------------
+    def is_spilled(self, adapter_id: int) -> bool:
+        return adapter_id in self._spilled
+
+    def spill_bucket(self, adapter_id: int) -> bool:
+        q = self.queues.get(adapter_id)
+        if adapter_id in self._spilled or q is None or not q:
+            return False
+        self._spilled.add(adapter_id)
+        self._notify(adapter_id)
+        return True
+
+    def unspill_bucket(self, adapter_id: int) -> bool:
+        if adapter_id not in self._spilled:
+            return False
+        self._spilled.discard(adapter_id)
+        self._notify(adapter_id)
+        return True
+
+    def spilled_buckets(self) -> list[int]:
+        return sorted(self._spilled)
 
 
 class LifeRaftEngine:
@@ -78,12 +215,15 @@ class LifeRaftEngine:
         adapters: list[AdapterSpec],
         config: ServeConfig = ServeConfig(),
         decode_batch_fn: Optional[Callable] = None,
+        control: Optional[ControlLoop] = None,
     ) -> None:
         self.cfg = config
         self.adapters = {a.adapter_id: a for a in adapters}
         mean_bytes = float(np.mean([a.nbytes for a in adapters])) if adapters else 1.0
         self.cost = CostModel(
-            T_b=mean_bytes / config.hbm_bw, T_m=config.per_token_cost
+            T_b=mean_bytes / config.hbm_bw,
+            T_m=config.per_token_cost,
+            T_spill=config.spill_penalty_s,
         )
         if config.policy == "rr":
             self.scheduler = RoundRobinScheduler(self.cost)
@@ -91,76 +231,88 @@ class LifeRaftEngine:
             alpha = 1.0 if config.policy == "noshare" else config.alpha
             self.scheduler = LifeRaftScheduler(self.cost, alpha=alpha, normalized=True)
         self.cache = BucketCache(config.adapter_slots)
-        self.queues: dict[int, list[Request]] = {a.adapter_id: [] for a in adapters}
+        self.workload = AdapterWorkload([a.adapter_id for a in adapters])
         self.decode_batch_fn = decode_batch_fn
-        self.clock = 0.0
         self.completed: list[Request] = []
-        self.batches = 0
         self.indexed_batches = 0
         self.tokens_served = 0
+        self._inflight: dict[int, list[Request]] = {}
+        if control is None and config.adaptive:
+            control = ControlLoop(
+                ControlConfig(
+                    alpha_init=config.alpha,
+                    alpha_step=config.alpha_step,
+                    halflife_s=config.control_halflife_s,
+                    rate_knee=config.rate_knee,
+                    depth_knee=config.depth_knee,
+                    fuse_k_init=config.fuse_k,
+                    fuse_k_max=config.fuse_k_max,
+                    spill_budget_objects=config.spill_budget,
+                )
+            )
+        self.control = control
+        self.loop = DispatchLoop(
+            self.scheduler,
+            self.workload,
+            self.cache,
+            self._execute,
+            control=control,
+            fuse_k=config.fuse_k,
+            complete=self._complete,
+            batch_capacity=config.max_batch,
+        )
+
+    # ------------------------------------------------------------- views
+    @property
+    def clock(self) -> float:
+        return self.loop.clock
+
+    @clock.setter
+    def clock(self, value: float) -> None:
+        self.loop.clock = value
+
+    @property
+    def batches(self) -> int:
+        return self.loop.batches
+
+    @property
+    def queues(self) -> dict[int, list[Request]]:
+        return {a: q.requests for a, q in self.workload.queues.items()}
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
         self.clock = max(self.clock, req.arrival_time)
-        self.queues.setdefault(req.adapter_id, []).append(req)
+        self.workload.push(req)
+        self.loop.observe_arrival(req.arrival_time)
 
-    # ------------------------------------------------------------- scheduling
-    def _queue_view(self):
-        sizes = {a: len(q) for a, q in self.queues.items() if q}
-        ages = {
-            a: (self.clock - min(r.arrival_time for r in q)) * 1e3
-            for a, q in self.queues.items()
-            if q
-        }
-        cached = {a: self.cache.contains(a) for a in sizes}
-        return sizes, ages, cached
-
-    def step(self) -> Optional[int]:
-        """Schedule + execute one dispatch (one adapter batch, or the top-k
-        adapters fused into a single grouped call when ``fuse_k > 1``).
-        Returns the highest-priority adapter id, or None when idle."""
-        sizes, ages, cached = self._queue_view()
-        if not sizes:
-            return None
-        if self.cfg.policy == "noshare":
-            # FCFS across all adapters, one request at a time, no batching.
-            adapter, req = min(
-                ((a, q[0]) for a, q in self.queues.items() if q),
-                key=lambda ar: ar[1].arrival_time,
-            )
-            selected = [adapter]
-            batches = {adapter: [req]}
-        else:
-            # Reuse the bucket scheduler via a lightweight façade over the
-            # adapter queues (the grouped-matmul kernel is the execution
-            # analogue: k adapters' batches run as one segmented matmul).
-            selected = _select(
-                self.scheduler, sizes, ages, cached, self.clock,
-                k=max(1, self.cfg.fuse_k),
-            )
-            batches = {a: self.queues[a][: self.cfg.max_batch] for a in selected}
-
+    # ------------------------------------------------------------- execution
+    def _execute(self, decisions, vector) -> float:
+        """DispatchLoop executor: load + quantum decode for each selected
+        adapter's batch (one grouped device call when fused)."""
         step_time = 0.0
-        for adapter in selected:
-            batch = batches[adapter]
-            if self.cfg.policy == "noshare":
-                # Paper's NoShare: every request pays its own state load; no
-                # residency is shared between requests.
+        self._inflight = {}
+        for d in decisions:
+            adapter = d.bucket_id
+            batch = self.workload.take(adapter, self.cfg.max_batch)
+            self._inflight[adapter] = batch
+            t_load = 0.0
+            if not self.cache.contains(adapter):
                 t_load = self.adapters[adapter].nbytes / self.cfg.hbm_bw
+            if self.workload.is_spilled(adapter):
+                t_load += self.cost.T_spill  # §6 host read-back surcharge
+            use_indexed = (
+                len(batch) < self.cfg.hybrid_threshold
+                and not self.cache.contains(adapter)
+            )
+            if use_indexed:
+                # Gathered multi-adapter path: no residency established, but
+                # hit_rate must see the miss (symmetric accounting, same as
+                # CrossMatchEngine._plan_and_fetch).
+                self.indexed_batches += 1
+                self.cache.note_bypass_miss()
+                t_load = t_load * 0.25  # stream only the rows touched
             else:
-                t_load = 0.0
-                if not self.cache.contains(adapter):
-                    t_load = self.adapters[adapter].nbytes / self.cfg.hbm_bw
-                use_indexed = (
-                    len(batch) < self.cfg.hybrid_threshold
-                    and not self.cache.contains(adapter)
-                )
-                if use_indexed:
-                    # Gathered multi-adapter path: no residency established.
-                    self.indexed_batches += 1
-                    t_load = t_load * 0.25  # stream only the rows touched
-                else:
-                    self.cache.access(adapter)
+                self.cache.access(adapter)
 
             quantum = self.cfg.decode_quantum
             if self.decode_batch_fn is not None:
@@ -170,43 +322,84 @@ class LifeRaftEngine:
             step_time += t_load + quantum * self.cfg.per_token_cost * max(
                 len(batch), 1
             )
-            self.batches += 1
             for r in batch:
                 r.tokens_done += quantum
                 self.tokens_served += quantum
+        return step_time
 
-        # Advance virtual time once per dispatch; completions share the
-        # dispatch finish time (the fused call returns all segments at once).
-        self.clock += step_time
-        for adapter in selected:
-            for r in batches[adapter]:
+    def _complete(self, decisions, now: float) -> None:
+        """Completions share the dispatch finish time (the fused call
+        returns all segments at once)."""
+        for d in decisions:
+            adapter = d.bucket_id
+            for r in self._inflight.get(adapter, ()):
                 if r.done and r.finish_time is None:
-                    r.finish_time = self.clock
+                    r.finish_time = now
                     self.completed.append(r)
-            self.queues[adapter] = [
-                r for r in self.queues[adapter] if not r.done
-            ]
-        return selected[0]
+            self.workload.retire(adapter)
+        self._inflight = {}
+
+    # ------------------------------------------------------------- scheduling
+    def step(self) -> Optional[int]:
+        """Schedule + execute one dispatch (one adapter batch, or the top-k
+        adapters fused into a single grouped call when ``fuse_k > 1``).
+        Returns the highest-priority adapter id, or None when idle."""
+        if self.cfg.policy == "noshare":
+            return self._step_noshare()
+        outcome = self.loop.round()
+        return None if outcome is None else outcome.decisions[0].bucket_id
+
+    def _step_noshare(self) -> Optional[int]:
+        """Paper's NoShare baseline: FCFS across all adapters, one request
+        at a time, no batching; every request pays its own state load."""
+        pending = [
+            (q.requests[0].arrival_time, a)
+            for a, q in self.workload.queues.items()
+            if q
+        ]
+        if not pending:
+            return None
+        _, adapter = min(pending)
+        req = self.workload.queues[adapter].requests[0]
+        t_load = self.adapters[adapter].nbytes / self.cfg.hbm_bw
+        quantum = self.cfg.decode_quantum
+        if self.decode_batch_fn is not None:
+            self.decode_batch_fn(adapter, [req], quantum)
+        req.tokens_done += quantum
+        self.tokens_served += quantum
+        step_time = t_load + quantum * self.cfg.per_token_cost
+        self.clock += step_time
+        self.loop.busy += step_time
+        self.loop.batches += 1
+        self.loop.dispatches += 1
+        if req.done and req.finish_time is None:
+            req.finish_time = self.clock
+            self.completed.append(req)
+        self.workload.retire(adapter)
+        return adapter
 
     def run(self, requests: list[Request]) -> dict:
         """Replay a request trace to completion; returns summary metrics."""
         pending = sorted(requests, key=lambda r: r.arrival_time)
         i = 0
-        while i < len(pending) or any(self.queues.values()):
-            if not any(self.queues.values()):
+        while i < len(pending) or self.workload.nonempty_queues():
+            if not self.workload.nonempty_queues():
                 self.clock = max(self.clock, pending[i].arrival_time)
             while i < len(pending) and pending[i].arrival_time <= self.clock:
                 self.submit(pending[i])
                 i += 1
-            if any(self.queues.values()):
+            if self.workload.nonempty_queues():
                 self.step()
         return self.summary()
 
     def summary(self) -> dict:
         resp = [r.finish_time - r.arrival_time for r in self.completed]
+        vec = self.loop.last_vector
         return {
             "policy": self.cfg.policy,
             "alpha": getattr(self.scheduler, "alpha", None),
+            "adaptive": self.control is not None,
+            "fuse_k": vec.fuse_k if vec is not None else self.cfg.fuse_k,
             "n_completed": len(self.completed),
             "makespan": self.clock,
             "token_throughput": self.tokens_served / max(self.clock, 1e-9),
@@ -216,43 +409,5 @@ class LifeRaftEngine:
             "cache_hit_rate": self.cache.stats.hit_rate,
             "batches": self.batches,
             "indexed_batches": self.indexed_batches,
+            "spilled": self.workload.spilled_buckets(),
         }
-
-
-def _select(scheduler, sizes, ages, cached, now, k: int = 1) -> list[int]:
-    """Adapter-queue façade for the bucket schedulers.
-
-    Returns the top-k adapter ids (best first).  The façade does not
-    support change subscriptions, so the incremental LifeRaft scheduler
-    transparently falls back to its full-rescan path here."""
-
-    class _Q:
-        def __init__(self, b, n, age):
-            self.bucket_id = b
-            self.size = n
-            self._age = age
-
-        @property
-        def oldest_arrival(self):
-            return now - self._age / 1e3
-
-        def __bool__(self):
-            return self.size > 0
-
-    class _WM:
-        def nonempty_queues(self):
-            return [_Q(b, sizes[b], ages[b]) for b in sizes]
-
-        def queue(self, b):
-            return _Q(b, sizes[b], ages[b])
-
-        def ages_ms(self, t):
-            return dict(ages)
-
-    class _Cache:
-        def contains(self, b):
-            return cached.get(b, False)
-
-    if k > 1 and hasattr(scheduler, "select_topk"):
-        return [d.bucket_id for d in scheduler.select_topk(_WM(), _Cache(), now, k)]
-    return [scheduler.select(_WM(), _Cache(), now).bucket_id]

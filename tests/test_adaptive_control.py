@@ -1,0 +1,373 @@
+"""Property tests for the adaptive layer (paper §4) and the closed-loop
+control plane: TradeoffTable curve lookup, AlphaController constraints,
+SaturationEstimator convergence, ControlLoop feedback laws, §6 spill
+enforcement, and the shared DispatchLoop end to end."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AlphaController,
+    BucketCache,
+    ControlConfig,
+    ControlLoop,
+    ControlVector,
+    CostModel,
+    LifeRaftScheduler,
+    NaiveLifeRaftScheduler,
+    Query,
+    SaturationEstimator,
+    Telemetry,
+    TradeoffPoint,
+    TradeoffTable,
+    WorkloadManager,
+    apply_spill,
+    run_policy,
+)
+
+
+def _identity_range(lo, hi):
+    return np.arange(lo, hi + 1)
+
+
+def _mk_query(qid, t, buckets):
+    ks = np.asarray(buckets, dtype=np.uint64)
+    return Query(qid, t, ks, ks)
+
+
+def _random_table(rng, n_curves, n_points):
+    t = TradeoffTable()
+    for _ in range(n_curves):
+        sat = float(rng.uniform(0.01, 2.0))
+        pts = [
+            TradeoffPoint(
+                alpha=float(a),
+                throughput=float(rng.uniform(0.1, 2.0)),
+                response=float(rng.uniform(0.5, 20.0)),
+            )
+            for a in np.linspace(0.0, 1.0, n_points)
+        ]
+        t.add(sat, pts)
+    return t
+
+
+# ---------------------------------------------------------------- TradeoffTable
+class TestTradeoffTableProperties:
+    @given(st.integers(0, 10_000), st.integers(1, 6), st.integers(2, 6),
+           st.floats(0.0, 3.0))
+    @settings(max_examples=40, deadline=None)
+    def test_nearest_curve_lookup_returns_a_stored_curve(
+        self, seed, n_curves, n_points, probe_sat
+    ):
+        rng = np.random.default_rng(seed)
+        table = _random_table(rng, n_curves, n_points)
+        curve = table.curve(probe_sat)
+        stored = [table.curve(s) for s in table.saturations()]
+        assert any(curve is c for c in stored)
+        # ...and it is the curve at the *nearest* measured saturation.
+        sats = table.saturations()
+        nearest = min(sats, key=lambda s: abs(s - probe_sat))
+        assert abs(sats[[table.curve(s) is curve for s in sats].index(True)]
+                   - probe_sat) <= abs(nearest - probe_sat) + 1e-12
+
+    @given(st.integers(0, 10_000), st.integers(1, 5), st.integers(2, 6),
+           st.floats(0.0, 1.0), st.floats(0.0, 3.0))
+    @settings(max_examples=40, deadline=None)
+    def test_select_alpha_satisfies_throughput_tolerance(
+        self, seed, n_curves, n_points, tolerance, probe_sat
+    ):
+        rng = np.random.default_rng(seed)
+        table = _random_table(rng, n_curves, n_points)
+        alpha = table.select_alpha(probe_sat, tolerance)
+        pts = table.curve(probe_sat)
+        tmax = max(p.throughput for p in pts)
+        chosen = [p for p in pts if p.alpha == alpha]
+        assert chosen, "selected alpha must be a stored point"
+        assert chosen[0].throughput >= (1.0 - tolerance) * tmax - 1e-12
+        # ...and has minimal response among the throughput-feasible points.
+        ok = [p for p in pts if p.throughput >= (1.0 - tolerance) * tmax]
+        assert chosen[0].response == min(p.response for p in ok)
+
+    def test_empty_table_raises(self):
+        with pytest.raises(ValueError):
+            TradeoffTable().curve(0.5)
+
+
+# ---------------------------------------------------------------- estimator
+class TestSaturationEstimator:
+    @given(st.integers(0, 10_000), st.integers(2, 80))
+    @settings(max_examples=30, deadline=None)
+    def test_rate_nonnegative_under_random_arrivals(self, seed, n):
+        rng = np.random.default_rng(seed)
+        est = SaturationEstimator(halflife_s=5.0)
+        t = 0.0
+        for _ in range(n):
+            t += float(rng.exponential(0.3)) + 1e-6
+            assert est.observe_arrival(t) >= 0.0
+        assert est.rate >= 0.0
+
+    @given(st.floats(0.05, 5.0))
+    @settings(max_examples=20, deadline=None)
+    def test_converges_on_constant_gap_stream(self, gap):
+        """A constant-gap arrival stream must converge to rate 1/gap."""
+        est = SaturationEstimator(halflife_s=2.0 * gap)
+        t = 0.0
+        for _ in range(400):
+            t += gap
+            est.observe_arrival(t)
+        assert est.rate == pytest.approx(1.0 / gap, rel=1e-3)
+
+
+# ---------------------------------------------------------------- controller
+class TestAlphaControllerProperties:
+    @given(st.integers(0, 10_000), st.integers(1, 4), st.floats(0.01, 0.3))
+    @settings(max_examples=25, deadline=None)
+    def test_alpha_stays_bounded_and_rate_limited(self, seed, n_curves, step):
+        rng = np.random.default_rng(seed)
+        ctl = AlphaController(
+            _random_table(rng, n_curves, 4),
+            tolerance=0.2,
+            initial_alpha=0.5,
+            max_step=step,
+        )
+        t, prev = 0.0, ctl.alpha
+        for _ in range(60):
+            t += float(rng.exponential(0.5)) + 1e-6
+            a = ctl.update_on_arrival(t)
+            assert 0.0 <= a <= 1.0
+            assert abs(a - prev) <= step + 1e-12
+            prev = a
+
+
+# ---------------------------------------------------------------- control loop
+def _tel(now=0.0, rate=0.0, pending=0, resident=None, n_queues=0,
+         occupancy=0.0, hit=0.0, oldest=0.0):
+    return Telemetry(
+        now=now,
+        arrival_rate=rate,
+        pending_objects=pending,
+        resident_objects=pending if resident is None else resident,
+        n_queues=n_queues,
+        oldest_age_ms=oldest,
+        cache_hit_rate=hit,
+        occupancy=occupancy,
+    )
+
+
+class TestControlLoop:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_vector_always_in_bounds(self, seed):
+        rng = np.random.default_rng(seed)
+        cfg = ControlConfig(fuse_k_max=6, alpha_step=0.15,
+                            spill_budget_objects=500)
+        loop = ControlLoop(cfg)
+        prev_alpha = cfg.alpha_init
+        for _ in range(50):
+            vec = loop.update(_tel(
+                now=float(rng.uniform(0, 100)),
+                rate=float(rng.uniform(0, 5)),
+                pending=int(rng.integers(0, 3000)),
+                n_queues=int(rng.integers(0, 40)),
+                occupancy=float(rng.uniform(0, 1)),
+            ))
+            assert 0.0 <= vec.alpha <= 1.0
+            assert abs(vec.alpha - prev_alpha) <= cfg.alpha_step + 1e-12
+            assert 1 <= vec.fuse_k <= cfg.fuse_k_max
+            prev_alpha = vec.alpha
+
+    def test_fallback_alpha_tracks_saturation(self):
+        """Idle -> alpha drifts to arrival order; saturated -> data-driven."""
+        loop = ControlLoop(ControlConfig(rate_knee=1.0, depth_knee=100.0,
+                                         alpha_init=0.5))
+        for _ in range(30):
+            a_idle = loop.update(_tel(rate=0.0, pending=0)).alpha
+        assert a_idle == pytest.approx(1.0)
+        for _ in range(50):
+            a_hot = loop.update(_tel(rate=5.0, pending=1000)).alpha
+        assert a_hot == pytest.approx(0.0)
+
+    def test_table_path_overrides_fallback(self):
+        table = TradeoffTable()
+        table.add(0.1, [TradeoffPoint(0.0, 1.0, 10.0),
+                        TradeoffPoint(0.75, 0.95, 4.0)])
+        loop = ControlLoop(ControlConfig(table=table, alpha_init=0.0,
+                                         alpha_step=0.25))
+        for _ in range(10):
+            vec = loop.update(_tel(rate=0.1, pending=0))
+        assert vec.alpha == pytest.approx(0.75)  # the table's pick, not 1.0
+
+    def test_fuse_k_aimd(self):
+        loop = ControlLoop(ControlConfig(fuse_k_max=8))
+        # Underfull dispatches with pending breadth -> additive increase.
+        for _ in range(5):
+            k = loop.update(_tel(occupancy=0.1, n_queues=20)).fuse_k
+        assert k == 6
+        # Saturated dispatches -> back off.
+        for _ in range(3):
+            k = loop.update(_tel(occupancy=1.0, n_queues=20)).fuse_k
+        assert k == 3
+        # Never exceeds the number of nonempty queues.
+        k = loop.update(_tel(occupancy=0.0, n_queues=2)).fuse_k
+        assert k <= 2
+
+    def test_spill_hysteresis(self):
+        cfg = ControlConfig(spill_budget_objects=100, spill_low_water=0.5)
+        loop = ControlLoop(cfg)
+        assert not loop.update(_tel(pending=90)).spill
+        assert loop.update(_tel(pending=150)).spill
+        # Stays engaged until pending falls under the low-water mark.
+        assert loop.update(_tel(pending=80)).spill
+        assert not loop.update(_tel(pending=40)).spill
+
+    def test_spill_disabled_without_budget(self):
+        loop = ControlLoop(ControlConfig())
+        assert not loop.update(_tel(pending=10**9)).spill
+
+
+# ---------------------------------------------------------------- spill
+class TestSpillEnforcement:
+    def _workload(self):
+        wm = WorkloadManager(_identity_range)
+        # bucket 1: oldest, bucket 2: middle, bucket 3: youngest; 4 objs each
+        for qid, (t, b) in enumerate([(0.0, 1), (1.0, 2), (2.0, 3)]):
+            wm.submit(_mk_query(qid, t, [b] * 4))
+        return wm
+
+    def test_apply_spill_youngest_first_respects_budget(self):
+        wm = self._workload()
+        cfg = ControlConfig(spill_budget_objects=8)
+        changed = apply_spill(wm, ControlVector(0.5, 1, True), cfg)
+        assert changed == [3]  # youngest spilled first
+        assert wm.is_spilled(3) and not wm.is_spilled(1)
+        assert wm.resident_objects() == 8
+
+    def test_apply_spill_never_spills_last_resident_queue(self):
+        wm = self._workload()
+        cfg = ControlConfig(spill_budget_objects=0)
+        apply_spill(wm, ControlVector(0.5, 1, True), cfg)
+        resident = [b for b in (1, 2, 3) if not wm.is_spilled(b)]
+        assert len(resident) == 1
+
+    def test_unspill_oldest_first_under_low_water(self):
+        wm = self._workload()
+        cfg = ControlConfig(spill_budget_objects=8, spill_low_water=1.0)
+        apply_spill(wm, ControlVector(0.5, 1, True), cfg)
+        assert wm.spilled_buckets() == [3]
+        wm.complete_bucket(1, 3.0)  # backlog drops to 8 -> room to page in
+        changed = apply_spill(wm, ControlVector(0.5, 1, False), cfg)
+        assert changed == [3] and not wm.is_spilled(3)
+
+    def test_service_pages_spilled_bucket_back_in(self):
+        wm = self._workload()
+        wm.spill_bucket(2)
+        wm.complete_bucket(2, 5.0)
+        assert not wm.is_spilled(2)
+
+    def test_spilled_bucket_deprioritized_but_not_starved(self):
+        """T_spill lowers a spilled bucket's U_t (greedy passes it over),
+        while at alpha=1 age still reclaims it — §6 without starvation."""
+        cost = CostModel(T_spill=10.0)
+        wm = WorkloadManager(_identity_range)
+        wm.submit(_mk_query(0, 0.0, [1] * 4))  # old
+        wm.submit(_mk_query(1, 1.0, [2] * 4))  # young, same size
+        cache = BucketCache(4)
+        wm.spill_bucket(1)
+        greedy = LifeRaftScheduler(cost, alpha=0.0)
+        assert greedy.select(wm, cache, 2.0).bucket_id == 2
+        aged = LifeRaftScheduler(cost, alpha=1.0)
+        assert aged.select(wm, cache, 2.0).bucket_id == 1
+
+
+# ---------------------------------------------------------------- end to end
+class TestClosedLoopSimulation:
+    def _trace(self, n=120, seed=0, buckets=40, gap=0.05):
+        rng = np.random.default_rng(seed)
+        qs, t = [], 0.0
+        for qid in range(n):
+            t += rng.exponential(gap)
+            b = rng.integers(0, buckets)
+            ks = np.full(rng.integers(2, 12), b, dtype=np.uint64)
+            qs.append(Query(qid, t, ks, ks))
+        return qs
+
+    def test_adaptive_simulation_completes_all_queries(self):
+        qs = self._trace()
+        ctl = ControlLoop(ControlConfig(fuse_k_max=4,
+                                        spill_budget_objects=300))
+        r = run_policy("liferaft", qs, _identity_range,
+                       CostModel(T_spill=0.4), alpha=0.25, control=ctl)
+        assert r.n_queries == len(qs)
+        assert r.policy.endswith("+ctl")
+        assert ctl.rounds == r.n_dispatches
+
+    def test_adaptive_fuses_dispatches_under_breadth(self):
+        """With many shallow queues the controller must raise fuse_k, so
+        dispatches land strictly below batches."""
+        qs = self._trace(n=200, seed=3, buckets=120, gap=0.01)
+        ctl = ControlLoop(ControlConfig(fuse_k_max=8))
+        r = run_policy("liferaft", qs, _identity_range, CostModel(),
+                       alpha=0.25, control=ctl)
+        assert r.n_queries == len(qs)
+        assert r.n_dispatches < r.n_batches
+
+    def test_adaptive_decisions_identical_for_both_schedulers(self):
+        """The control plane must not break naive/incremental equivalence:
+        identical control configs over identical traces yield identical
+        makespans and batch counts."""
+        qs = self._trace(n=100, seed=5)
+        results = []
+        for policy in ("liferaft", "liferaft-naive"):
+            ctl = ControlLoop(ControlConfig(fuse_k_max=4,
+                                            spill_budget_objects=400))
+            results.append(
+                run_policy(policy, qs, _identity_range,
+                           CostModel(T_spill=0.4), alpha=0.25, control=ctl,
+                           normalized=True)
+            )
+        a, b = results
+        assert a.makespan == b.makespan
+        assert a.n_batches == b.n_batches
+        assert a.mean_response == b.mean_response
+
+
+# ---------------------------------------------------------------- serving
+class TestServingAdaptive:
+    def _trace(self, n=120, n_adapters=8, rate=200.0, seed=0):
+        from repro.serving import Request
+
+        rng = np.random.default_rng(seed)
+        w = 1.0 / np.arange(1, n_adapters + 1) ** 1.5
+        w /= w.sum()
+        t, out = 0.0, []
+        for i in range(n):
+            t += rng.exponential(1.0 / rate)
+            out.append(Request(i, int(rng.choice(n_adapters, p=w)), t,
+                               int(rng.integers(8, 64)), 16))
+        return out
+
+    def test_adaptive_serving_completes_all(self):
+        from repro.serving import AdapterSpec, LifeRaftEngine, ServeConfig
+
+        eng = LifeRaftEngine(
+            [AdapterSpec(i, 8 << 30) for i in range(8)],
+            ServeConfig(policy="liferaft", adaptive=True, fuse_k_max=4,
+                        spill_budget=48, spill_penalty_s=5e-3),
+        )
+        s = eng.run(self._trace())
+        assert s["n_completed"] == 120
+        assert s["adaptive"] is True
+        assert not s["spilled"]  # drained -> everything paged back in
+
+    def test_serving_runs_incremental_scheduler_path(self):
+        """The serving engine's normalized default must ride the lazy-heap
+        index (the old per-select façade forced the naive fallback)."""
+        from repro.serving import AdapterSpec, LifeRaftEngine, ServeConfig
+
+        eng = LifeRaftEngine(
+            [AdapterSpec(i, 8 << 30) for i in range(4)],
+            ServeConfig(policy="liferaft"),
+        )
+        assert not eng.scheduler._use_naive(eng.workload, eng.cache)
+        eng.run(self._trace(n=40, n_adapters=4))
+        assert eng.scheduler._wm is eng.workload  # bound once, kept bound

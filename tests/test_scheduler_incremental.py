@@ -27,10 +27,10 @@ class _Mirror:
     """Two identical (workload, cache) pairs driven in lockstep, one
     selected by the incremental scheduler and one by the oracle."""
 
-    def __init__(self, alpha, cache_cap=6):
-        cm = CostModel()
-        self.inc = LifeRaftScheduler(cm, alpha=alpha)
-        self.nai = NaiveLifeRaftScheduler(cm, alpha=alpha)
+    def __init__(self, alpha, cache_cap=6, normalized=False, cost=None):
+        cm = cost or CostModel()
+        self.inc = LifeRaftScheduler(cm, alpha=alpha, normalized=normalized)
+        self.nai = NaiveLifeRaftScheduler(cm, alpha=alpha, normalized=normalized)
         self.wm_i = WorkloadManager(_identity_range)
         self.wm_n = WorkloadManager(_identity_range)
         self.cache_i = BucketCache(cache_cap)
@@ -47,6 +47,14 @@ class _Mirror:
     def touch_cache(self, b):
         self.cache_i.access(b)
         self.cache_n.access(b)
+
+    def spill(self, b):
+        self.wm_i.spill_bucket(b)
+        self.wm_n.spill_bucket(b)
+
+    def unspill(self, b):
+        self.wm_i.unspill_bucket(b)
+        self.wm_n.unspill_bucket(b)
 
     def compare_select(self, now):
         di = self.inc.select(self.wm_i, self.cache_i, now)
@@ -66,30 +74,39 @@ class _Mirror:
 
 
 class TestIncrementalEquivalence:
-    @given(st.integers(0, 10_000), st.floats(0.0, 1.0))
+    @given(st.integers(0, 10_000), st.floats(0.0, 1.0), st.integers(0, 1))
     @settings(max_examples=25, deadline=None)
-    def test_randomized_trace_decisions_identical(self, seed, alpha):
+    def test_randomized_trace_decisions_identical(self, seed, alpha, norm):
+        """Covers both scoring modes: raw scales and the monotone rebased
+        ``normalized=True`` form, plus §6 spill/unspill churn (T_spill > 0
+        so spilling actually moves scores)."""
         rng = np.random.default_rng(seed)
-        m = _Mirror(alpha, cache_cap=4)
+        m = _Mirror(
+            alpha, cache_cap=4, normalized=bool(norm),
+            cost=CostModel(T_spill=0.8),
+        )
         clock = 0.0
         qid = 0
         for _ in range(60):
             op = rng.random()
-            if op < 0.45:
+            if op < 0.40:
                 # Submit; duplicated bucket ids + shared arrival times
                 # manufacture exact ties in both U_t and age.
                 n = int(rng.integers(1, 6))
                 buckets = rng.integers(0, 12, n)
                 m.submit(qid, clock, buckets)
                 qid += 1
-            elif op < 0.80:
+            elif op < 0.75:
                 d = m.compare_select(clock)
                 if d is not None:
                     m.touch_cache(d.bucket_id)
                     clock += 0.01 + 1e-4 * d.queue_size
                     m.complete(d.bucket_id, clock)
-            elif op < 0.90:
+            elif op < 0.85:
                 m.touch_cache(int(rng.integers(0, 12)))
+            elif op < 0.95:
+                b = int(rng.integers(0, 12))
+                m.spill(b) if rng.random() < 0.6 else m.unspill(b)
             else:
                 clock += float(rng.exponential(0.5))
             m.compare_select(clock)
@@ -116,11 +133,12 @@ class TestIncrementalEquivalence:
                 m.complete(d.bucket_id, clock)
                 m.compare_select(clock)
 
-    @given(st.integers(0, 5_000), st.floats(0.0, 1.0), st.integers(1, 6))
+    @given(st.integers(0, 5_000), st.floats(0.0, 1.0), st.integers(1, 6),
+           st.integers(0, 1))
     @settings(max_examples=15, deadline=None)
-    def test_topk_matches_naive_ordering(self, seed, alpha, k):
+    def test_topk_matches_naive_ordering(self, seed, alpha, k, norm):
         rng = np.random.default_rng(seed)
-        m = _Mirror(alpha)
+        m = _Mirror(alpha, normalized=bool(norm))
         clock = 0.0
         for qid in range(25):
             clock += float(rng.exponential(0.1))
@@ -140,7 +158,9 @@ class TestIncrementalEquivalence:
         d = m.compare_select(2.0)
         assert d.bucket_id == 3  # smallest id wins a tie
 
-    def test_normalized_falls_back_and_agrees(self):
+    def test_normalized_runs_incremental_path(self):
+        """normalized=True no longer forces the O(B) naive fallback: the
+        lazy-heap index is populated and agrees with the oracle."""
         cm = CostModel()
         inc = LifeRaftScheduler(cm, alpha=0.5, normalized=True)
         nai = NaiveLifeRaftScheduler(cm, alpha=0.5, normalized=True)
@@ -148,9 +168,11 @@ class TestIncrementalEquivalence:
         cache = BucketCache(4)
         wm.submit(_mk_query(0, 0.0, [1, 1, 2]))
         wm.submit(_mk_query(1, 0.5, [2, 4]))
+        assert not inc._use_naive(wm, cache)
         di = inc.select(wm, cache, 1.0)
         dn = nai.select(wm, cache, 1.0)
         assert di.bucket_id == dn.bucket_id and di.score == dn.score
+        assert inc._entries and inc._heap  # the incremental index engaged
 
     def test_rebuild_recovers_from_external_mutation(self):
         cm = CostModel()
@@ -168,6 +190,120 @@ class TestIncrementalEquivalence:
         assert d.bucket_id == 2 and d.queue_size == 500
         inc.rebuild()
         assert inc.select(wm, cache, 1.0).bucket_id == 2
+
+
+class TestAlphaHotSwap:
+    """Hot-swapping ``scheduler.alpha`` mid-run triggers the ``_alpha_dirty``
+    bulk re-key; its decisions must be identical to throwing the index away
+    and rebuilding from scratch — including right after ``select_topk``
+    suspensions, whose winners sit in ``_dirty`` awaiting restore."""
+
+    @given(st.integers(0, 5_000), st.integers(1, 5), st.integers(0, 1))
+    @settings(max_examples=15, deadline=None)
+    def test_bulk_rekey_matches_fresh_rebuild(self, seed, k, norm):
+        rng = np.random.default_rng(seed)
+        cm = CostModel()
+        wm = WorkloadManager(_identity_range)
+        cache = BucketCache(4)
+        live = LifeRaftScheduler(cm, alpha=0.2, normalized=bool(norm))
+        nai = NaiveLifeRaftScheduler(cm, alpha=0.2, normalized=bool(norm))
+        clock = 0.0
+        for qid in range(30):
+            clock += float(rng.exponential(0.1))
+            wm.submit(_mk_query(qid, clock, rng.integers(0, 10, rng.integers(1, 4))))
+        live.select(wm, cache, clock)  # bind + seed the index
+        for round_no in range(6):
+            # Suspend the top-k, then immediately hot-swap alpha: the bulk
+            # re-key must not resurrect the suspended winners with stale keys.
+            live.select_topk(wm, cache, clock, k)
+            new_alpha = float(rng.uniform(0.0, 1.0))
+            live.alpha = new_alpha
+            nai.alpha = new_alpha
+            fresh = LifeRaftScheduler(cm, alpha=new_alpha, normalized=bool(norm))
+            dl = live.select(wm, cache, clock)
+            df = fresh.select(wm, cache, clock)
+            dn = nai.select(wm, cache, clock)
+            assert dl.bucket_id == df.bucket_id == dn.bucket_id
+            assert dl.score == df.score == dn.score
+            fresh.rebuild()  # unsubscribe before it goes out of scope
+            # churn before the next round
+            clock += 0.05
+            wm.complete_bucket(dl.bucket_id, clock)
+            cache.access(dl.bucket_id)
+            wm.submit(
+                _mk_query(100 + round_no, clock, rng.integers(0, 10, 2))
+            )
+
+    def test_rekey_after_topk_suspension_restores_winners(self):
+        cm = CostModel()
+        wm = WorkloadManager(_identity_range)
+        cache = BucketCache(4)
+        inc = LifeRaftScheduler(cm, alpha=0.0)
+        nai = NaiveLifeRaftScheduler(cm, alpha=0.0)
+        for qid, b in enumerate([3, 3, 5, 7]):
+            wm.submit(_mk_query(qid, 0.1 * qid, [b, b]))
+        top = inc.select_topk(wm, cache, 1.0, k=2)
+        assert len(top) == 2
+        inc.alpha = 1.0  # re-key while the two winners are suspended
+        nai.alpha = 1.0
+        di, dn = inc.select(wm, cache, 2.0), nai.select(wm, cache, 2.0)
+        assert di.bucket_id == dn.bucket_id and di.score == dn.score
+
+
+class TestHeapCompaction:
+    def test_heap_bounded_under_topk_churn(self):
+        """Stale heap entries (completion garbage, residency re-keys,
+        select_topk suspensions) must not leak: across a build-up phase
+        (wide bucket fan-out + cache churn) and a full top-k drain, the
+        lazy heap stays within the compaction bound and compaction
+        actually fires."""
+        cm = CostModel()
+        wm = WorkloadManager(_identity_range)
+        cache = BucketCache(6)
+        inc = LifeRaftScheduler(cm, alpha=0.3)
+        compactions = 0
+        orig_compact = inc._compact
+
+        def counting_compact():
+            nonlocal compactions
+            compactions += 1
+            orig_compact()
+
+        inc._compact = counting_compact
+        rng = np.random.default_rng(7)
+        clock, qid, k = 0.0, 0, 3
+
+        def assert_bounded():
+            # Invariant: the heap holds at most the compaction bound over
+            # live entries (+k winners suspended awaiting the dirty-restore
+            # on the next flush).
+            bound = 4 * max(len(inc._entries) + k, 8)
+            assert len(inc._heap) <= bound, (len(inc._heap), bound)
+
+        # Build-up: hundreds of buckets; every cache access flips some
+        # bucket's residency and re-keys it, leaving version garbage.
+        for r in range(300):
+            clock += 0.02
+            wm.submit(_mk_query(qid, clock, rng.integers(0, 300, 4)))
+            qid += 1
+            d = inc.select(wm, cache, clock)
+            cache.access(int(rng.integers(0, 300)))
+            if r % 5 == 0:
+                wm.complete_bucket(d.bucket_id, clock)
+            assert_bounded()
+        # Drain: entries shrink every round while garbage lingers — the
+        # regime where an unbounded heap would leak.
+        while True:
+            decisions = inc.select_topk(wm, cache, clock, k)
+            if not decisions:
+                break
+            clock += 0.01
+            for d in decisions:
+                cache.access(d.bucket_id)
+                wm.complete_bucket(d.bucket_id, clock)
+            assert_bounded()
+        assert compactions > 0, "compaction never triggered under churn"
+        assert len(inc._heap) == 0 and len(inc._entries) == 0
 
 
 class TestSelectScaling:
