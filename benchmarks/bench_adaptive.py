@@ -20,6 +20,13 @@ Emits ``BENCH_adaptive.json`` with three measurements:
 3. ``fuse_k_adaptation`` / ``spill`` — informational: AIMD fuse_k amortizes
    dispatches under queue breadth; the §6 overflow budget spills and
    restores workload queues without losing queries.
+4. ``two_tenant`` — the multi-tenant control plane (one ControlVector per
+   tenant class, §6 byte budget arbitrated across classes) vs the global
+   closed loop on a batch-flood + interactive-singleton workload.
+   Acceptance: per-tenant control achieves interactive p95 <= the global
+   closed loop's at >= 0.95x aggregate throughput, with byte-accounted
+   resident state never exceeding the global budget after enforcement
+   (modulo the oldest-unit no-starvation floors).
 
 Run: ``PYTHONPATH=src python -m benchmarks.bench_adaptive [--out PATH]``
 """
@@ -39,6 +46,8 @@ from repro.core import (
     LifeRaftScheduler,
     NaiveLifeRaftScheduler,
     Query,
+    TenantControlPlane,
+    TenantPolicy,
     WorkloadManager,
     simulate_batched,
 )
@@ -219,6 +228,141 @@ def bench_normalized_equivalence() -> dict:
     }
 
 
+# ------------------------------------------------- 4. per-tenant vs global
+TT_COST = CostModel(T_b=0.08, T_m=2e-4, T_spill=0.1, probe_bytes=16.0)
+TT_BUDGET = 60_000.0  # global §6 budget, actual probe bytes
+TT_SEEDS = (21, 22, 23)
+
+
+def two_tenant_trace(seed, horizon=10.0):
+    """Batch flood (deep queries, 8 hot buckets) + sparse interactive
+    singletons on cold buckets, tenant-tagged — the §6 starvation mix."""
+    rng = np.random.default_rng(seed)
+    qs, qid, t = [], 0, 0.0
+    while t < horizon:
+        t += rng.exponential(0.03)
+        b = rng.integers(0, 8)
+        ks = np.full(int(rng.integers(60, 120)), b, dtype=np.uint64)
+        qs.append(Query(qid, t, ks, ks, meta={"tenant": "batch"}))
+        qid += 1
+    t = 0.0
+    while t < horizon:
+        t += rng.exponential(0.4)
+        b = rng.integers(8, 160)
+        ks = np.full(int(rng.integers(1, 3)), b, dtype=np.uint64)
+        qs.append(Query(qid, t, ks, ks, meta={"tenant": "interactive"}))
+        qid += 1
+    return qs
+
+
+def _tenant_plane():
+    """Interactive pins alpha high (arrival order, low latency); batch
+    pins it low (data-driven throughput) and takes 2x the budget weight."""
+    return TenantControlPlane(
+        [
+            TenantPolicy("interactive", ControlConfig(
+                alpha_init=0.9, alpha_min=0.7, alpha_max=1.0, alpha_step=0.2,
+                rate_knee=30.0, depth_knee=5_000.0, fuse_k_max=2,
+            )),
+            TenantPolicy("batch", ControlConfig(
+                alpha_init=0.2, alpha_min=0.0, alpha_max=0.4, alpha_step=0.2,
+                rate_knee=10.0, depth_knee=2_000.0, fuse_k_max=6,
+            ), weight=2.0),
+        ],
+        global_budget_bytes=TT_BUDGET,
+        halflife_s=3.0,
+    )
+
+
+def _global_control():
+    """The single-vector closed loop on the same byte budget (PR 2's
+    controller — the baseline per-tenant control must beat on interactive
+    p95 without giving up aggregate throughput)."""
+    return ControlLoop(ControlConfig(
+        alpha_init=0.5, alpha_step=0.2, halflife_s=3.0,
+        rate_knee=10.0, depth_knee=2_000.0, fuse_k_max=6,
+        spill_budget_bytes=TT_BUDGET,
+    ))
+
+
+def bench_two_tenant() -> dict:
+    from repro.core import dispatch as _dispatch
+
+    # Observe post-ROUND residency: apply_spill (the one enforcement choke
+    # point — its first argument is the wm, which simulate_batched never
+    # exposes) only stashes the reference; sampling happens in on_round,
+    # i.e. after EVERY tenant's enforcement ran, so a not-yet-walked
+    # tenant's overhang cannot read as a budget violation.
+    max_resident_after_spill = 0.0
+    seen_wm = None
+    real_apply_spill = _dispatch.apply_spill
+
+    def stashing_apply_spill(wm, vector, config, **kw):
+        nonlocal seen_wm
+        seen_wm = wm
+        return real_apply_spill(wm, vector, config, **kw)
+
+    def sample_round(outcome):
+        nonlocal max_resident_after_spill
+        if outcome.vector.spill and seen_wm is not None:
+            max_resident_after_spill = max(
+                max_resident_after_spill, seen_wm.resident_bytes()
+            )
+
+    def run(control, qs, observe=False):
+        return simulate_batched(
+            qs, _identity_range,
+            LifeRaftScheduler(TT_COST, 0.5, normalized=True),
+            TT_COST, cache_capacity=8, control=control,
+            on_round=sample_round if observe else None,
+        )
+
+    rows = []
+    _dispatch.apply_spill = stashing_apply_spill
+    try:
+        for seed in TT_SEEDS:
+            qs = two_tenant_trace(seed)
+            rg = run(_global_control(), qs)
+            rm = run(_tenant_plane(), qs, observe=True)
+            rows.append({
+                "seed": int(seed),
+                "global": {
+                    "interactive_p95": rg.per_tenant["interactive"]["p95_response"],
+                    "batch_p95": rg.per_tenant["batch"]["p95_response"],
+                    "query_throughput": rg.query_throughput,
+                },
+                "per_tenant": {
+                    "interactive_p95": rm.per_tenant["interactive"]["p95_response"],
+                    "batch_p95": rm.per_tenant["batch"]["p95_response"],
+                    "query_throughput": rm.query_throughput,
+                },
+            })
+    finally:
+        _dispatch.apply_spill = real_apply_spill
+
+    g_p95 = float(np.mean([r["global"]["interactive_p95"] for r in rows]))
+    m_p95 = float(np.mean([r["per_tenant"]["interactive_p95"] for r in rows]))
+    g_qtp = float(np.mean([r["global"]["query_throughput"] for r in rows]))
+    m_qtp = float(np.mean([r["per_tenant"]["query_throughput"] for r in rows]))
+    # The §6 floors: each tenant's boundary victim keeps its oldest unit
+    # resident — allow one max-size unit per tenant class of slop.
+    floor_slop = 2 * 120 * TT_COST.probe_bytes
+    within_budget = max_resident_after_spill <= TT_BUDGET + floor_slop
+    return {
+        "seeds": list(TT_SEEDS),
+        "budget_bytes": TT_BUDGET,
+        "rows": rows,
+        "global_interactive_p95": g_p95,
+        "tenant_interactive_p95": m_p95,
+        "throughput_ratio": m_qtp / max(g_qtp, 1e-9),
+        "max_resident_after_spill": max_resident_after_spill,
+        "spill_within_budget": bool(within_budget),
+        "passes": bool(
+            m_p95 <= g_p95 and m_qtp >= 0.95 * g_qtp and within_budget
+        ),
+    }
+
+
 # ------------------------------------------------ 3. fuse_k + spill (info)
 def bench_fuse_and_spill() -> dict:
     rng = np.random.default_rng(11)
@@ -249,10 +393,12 @@ def run(out_path: str = "BENCH_adaptive.json", verbose: bool = True) -> dict:
         "closed_loop_vs_static": bench_closed_loop(),
         "normalized_equivalence": bench_normalized_equivalence(),
         "fuse_and_spill": bench_fuse_and_spill(),
+        "two_tenant": bench_two_tenant(),
     }
     cl = report["closed_loop_vs_static"]
     eq = report["normalized_equivalence"]
     fs = report["fuse_and_spill"]
+    tt = report["two_tenant"]
     pathlib.Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
     if verbose:
         ad, best = cl["adaptive"], cl["best_static"]
@@ -271,13 +417,21 @@ def run(out_path: str = "BENCH_adaptive.json", verbose: bool = True) -> dict:
             f"dispatches ({fs['amortization']:.1f}x amortized), "
             f"final fuse_k={fs['final_fuse_k']}"
         )
+        print(
+            f"  two-tenant: interactive p95 {tt['tenant_interactive_p95']:.2f}s"
+            f" (per-tenant) vs {tt['global_interactive_p95']:.2f}s (global) at"
+            f" {tt['throughput_ratio']:.2f}x throughput; spill within budget:"
+            f" {tt['spill_within_budget']}"
+        )
         print(f"  wrote {out_path}")
     emit(
         "bench_adaptive",
         0.0,
         f"p95_improvement={cl['p95_improvement_s']:.2f}s;"
         f"throughput_ratio={cl['throughput_ratio']:.3f};"
-        f"mismatches={eq['mismatches']}",
+        f"mismatches={eq['mismatches']};"
+        f"tenant_p95={tt['tenant_interactive_p95']:.2f}s;"
+        f"tenant_tp_ratio={tt['throughput_ratio']:.3f}",
     )
     return report
 
@@ -295,6 +449,11 @@ def main() -> None:
     assert report["normalized_equivalence"]["bit_identical"]
     assert report["fuse_and_spill"]["all_completed"]
     assert report["fuse_and_spill"]["dispatches"] < report["fuse_and_spill"]["batches"]
+    tt = report["two_tenant"]
+    assert tt["passes"], tt
+    assert tt["tenant_interactive_p95"] <= tt["global_interactive_p95"]
+    assert tt["throughput_ratio"] >= 0.95
+    assert tt["spill_within_budget"]
 
 
 if __name__ == "__main__":

@@ -6,18 +6,25 @@ buckets are adapter weight groups, the cache is HBM adapter slots.
 
 With ``--adaptive`` the closed-loop control plane (docs/adaptive.md)
 retunes alpha / fuse_k / §6 spill every scheduling round from live queue
-telemetry instead of running the static knobs.
+telemetry instead of running the static knobs.  ``--per-tenant`` goes one
+further: adapters 0-1 are the *interactive* class (alpha pinned high —
+arrival order), the rest are *batch* (alpha low — data-driven), each
+class running its own control vector with the §6 byte budget arbitrated
+between them.
 
     PYTHONPATH=src python examples/serve_multitenant.py [--policy liferaft]
     PYTHONPATH=src python examples/serve_multitenant.py --adaptive
+    PYTHONPATH=src python examples/serve_multitenant.py --per-tenant
 """
 import argparse
+import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import smoke_config
+from repro.core import ControlConfig, TenantPolicy
 from repro.models import registry as R
 from repro.serving import AdapterSpec, LifeRaftEngine, Request, ServeConfig
 from repro.training.train_step import make_serve_step
@@ -31,6 +38,9 @@ def main():
     ap.add_argument("--requests", type=int, default=60)
     ap.add_argument("--adaptive", action="store_true",
                     help="closed-loop alpha/fuse_k/spill control per round")
+    ap.add_argument("--per-tenant", action="store_true",
+                    help="one control vector per adapter class "
+                         "(interactive vs batch) + arbitrated byte budget")
     args = ap.parse_args()
 
     cfg = smoke_config("moonshot-v1-16b-a3b")
@@ -69,15 +79,34 @@ def main():
         reqs.append(Request(i, int(rng.choice(n_adapters, p=zipf)), t,
                             int(rng.integers(8, 32)), 16))
 
+    tenant_policies = None
+    if args.per_tenant:
+        tenant_policies = (
+            TenantPolicy("interactive", ControlConfig(
+                alpha_init=0.9, alpha_min=0.7, alpha_max=1.0,
+                rate_knee=200.0, depth_knee=64.0, fuse_k_max=2,
+            )),
+            TenantPolicy("batch", ControlConfig(
+                alpha_init=0.2, alpha_min=0.0, alpha_max=0.4,
+                rate_knee=200.0, depth_knee=64.0, fuse_k_max=4,
+            ), weight=2.0),
+        )
     engine = LifeRaftEngine(
-        [AdapterSpec(a, 2 << 30) for a in range(n_adapters)],
+        [AdapterSpec(a, 2 << 30,
+                     tenant=("interactive" if a < 2 else "batch")
+                     if args.per_tenant else "default")
+         for a in range(n_adapters)],
         ServeConfig(policy=args.policy, alpha=args.alpha, adapter_slots=2,
                     max_batch=max_batch, decode_quantum=16,
                     adaptive=args.adaptive, fuse_k_max=4,
-                    spill_budget=4 * max_batch, spill_penalty_s=5e-3),
+                    spill_budget=4 * max_batch, spill_penalty_s=5e-3,
+                    tenant_policies=tenant_policies,
+                    spill_budget_bytes=4096.0 if args.per_tenant else None,
+                    kv_bytes_per_token=2.0),
         decode_batch_fn=decode_batch,
     )
-    mode = "adaptive closed-loop" if args.adaptive else args.policy
+    mode = ("per-tenant control plane" if args.per_tenant
+            else "adaptive closed-loop" if args.adaptive else args.policy)
     print(f"serving {len(reqs)} requests across {n_adapters} tenants "
           f"({mode}, reduced moonshot MoE, real decode)...")
     s = engine.run(reqs)
@@ -85,7 +114,10 @@ def main():
     print(f"  token throughput  : {s['token_throughput']:.1f} tok/s (simulated clock)")
     print(f"  mean response     : {s['mean_response']:.3f}s  p95={s['p95_response']:.3f}s")
     print(f"  adapter cache hit : {s['cache_hit_rate']:.2f}")
-    if args.adaptive and engine.control is not None and engine.control.last:
+    if args.per_tenant and s["per_tenant"]:
+        print("  per-tenant stats  :")
+        print(json.dumps(s["per_tenant"], indent=4))
+    elif args.adaptive and engine.control is not None and engine.control.last:
         vec = engine.control.last
         print(f"  controller        : alpha={vec.alpha:.2f} fuse_k={vec.fuse_k} "
               f"rounds={engine.control.rounds} spilled={s['spilled']}")

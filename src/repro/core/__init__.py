@@ -22,6 +22,7 @@ from .metrics import (
     PAPER_COST_MODEL,
     CostModel,
     aged_workload_throughput,
+    per_tenant_latency,
     workload_throughput,
 )
 from .adaptive import AlphaController, SaturationEstimator, TradeoffPoint, TradeoffTable
@@ -30,6 +31,8 @@ from .control import (
     ControlLoop,
     ControlVector,
     Telemetry,
+    TenantControlPlane,
+    TenantPolicy,
     apply_spill,
 )
 from .dispatch import DispatchLoop, DispatchOutcome
@@ -56,6 +59,7 @@ __all__ = [
     "PAPER_COST_MODEL",
     "CostModel",
     "aged_workload_throughput",
+    "per_tenant_latency",
     "workload_throughput",
     "AlphaController",
     "SaturationEstimator",
@@ -65,6 +69,8 @@ __all__ = [
     "ControlLoop",
     "ControlVector",
     "Telemetry",
+    "TenantControlPlane",
+    "TenantPolicy",
     "apply_spill",
     "DispatchLoop",
     "DispatchOutcome",

@@ -24,20 +24,30 @@ loop so both engines and the simulator make identical control decisions:
   and several queues are pending, fuse one more bucket into the next
   grouped device call; when dispatches saturate, back off.
 * ``spill`` engages §6 workload overflow (with hysteresis) when resident
-  pending objects exceed a budget; ``apply_spill`` enforces it on the
-  WorkloadManager by spilling youngest-first victims (spilled queues pay
-  the cost model's T_spill surcharge in the scheduler score, so they are
-  deprioritized until age reclaims them — never starved).
+  pending probe *bytes* exceed the budget (``spill_budget_bytes``; the
+  object-count proxy survives as the legacy ``spill_budget_objects``
+  mode); ``apply_spill`` enforces it by walking victim queues
+  youngest-first and spilling exactly the deficit — whole queues, then a
+  *partial* spill of the boundary victim whose oldest units stay resident
+  (spilled bytes pay a pro-rated T_spill surcharge in the scheduler
+  score, so they are deprioritized until age reclaims them — never
+  starved).
+
+``TenantControlPlane`` lifts all of this to multi-tenant: one ControlLoop
+per tenant class (interactive vs batch — CasJobs' queue split, SharedDB's
+per-class SLOs) over per-tenant telemetry slices, one shared
+SaturationEstimator, and a budget arbiter that waterfills the global §6
+byte budget across tenants by weight.
 
 ``DispatchLoop`` (core/dispatch.py) is the single consumer: it snapshots
-telemetry, calls :meth:`ControlLoop.update` once per scheduling round,
-and applies the resulting vector.  Engines never touch the knobs
-directly.
+telemetry, calls :meth:`ControlLoop.update` (or the plane's) once per
+scheduling round, and applies the resulting vector(s).  Engines never
+touch the knobs directly.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Callable, Mapping, Optional, Sequence
 
 from .adaptive import SaturationEstimator, TradeoffTable
 
@@ -46,6 +56,8 @@ __all__ = [
     "Telemetry",
     "ControlConfig",
     "ControlLoop",
+    "TenantPolicy",
+    "TenantControlPlane",
     "apply_spill",
 ]
 
@@ -61,7 +73,9 @@ class ControlVector:
 
 @dataclasses.dataclass(frozen=True)
 class Telemetry:
-    """Per-round sensor snapshot fed to the controller."""
+    """Per-round sensor snapshot fed to the controller.  Under the
+    multi-tenant plane, one snapshot per tenant class (queues owned by
+    that tenant only)."""
 
     now: float
     arrival_rate: float  # EWMA queries/sec (SaturationEstimator)
@@ -71,6 +85,8 @@ class Telemetry:
     oldest_age_ms: float  # age of the oldest pending request
     cache_hit_rate: float  # BucketCache lifetime hit rate
     occupancy: float  # last dispatch's batch fill fraction, [0, 1]
+    pending_bytes: float = 0.0  # total pending probe bytes
+    resident_bytes: float = 0.0  # probe bytes NOT spilled (§6 budget target)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,7 +108,9 @@ class ControlConfig:
     occ_low: float = 0.5  # below: dispatches underfull -> fuse more
     occ_high: float = 0.95  # above: dispatches saturated -> back off
     # -- spill ---------------------------------------------------------------
-    spill_budget_objects: Optional[int] = None  # None disables overflow
+    spill_budget_objects: Optional[int] = None  # legacy object-count budget
+    spill_budget_bytes: Optional[float] = None  # byte-accurate §6 budget
+    #   (preferred; enables *partial* queue spill — see apply_spill)
     spill_low_water: float = 0.8  # disengage below this fraction
 
 
@@ -104,9 +122,15 @@ class ControlLoop:
     returns the ControlVector for that round.
     """
 
-    def __init__(self, config: ControlConfig = ControlConfig()) -> None:
+    def __init__(
+        self,
+        config: ControlConfig = ControlConfig(),
+        estimator: Optional[SaturationEstimator] = None,
+    ) -> None:
         self.cfg = config
-        self.estimator = SaturationEstimator(config.halflife_s)
+        # ``estimator`` may be shared (TenantControlPlane: one arrival
+        # stream feeds every tenant's saturation signal).
+        self.estimator = estimator or SaturationEstimator(config.halflife_s)
         self._alpha = min(max(config.alpha_init, config.alpha_min), config.alpha_max)
         self._fuse_k = max(1, int(config.fuse_k_init))
         self._depth_ewma = 0.0
@@ -180,6 +204,14 @@ class ControlLoop:
     # -- spill law --------------------------------------------------------------
     def _update_spill(self, tel: Telemetry) -> bool:
         cfg = self.cfg
+        if cfg.spill_budget_bytes is not None:
+            # Byte-accurate budget (preferred): resident probe bytes vs the
+            # §6 memory budget, same hysteresis shape as the legacy law.
+            if tel.resident_bytes > cfg.spill_budget_bytes:
+                self._spilling = True
+            elif tel.pending_bytes <= cfg.spill_budget_bytes * cfg.spill_low_water:
+                self._spilling = False
+            return self._spilling
         if cfg.spill_budget_objects is None:
             return False
         if tel.resident_objects > cfg.spill_budget_objects:
@@ -189,21 +221,47 @@ class ControlLoop:
         return self._spilling
 
 
-def apply_spill(wm, vector: ControlVector, config: ControlConfig) -> list[int]:
+def apply_spill(
+    wm,
+    vector: ControlVector,
+    config: ControlConfig,
+    *,
+    budget_bytes: Optional[float] = None,
+    only: Optional[Callable[[int], bool]] = None,
+) -> list[int]:
     """Enforce the §6 overflow budget on a workload manager.
 
-    When ``vector.spill``: spill youngest-first victims (their requesters
-    have waited least; the age term reclaims them later) until resident
-    pending objects fit the budget, always leaving at least one resident
-    queue.  When disengaged: page queues back in oldest-first while they
-    fit under the low-water mark.  Returns the bucket ids whose spill
-    state changed this round.
+    Byte mode (``config.spill_budget_bytes`` set, or ``budget_bytes``
+    override from the TenantControlPlane arbiter): the budget is actual
+    resident probe bytes.  When ``vector.spill``: walk victim queues
+    youngest-first (their requesters have waited least; the age term
+    reclaims them later) and spill *exactly* the deficit — whole queues
+    while the deficit exceeds them, then a partial ``spill_bucket(b,
+    frac)`` on the boundary victim, whose oldest units stay resident.  The
+    oldest queue is never fully spilled, so resident work always remains.
+    When disengaged: page spilled queues back in oldest-first while they
+    fit under the low-water mark.  ``only`` restricts the walk to one
+    tenant's buckets (per-tenant enforcement under the shared loop).
+
+    Legacy object mode (``spill_budget_objects``): whole-queue spill on
+    the object-count proxy, bit-for-bit the historical behavior.
+
+    Returns the bucket ids whose spill state changed this round.
     """
+    if not hasattr(wm, "spill_bucket"):
+        return []
+    if budget_bytes is not None or config.spill_budget_bytes is not None:
+        budget = budget_bytes if budget_bytes is not None else config.spill_budget_bytes
+        return _apply_spill_bytes(wm, vector, config, budget, only)
     budget = config.spill_budget_objects
-    if budget is None or not hasattr(wm, "spill_bucket"):
+    if budget is None:
         return []
     changed: list[int] = []
-    nonempty = [(q.oldest_arrival, q.bucket_id, q.size) for q in wm.nonempty_queues()]
+    nonempty = [
+        (q.oldest_arrival, q.bucket_id, q.size)
+        for q in wm.nonempty_queues()
+        if only is None or only(q.bucket_id)
+    ]
     resident = [(t, b, n) for t, b, n in nonempty if not wm.is_spilled(b)]
     resident_total = sum(n for _, _, n in resident)
     if vector.spill:
@@ -226,3 +284,233 @@ def apply_spill(wm, vector: ControlVector, config: ControlConfig) -> list[int]:
                 changed.append(b)
                 resident_total += n
     return changed
+
+
+def _apply_spill_bytes(
+    wm, vector: ControlVector, config: ControlConfig, budget: float, only,
+) -> list[int]:
+    """Byte-accurate partial-spill enforcement (see apply_spill)."""
+    changed: list[int] = []
+    queues = [
+        q for q in wm.nonempty_queues() if only is None or only(q.bucket_id)
+    ]
+    resident_total = sum(q.resident_bytes for q in queues)
+    if vector.spill:
+        deficit = resident_total - budget
+        # Victims youngest-first == largest oldest_arrival first; the
+        # oldest queue is walked last and only ever spilled partially.
+        victims = sorted(
+            (q for q in queues if q.resident_bytes > 0),
+            key=lambda q: (q.oldest_arrival, q.bucket_id),
+            reverse=True,
+        )
+        for i, q in enumerate(victims):
+            if deficit <= 0:
+                break
+            b = q.bucket_id
+            is_last_resident = i == len(victims) - 1
+            if q.resident_bytes <= deficit and not is_last_resident:
+                frac = 1.0  # whole-queue victim
+            else:
+                # Boundary victim: spill only the deficit (unit granularity
+                # rounds up inside spill_youngest; oldest units stay).
+                frac = min(
+                    (q.spilled_bytes + deficit) / q.nbytes if q.nbytes else 0.0,
+                    1.0 - 1e-12,  # keep_oldest engages even on exact fits
+                )
+            before = q.resident_bytes
+            if wm.spill_bucket(b, frac):
+                changed.append(b)
+                deficit -= before - q.resident_bytes
+    else:
+        low = budget * config.spill_low_water
+        spilled = sorted(
+            (q for q in queues if q.spilled_bytes > 0),
+            key=lambda q: (q.oldest_arrival, q.bucket_id),
+        )  # oldest first
+        for q in spilled:
+            if resident_total + q.spilled_bytes > low:
+                break
+            gain = q.spilled_bytes
+            if wm.unspill_bucket(q.bucket_id):
+                changed.append(q.bucket_id)
+                resident_total += gain
+    return changed
+
+
+# --------------------------------------------------------------------------
+# Multi-tenant control plane
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TenantPolicy:
+    """One tenant class's position on the throughput/response dial.
+
+    ``config`` sets the tenant's own feedback laws (an interactive class
+    pins ``alpha_min`` high so it never drifts into deep batching; a batch
+    class pins ``alpha_max`` low and tolerates spill).  ``weight`` is the
+    tenant's share of the *global* §6 byte budget under contention — the
+    arbiter's waterfill unit.
+    """
+
+    tenant: str
+    config: ControlConfig = ControlConfig()
+    weight: float = 1.0
+
+
+class TenantControlPlane:
+    """One ControlLoop per tenant class + the §6 budget arbiter.
+
+    CasJobs runs separate batch and interactive queues; SharedDB shows
+    shared-work systems still owe per-class latency isolation.  This plane
+    is that idea applied to LifeRaft's control loop: every tenant class
+    (interactive vs batch — adapter class in the serving engine, query tag
+    in the cross-match engine) runs its *own* alpha / fuse_k / spill laws
+    over its own telemetry slice, while one shared ``SaturationEstimator``
+    sees the global arrival stream (saturation is a property of the
+    machine, not of one tenant).
+
+    The **budget arbiter** reconciles per-tenant spill demands against the
+    single global byte budget: tenants whose resident bytes fit their
+    waterfilled share keep everything resident; surplus is redistributed
+    by weight to over-demand tenants, who spill down to their grant.  The
+    grants always sum to at most the global budget, so byte-accounted
+    residency never exceeds it once enforcement converges (modulo the
+    oldest-unit guards that prevent starvation).  Per-tenant hysteresis
+    (each policy's ``spill_low_water``) keeps the spill bit from
+    oscillating round to round.
+
+    ``DispatchLoop`` consumes this exactly like a ControlLoop, except
+    ``update`` takes one Telemetry per tenant and returns one
+    ControlVector per tenant.
+    """
+
+    def __init__(
+        self,
+        policies: Sequence[TenantPolicy],
+        global_budget_bytes: Optional[float] = None,
+        halflife_s: float = 30.0,
+    ) -> None:
+        if not policies:
+            raise ValueError("TenantControlPlane needs at least one policy")
+        names = [p.tenant for p in policies]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tenant policies: {names}")
+        self.policies: dict[str, TenantPolicy] = {p.tenant: p for p in policies}
+        self.estimator = SaturationEstimator(halflife_s)
+        self.loops: dict[str, ControlLoop] = {
+            p.tenant: ControlLoop(p.config, estimator=self.estimator)
+            for p in policies
+        }
+        self.global_budget_bytes = global_budget_bytes
+        self.granted_bytes: dict[str, float] = {}
+        self._engaged: dict[str, bool] = {t: False for t in self.policies}
+        self.rounds = 0
+        self.last: dict[str, ControlVector] = {}
+
+    # -- sensors ----------------------------------------------------------------
+    def observe_arrival(self, t: float) -> float:
+        """All tenants' arrivals feed the one shared saturation signal."""
+        return self.estimator.observe_arrival(t)
+
+    @property
+    def arrival_rate(self) -> float:
+        return self.estimator.rate
+
+    def tenants(self) -> list[str]:
+        return list(self.policies)
+
+    # -- the loop ---------------------------------------------------------------
+    def register_tenant(self, tenant: str, policy: Optional[TenantPolicy] = None) -> None:
+        """Add a tenant class at run time.  ``update`` calls this lazily
+        for telemetry of unknown classes (default policy, weight 1.0) so
+        that *every* observed tenant counts against the global byte budget
+        and is spill-enforceable — an untagged class must not be able to
+        grow resident state outside the arbiter's books."""
+        if tenant in self.policies:
+            return
+        policy = policy or TenantPolicy(tenant)
+        self.policies[tenant] = policy
+        self.loops[tenant] = ControlLoop(policy.config, estimator=self.estimator)
+        self._engaged[tenant] = False
+
+    def update(self, tels: Mapping[str, Telemetry]) -> dict[str, ControlVector]:
+        """One scheduling round: run every tenant's feedback laws on its
+        telemetry slice, then arbitrate spill against the global budget."""
+        for t in tels:
+            self.register_tenant(t)  # unknown classes join the books
+        vecs: dict[str, ControlVector] = {}
+        for tenant, loop in self.loops.items():
+            tel = tels.get(tenant)
+            if tel is None:  # idle tenant: empty slice, laws still step
+                tel = Telemetry(0.0, self.arrival_rate, 0, 0, 0, 0.0, 0.0, 0.0)
+            vecs[tenant] = loop.update(tel)
+        if self.global_budget_bytes is not None:
+            resident = {
+                t: (tels[t].resident_bytes if t in tels else 0.0)
+                for t in self.policies
+            }
+            pending = {
+                t: (tels[t].pending_bytes if t in tels else 0.0)
+                for t in self.policies
+            }
+            # Demand is *pending* bytes — what the tenant needs to hold
+            # everything resident.  (Using resident bytes here makes the
+            # grant chase post-spill residency, so the low-water disengage
+            # test `pending <= grant*lw` could never pass and spilled work
+            # would stay on host until fully drained by service.)
+            self.granted_bytes = self._waterfill(pending)
+            for t, vec in vecs.items():
+                grant = self.granted_bytes[t]
+                low = grant * self.policies[t].config.spill_low_water
+                if resident[t] > grant:
+                    self._engaged[t] = True
+                elif pending[t] <= low:
+                    self._engaged[t] = False
+                vecs[t] = dataclasses.replace(vec, spill=self._engaged[t])
+        self.rounds += 1
+        self.last = vecs
+        return vecs
+
+    # -- the arbiter -------------------------------------------------------------
+    def _waterfill(self, demand: Mapping[str, float]) -> dict[str, float]:
+        """Weighted waterfill of the global byte budget.
+
+        Tenants demanding less than their weighted share are granted their
+        demand; the freed headroom is re-shared (by weight) among the
+        still-unsatisfied tenants until none remain, and any final slack
+        is distributed (by weight) on top of every grant so the grants
+        always sum to *exactly* the budget.  The slack matters: it is the
+        headroom that lets a previously spilling tenant's low-water
+        disengage test (`pending <= grant * low_water`) pass once global
+        pressure subsides — a grant capped at demand can never satisfy it.
+        Invariant: sum(grants) == global budget (work-conserving), every
+        grant >= its tenant's satisfied demand."""
+        remaining = float(self.global_budget_bytes or 0.0)
+        active = set(self.policies)
+        grants: dict[str, float] = {}
+        while active:
+            wsum = sum(self.policies[t].weight for t in active)
+            if wsum <= 0.0:  # degenerate zero weights: equal shares
+                share = {t: remaining / len(active) for t in active}
+            else:
+                share = {
+                    t: remaining * self.policies[t].weight / wsum for t in active
+                }
+            satisfied = [t for t in active if demand[t] <= share[t]]
+            if not satisfied:
+                grants.update(share)  # everyone over-demands: cap at share
+                remaining = 0.0
+                break
+            for t in satisfied:
+                grants[t] = demand[t]
+                remaining -= demand[t]
+                active.discard(t)
+        if remaining > 0.0 and grants:
+            wsum = sum(self.policies[t].weight for t in grants)
+            for t in grants:
+                grants[t] += (
+                    remaining * self.policies[t].weight / wsum
+                    if wsum > 0.0
+                    else remaining / len(grants)
+                )
+        return grants

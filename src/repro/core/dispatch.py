@@ -20,26 +20,48 @@ optionally ``complete`` (defaults to ``wm.complete_bucket`` per decision).
 Without a ControlLoop the loop emits a static vector from the scheduler's
 current alpha and the configured fuse_k — the adaptive and static paths
 run the same code.
+
+With a ``TenantControlPlane`` the round goes multi-tenant: telemetry is
+sliced per tenant class (``tenant_of`` maps bucket -> class), every
+tenant's feedback laws run on their own slice, the resulting per-tenant
+alphas are threaded into the shared scheduler as per-bucket Eq. 2 blends
+(``set_tenant_alphas``), and §6 spill is enforced per tenant against the
+arbiter's byte grants.  Selection stays ONE shared argmax over all
+buckets — tenants are isolated in *policy*, not partitioned in data.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence
+from typing import Callable, Mapping, Optional, Sequence, Union
 
-from .control import ControlLoop, ControlVector, Telemetry, apply_spill
+from .control import (
+    ControlLoop,
+    ControlVector,
+    Telemetry,
+    TenantControlPlane,
+    apply_spill,
+)
 from .scheduler import SchedulerDecision
+from .workload import DEFAULT_TENANT
 
 __all__ = ["DispatchOutcome", "DispatchLoop"]
 
 
 @dataclasses.dataclass(frozen=True)
 class DispatchOutcome:
-    """What one scheduling round did."""
+    """What one scheduling round did.
+
+    Under the multi-tenant plane, ``vector`` is the merged round vector
+    actually applied to the dispatch mechanics (fuse_k = max over
+    tenants; alpha is informational — scoring used per-bucket tenant
+    alphas) and ``tenant_vectors`` carries each tenant's own decision.
+    """
 
     decisions: tuple[SchedulerDecision, ...]
     cost: float
     vector: ControlVector
     spill_changed: tuple[int, ...] = ()
+    tenant_vectors: Optional[Mapping[str, ControlVector]] = None
 
 
 class DispatchLoop:
@@ -50,16 +72,20 @@ class DispatchLoop:
         cache,
         execute: Callable[[Sequence[SchedulerDecision], ControlVector], float],
         *,
-        control: Optional[ControlLoop] = None,
+        control: Optional[Union[ControlLoop, TenantControlPlane]] = None,
+        tenant_of: Optional[Callable[[int], str]] = None,
         fuse_k: int = 1,
         complete: Optional[Callable[[Sequence[SchedulerDecision], float], None]] = None,
         batch_capacity: Optional[int] = None,
         clock: float = 0.0,
+        on_round: Optional[Callable[[DispatchOutcome], None]] = None,
     ) -> None:
         self.scheduler = scheduler
         self.wm = wm
         self.cache = cache
         self.control = control
+        self.tenant_of = tenant_of or (lambda b: DEFAULT_TENANT)
+        self._plane = control if isinstance(control, TenantControlPlane) else None
         self._execute = execute
         self._complete = complete
         self._static_fuse_k = max(1, int(fuse_k))
@@ -69,7 +95,10 @@ class DispatchLoop:
         self.dispatches = 0  # device calls / scheduling rounds
         self.busy = 0.0  # total execute() cost
         self.last_vector: Optional[ControlVector] = None
+        self.last_tenant_vectors: Optional[dict[str, ControlVector]] = None
+        self.on_round = on_round  # decision-log tap (tests/replay.py)
         self._occupancy = 0.0  # last round's batch fill fraction
+        self._occ_by_tenant: dict[str, float] = {}
 
     # -- intake-side sensor -----------------------------------------------------
     def observe_arrival(self, t: float) -> None:
@@ -79,36 +108,71 @@ class DispatchLoop:
 
     # -- telemetry ---------------------------------------------------------------
     def telemetry(self) -> Telemetry:
-        # One pass over the nonempty queues (still O(B) per round — the
-        # select itself stays O(dirty·logB); push these into subscription-
-        # maintained counters if B ever dominates the round).
-        wm = self.wm
-        queues = wm.nonempty_queues()
-        is_spilled = getattr(wm, "is_spilled", None)
-        pending = resident = 0
-        oldest = self.clock
-        for q in queues:
-            pending += q.size
-            if is_spilled is None or not is_spilled(q.bucket_id):
-                resident += q.size
-            if q.oldest_arrival < oldest:
-                oldest = q.oldest_arrival
-        return Telemetry(
+        tels = self._tenant_telemetry(split=False)
+        return tels.get(DEFAULT_TENANT) or Telemetry(
             now=self.clock,
             arrival_rate=self.control.arrival_rate if self.control else 0.0,
-            pending_objects=pending,
-            resident_objects=resident,
-            n_queues=len(queues),
-            oldest_age_ms=max(0.0, (self.clock - oldest) * 1e3),
-            cache_hit_rate=self.cache.stats.hit_rate
-            if hasattr(self.cache, "stats")
-            else 0.0,
+            pending_objects=0,
+            resident_objects=0,
+            n_queues=0,
+            oldest_age_ms=0.0,
+            cache_hit_rate=self._hit_rate(),
             occupancy=self._occupancy,
         )
 
+    def _hit_rate(self) -> float:
+        return (
+            self.cache.stats.hit_rate if hasattr(self.cache, "stats") else 0.0
+        )
+
+    def _tenant_telemetry(self, split: bool = True) -> dict[str, Telemetry]:
+        """One pass over the nonempty queues, sliced per tenant class when
+        ``split`` (the multi-tenant plane) and aggregated under the default
+        tenant otherwise.  Still O(B) per round — the select itself stays
+        O(dirty·logB); push these into subscription-maintained counters if
+        B ever dominates the round."""
+        wm = self.wm
+        tenant_of = self.tenant_of if split else (lambda b: DEFAULT_TENANT)
+        # per tenant: [pending, resident, pending_bytes, resident_bytes,
+        #             n_queues, oldest]
+        agg: dict[str, list] = {}
+        for q in wm.nonempty_queues():
+            t = tenant_of(q.bucket_id)
+            a = agg.setdefault(t, [0, 0, 0.0, 0.0, 0, self.clock])
+            size = q.size
+            a[0] += size
+            a[1] += getattr(q, "resident_size", size)
+            a[2] += getattr(q, "nbytes", float(size))
+            a[3] += getattr(q, "resident_bytes", float(size))
+            a[4] += 1
+            if q.oldest_arrival < a[5]:
+                a[5] = q.oldest_arrival
+        rate = self.control.arrival_rate if self.control else 0.0
+        hit = self._hit_rate()
+        return {
+            t: Telemetry(
+                now=self.clock,
+                arrival_rate=rate,
+                pending_objects=a[0],
+                resident_objects=a[1],
+                n_queues=a[4],
+                oldest_age_ms=max(0.0, (self.clock - a[5]) * 1e3),
+                cache_hit_rate=hit,
+                occupancy=self._occ_by_tenant.get(t, self._occupancy)
+                if split
+                else self._occupancy,
+                pending_bytes=a[2],
+                resident_bytes=a[3],
+            )
+            for t, a in agg.items()
+        }
+
     # -- one scheduling round ----------------------------------------------------
     def round(self) -> Optional[DispatchOutcome]:
-        if self.control is not None:
+        tenant_vectors: Optional[dict[str, ControlVector]] = None
+        if self._plane is not None:
+            vector, spill_changed, tenant_vectors = self._consult_plane()
+        elif self.control is not None:
             vector = self.control.update(self.telemetry())
             if hasattr(self.scheduler, "alpha"):
                 self.scheduler.alpha = vector.alpha
@@ -141,8 +205,79 @@ class DispatchLoop:
         self.batches += len(decisions)
         self.dispatches += 1
         self._occupancy = self._measure_occupancy(decisions)
+        if self._plane is not None:
+            self._measure_tenant_occupancy(decisions)
         self.last_vector = vector
-        return DispatchOutcome(tuple(decisions), cost, vector, tuple(spill_changed))
+        self.last_tenant_vectors = tenant_vectors
+        outcome = DispatchOutcome(
+            tuple(decisions), cost, vector, tuple(spill_changed),
+            tenant_vectors,
+        )
+        if self.on_round is not None:
+            self.on_round(outcome)
+        return outcome
+
+    # -- multi-tenant consult -----------------------------------------------------
+    def _consult_plane(self):
+        """Per-tenant control: slice telemetry by tenant class, run every
+        tenant's feedback laws, thread per-tenant alphas into the shared
+        scheduler (per-bucket blends), and enforce spill per tenant against
+        the arbiter's byte grants.  Returns the merged round vector (what
+        the dispatch mechanics use), the spill transitions, and the
+        per-tenant vectors."""
+        plane = self._plane
+        vecs = plane.update(self._tenant_telemetry())
+        if hasattr(self.scheduler, "set_tenant_alphas"):
+            self.scheduler.set_tenant_alphas(
+                {t: v.alpha for t, v in vecs.items()}, self.tenant_of
+            )
+        changed: list[int] = []
+        for t, v in vecs.items():
+            grant = (
+                plane.granted_bytes.get(t)
+                if plane.global_budget_bytes is not None
+                else None
+            )
+            changed += apply_spill(
+                self.wm, v, plane.policies[t].config,
+                budget_bytes=grant,
+                only=lambda b, _t=t: self.tenant_of(b) == _t,
+            )
+        merged = ControlVector(
+            # alpha is informational here — scoring used per-bucket tenant
+            # alphas; fuse_k must cover the hungriest tenant's breadth.
+            alpha=sum(v.alpha for v in vecs.values()) / max(len(vecs), 1),
+            fuse_k=max((v.fuse_k for v in vecs.values()), default=1),
+            spill=any(v.spill for v in vecs.values()),
+        )
+        return merged, changed, dict(vecs)
+
+    def _measure_tenant_occupancy(self, decisions: Sequence[SchedulerDecision]) -> None:
+        """Per-tenant fuse_k feedback: each tenant's AIMD law sees the fill
+        fraction of its own slice of the fused dispatch.  Tenants absent
+        from this round keep their previous signal.  One pass over the
+        queues total (not per tenant)."""
+        by_tenant: dict[str, list[SchedulerDecision]] = {}
+        for d in decisions:
+            by_tenant.setdefault(self.tenant_of(d.bucket_id), []).append(d)
+        if self.batch_capacity:
+            for t, ds in by_tenant.items():
+                cap = self.batch_capacity * len(ds)
+                serviced = sum(
+                    min(d.queue_size, self.batch_capacity) for d in ds
+                )
+                self._occ_by_tenant[t] = min(1.0, serviced / max(cap, 1))
+            return
+        remaining_by_tenant: dict[str, int] = {}
+        for q in self.wm.nonempty_queues():
+            t = self.tenant_of(q.bucket_id)
+            remaining_by_tenant[t] = remaining_by_tenant.get(t, 0) + q.size
+        for t, ds in by_tenant.items():
+            serviced = sum(d.queue_size for d in ds)
+            remaining = remaining_by_tenant.get(t, 0)
+            self._occ_by_tenant[t] = min(
+                1.0, serviced / max(serviced + remaining, 1)
+            )
 
     def _measure_occupancy(self, decisions: Sequence[SchedulerDecision]) -> float:
         """Fill fraction of the dispatch just executed, the fuse_k feedback

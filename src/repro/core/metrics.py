@@ -1,14 +1,18 @@
 """Workload-throughput and aged-workload-throughput metrics (paper §3.2-3.3).
 
 Eq. 1:  U_t(i) = |W_i| / (T_b * phi(i) + T_m * |W_i| + T_spill * sigma(i))
-Eq. 2:  U_a(i) = U_t(i) * (1 - alpha) + A(i) * alpha
+Eq. 2:  U_a(i) = U_t(i) * (1 - alpha_i) + A(i) * alpha_i
 
 with |W_i| the bucket's pending-object count, T_b the bucket read cost,
 T_m the per-object match cost, phi(i) = 0 iff the bucket is cached,
-sigma(i) = 1 iff the bucket's workload has been spilled to host (§6
-workload overflow: spilled queues pay a read-back surcharge, so they are
-deprioritized until their age term reclaims them), and A(i) the age (ms)
-of the oldest pending request.
+sigma(i) in [0, 1] the *fraction* of the bucket's workload bytes spilled
+to host (§6 workload overflow: a spilled workload pays a pro-rated
+read-back surcharge, so it is deprioritized until its age term reclaims
+it; whole-queue spill is the sigma = 1 special case and reproduces the
+historical boolean semantics bit for bit), and A(i) the age (ms) of the
+oldest pending request.  ``alpha_i`` is per-bucket when the multi-tenant
+control plane is active (each tenant class runs its own alpha law) and
+the scalar Eq. 2 blend otherwise.
 
 The paper combines U_t (objects/sec) and A (ms) on raw scales; we reproduce
 that faithfully (``normalized=False``) and additionally offer a
@@ -24,9 +28,15 @@ now-independent rebased key and the incremental heap path applies
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Optional
+from typing import Callable, Iterable, Mapping, Optional, Union
 
-__all__ = ["CostModel", "workload_throughput", "aged_workload_throughput", "PAPER_COST_MODEL"]
+__all__ = [
+    "CostModel",
+    "workload_throughput",
+    "aged_workload_throughput",
+    "per_tenant_latency",
+    "PAPER_COST_MODEL",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,24 +47,32 @@ class CostModel:
     T_b = bucket_bytes / HBM_bw (state residency cost) and
     T_m = max(flops/peak, bytes/bw) per request.
 
-    ``T_spill`` is the §6 overflow read-back surcharge a spilled workload
-    queue pays on top of the bucket read (0 disables the score effect).
-    ``age_scale_ms`` is the fixed age-normalization horizon used by
-    ``normalized=True`` scoring.
+    ``T_spill`` is the §6 overflow read-back surcharge a *fully* spilled
+    workload queue pays on top of the bucket read (0 disables the score
+    effect); a partially spilled queue pays it pro-rated by its spilled
+    byte fraction sigma.  ``age_scale_ms`` is the fixed age-normalization
+    horizon used by ``normalized=True`` scoring.  ``probe_bytes`` is the
+    size of one pending probe object's host-side state — the §6 overflow
+    budget is denominated in these actual bytes, not object counts.
     """
 
     T_b: float = 1.2  # seconds to read one bucket from backing store
     T_m: float = 0.13e-3  # seconds to match one object in memory
-    T_spill: float = 0.0  # seconds to page a spilled workload queue back in
+    T_spill: float = 0.0  # seconds to page a fully spilled queue back in
     age_scale_ms: float = 1e3  # normalized=True age horizon (ms)
+    probe_bytes: float = 1.0  # bytes of spillable state per pending object
 
     def batch_cost(
-        self, queue_size: int, in_cache: bool, spilled: bool = False
+        self, queue_size: int, in_cache: bool,
+        spilled: Union[bool, float] = False,
     ) -> float:
-        """Wall-clock cost of servicing one bucket batch (denominator of Eq. 1)."""
+        """Wall-clock cost of servicing one bucket batch (denominator of
+        Eq. 1).  ``spilled`` is the spilled byte fraction sigma in [0, 1];
+        booleans are accepted for the legacy whole-queue semantics (True
+        multiplies by exactly 1.0, so scores are bit-identical)."""
         cost = self.T_b * (0.0 if in_cache else 1.0) + self.T_m * queue_size
         if spilled:
-            cost += self.T_spill
+            cost += self.T_spill * float(spilled)
         return cost
 
 
@@ -62,9 +80,13 @@ PAPER_COST_MODEL = CostModel(T_b=1.2, T_m=0.13e-3)
 
 
 def workload_throughput(
-    queue_size: int, in_cache: bool, cost: CostModel, spilled: bool = False
+    queue_size: int, in_cache: bool, cost: CostModel,
+    spilled: Union[bool, float] = False,
 ) -> float:
-    """Eq. 1 — objects consumed per second if this bucket is scheduled now."""
+    """Eq. 1 — objects consumed per second if this bucket is scheduled now.
+
+    ``spilled`` is the spilled byte fraction sigma (bool == legacy whole-
+    queue semantics, numerically identical to sigma = 1.0)."""
     if queue_size <= 0:
         return 0.0
     return queue_size / cost.batch_cost(queue_size, in_cache, spilled)
@@ -77,12 +99,19 @@ def aged_workload_throughput(
     cost: CostModel,
     alpha: float,
     normalized: bool = False,
-    spilled: Optional[Mapping[int, bool]] = None,
+    spilled: Optional[Mapping[int, Union[bool, float]]] = None,
+    alpha_by_bucket: Optional[Mapping[int, float]] = None,
 ) -> dict[int, float]:
     """Eq. 2 for every candidate bucket; returns {bucket_id: U_a}.
 
     ``alpha`` = 0 -> pure greedy (most contentious data first);
     ``alpha`` = 1 -> arrival order (oldest request first), I/O sharing intact.
+    ``alpha_by_bucket`` overrides the scalar per bucket — the multi-tenant
+    control plane's per-tenant alpha laws land here (a bucket owned by the
+    interactive tenant class blends with that tenant's alpha while a batch
+    bucket in the same candidate set blends with its own).
+    ``spilled`` maps bucket -> sigma, the spilled byte fraction (bools
+    accepted for whole-queue legacy semantics).
 
     NOTE: the ``normalized=True`` arithmetic below (multiply by ``cost.T_m``
     and by the reciprocal of ``cost.age_scale_ms``, then blend) is the
@@ -97,7 +126,7 @@ def aged_workload_throughput(
             n,
             bool(cached.get(b, False)),
             cost,
-            bool(spilled.get(b, False)) if spilled else False,
+            spilled.get(b, False) if spilled else False,
         )
         for b, n in queue_sizes.items()
     }
@@ -106,4 +135,50 @@ def aged_workload_throughput(
         inv_age = 1.0 / cost.age_scale_ms
         ut = {b: v * cost.T_m for b, v in ut.items()}
         age = {b: v * inv_age for b, v in age.items()}
-    return {b: ut[b] * (1.0 - alpha) + age[b] * alpha for b in queue_sizes}
+    if alpha_by_bucket is None:
+        return {b: ut[b] * (1.0 - alpha) + age[b] * alpha for b in queue_sizes}
+    out = {}
+    for b in queue_sizes:
+        a = float(alpha_by_bucket.get(b, alpha))
+        if not 0.0 <= a <= 1.0:
+            raise ValueError(f"alpha[{b}] must be in [0,1], got {a}")
+        out[b] = ut[b] * (1.0 - a) + age[b] * a
+    return out
+
+
+def per_tenant_latency(
+    response_s: Mapping[int, float],
+    tenant_of: Union[Mapping[int, str], Callable[[int], str]],
+    makespan: float,
+    tenants: Iterable[str] = (),
+) -> dict[str, dict]:
+    """Per-tenant-class latency/throughput rollup over completed queries.
+
+    ``response_s`` maps query/request id -> response seconds;
+    ``tenant_of`` maps the id to its tenant class (mapping or callable).
+    Returns ``{tenant: {n, p50_response, p95_response, mean_response,
+    throughput}}`` — the per-class SLO surface the multi-tenant control
+    plane is steering (interactive p95 vs batch throughput).  ``tenants``
+    seeds classes that should appear even with zero completions.
+    """
+    import numpy as np
+
+    lookup = tenant_of if callable(tenant_of) else (
+        lambda qid: tenant_of.get(qid, "default")  # type: ignore[union-attr]
+    )
+    groups: dict[str, list[float]] = {t: [] for t in tenants}
+    for qid, resp in response_s.items():
+        groups.setdefault(lookup(qid), []).append(float(resp))
+    makespan = max(makespan, 1e-9)
+    out = {}
+    for tenant, resp in sorted(groups.items()):
+        arr = np.asarray(sorted(resp), dtype=np.float64)
+        out[tenant] = {
+            "n": int(len(arr)),
+            "p50_response": float(np.percentile(arr, 50)) if len(arr) else 0.0,
+            "p95_response": float(np.percentile(arr, 95)) if len(arr) else 0.0,
+            "max_response": float(arr[-1]) if len(arr) else 0.0,
+            "mean_response": float(arr.mean()) if len(arr) else 0.0,
+            "throughput": len(arr) / makespan,
+        }
+    return out

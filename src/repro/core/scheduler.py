@@ -33,12 +33,22 @@ the same rebasing applies with scaled coefficients:
 and the incremental heap path covers the serving engine's default config
 too (the historical O(B) fallback existed only because normalization used
 to couple scores through candidate-set maxima).
+
+Per-tenant alphas (``set_tenant_alphas``; the multi-tenant control plane)
+break the rebase's one assumption: the dropped trailing term
+``now*1e3*alpha`` is only candidate-constant when alpha is.  The index
+therefore keeps ONE lazy max-heap per *tenant group* (buckets sharing an
+alpha): within a group the rebase argument holds verbatim, and the
+cross-group argmax compares the handful of group tops after adding each
+group's own ``now``-correction — O(dirty·logB + T) per decision with T
+tenant classes.  Scalar alpha is the one-group special case, running the
+exact same code path as before.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Optional, Protocol
+from typing import Callable, Mapping, Optional, Protocol
 
 from .cache import BucketCache
 from .metrics import CostModel, aged_workload_throughput, workload_throughput
@@ -59,7 +69,8 @@ class SchedulerDecision:
     bucket_id: int
     score: float
     in_cache: bool
-    queue_size: int
+    queue_size: int  # total pending objects (|W_i|, resident + spilled)
+    resident_size: Optional[int] = None  # §6 resident prefix (None: untracked)
 
 
 class BucketScheduler(Protocol):
@@ -73,12 +84,14 @@ class _Entry:
     """Per-bucket incremental state (inputs to Eq. 1/2 + the rebased key)."""
 
     version: int
-    key: float  # S(i) = ut*(1-alpha) - oldest_ms*alpha (scaled if normalized)
+    key: float  # S(i) = ut*(1-alpha_i) - oldest_ms*alpha_i (scaled if norm.)
     ut: float
     oldest: float
-    size: int
+    size: int  # total pending objects (resident + spilled)
     cached: bool
-    spilled: bool = False
+    sigma: float = 0.0  # §6 spilled byte fraction in [0, 1]
+    resident: int = 0  # resident-prefix objects (== size unless spilled)
+    group: str = ""  # tenant group whose heap holds the live key
 
 
 class LifeRaftScheduler:
@@ -109,11 +122,17 @@ class LifeRaftScheduler:
         self.cost_model = cost_model
         self._alpha = float(alpha)
         self.normalized = normalized
+        # -- per-tenant alpha (multi-tenant control plane) --------------------
+        self._tenant_alphas: Optional[dict[str, float]] = None
+        self._tenant_of: Optional[Callable[[int], str]] = None
         # -- incremental state ------------------------------------------------
         self._wm: Optional[WorkloadManager] = None
         self._cache: Optional[BucketCache] = None
         self._entries: dict[int, _Entry] = {}
-        self._heap: list[tuple[float, int, int]] = []  # (-key, bucket, version)
+        # One lazy max-heap of (-key, bucket, version) per tenant group
+        # ("" = the scalar-alpha group; per-tenant groups only exist while
+        # tenant alphas are set).
+        self._heaps: dict[str, list[tuple[float, int, int]]] = {}
         self._dirty: set[int] = set()
         self._version = 0
         self._alpha_dirty = False
@@ -134,6 +153,58 @@ class LifeRaftScheduler:
             # (the stored ut/oldest inputs are alpha-independent).
             self._alpha_dirty = True
 
+    # -- per-tenant alpha (hot-swappable, like the scalar) ----------------------
+    def set_tenant_alphas(
+        self,
+        alphas: Optional[Mapping[str, float]],
+        tenant_of: Optional[Callable[[int], str]] = None,
+    ) -> None:
+        """Per-tenant Eq. 2 blends: bucket b scores with
+        ``alphas[tenant_of(b)]`` (scalar ``.alpha`` for unmapped tenants).
+        ``tenant_of`` must be a pure function of workload state that only
+        changes when the bucket's queue changes (which notifies the
+        incremental index); the WorkloadManager's ``tenant_of_bucket`` —
+        tenant of the oldest pending unit — satisfies this.  Passing
+        ``None`` reverts to the scalar blend.  Changes trigger the bulk
+        O(B) re-key, exactly like scalar alpha hot-swaps."""
+        alphas = dict(alphas) if alphas is not None else None
+        if alphas is not None:
+            for t, a in alphas.items():
+                if not 0.0 <= a <= 1.0:
+                    raise ValueError(f"alpha[{t!r}] must be in [0,1], got {a}")
+            if tenant_of is None:
+                raise ValueError("tenant alphas require a tenant_of mapping")
+        if alphas != self._tenant_alphas or tenant_of is not self._tenant_of:
+            self._tenant_alphas = alphas
+            self._tenant_of = tenant_of if alphas is not None else None
+            self._alpha_dirty = True
+
+    def _alpha_for(self, bucket_id: int) -> float:
+        if self._tenant_alphas is not None and self._tenant_of is not None:
+            return self._tenant_alphas.get(
+                self._tenant_of(bucket_id), self._alpha
+            )
+        return self._alpha
+
+    def _group_of(self, bucket_id: int) -> str:
+        """Heap-group key: buckets sharing an alpha share a heap (the
+        rebased-key comparison is only valid within one alpha)."""
+        if self._tenant_alphas is not None and self._tenant_of is not None:
+            t = self._tenant_of(bucket_id)
+            if t in self._tenant_alphas:
+                return t
+        return ""
+
+    def _group_alpha(self, group: str) -> float:
+        if group and self._tenant_alphas is not None:
+            return self._tenant_alphas[group]
+        return self._alpha
+
+    def heap_size(self) -> int:
+        """Total live+stale heap entries across tenant groups (the
+        compaction bound's subject)."""
+        return sum(len(h) for h in self._heaps.values())
+
     # -- public maintenance hooks ---------------------------------------------
     def mark_dirty(self, bucket_id: int) -> None:
         self._dirty.add(bucket_id)
@@ -142,7 +213,7 @@ class LifeRaftScheduler:
         """Drop the incremental index; it re-seeds on the next select()."""
         self._unbind()
         self._entries.clear()
-        self._heap.clear()
+        self._heaps.clear()
         self._dirty.clear()
         self._alpha_dirty = False
 
@@ -208,7 +279,7 @@ class LifeRaftScheduler:
             return
         self._unbind()
         self._entries.clear()
-        self._heap.clear()
+        self._heaps.clear()
         self._dirty.clear()
         self._wm = wm
         self._cache = cache
@@ -225,19 +296,26 @@ class LifeRaftScheduler:
         if self._alpha_dirty:
             # Bulk re-key: ut/oldest are alpha-independent, so this needs no
             # wm/cache reads — O(B) rebuild instead of B dirty heappushes.
+            # (Per-tenant alphas re-key here too: tenant_of(b) only shifts
+            # when b's queue changes, which marks b dirty below.)
             self._alpha_dirty = False
-            alpha = self._alpha
-            for e in self._entries.values():
+            self._heaps = {}
+            for b, e in self._entries.items():
+                group = self._group_of(b)
+                alpha = self._group_alpha(group)
                 self._version += 1
                 e.version = self._version
+                e.group = group
                 e.key = e.ut * uts * (1.0 - alpha) - e.oldest * 1e3 * ags * alpha
-            self._heap = [
-                (-e.key, b, e.version) for b, e in self._entries.items()
-            ]
-            heapq.heapify(self._heap)
+                self._heaps.setdefault(group, []).append(
+                    (-e.key, b, e.version)
+                )
+            for heap in self._heaps.values():
+                heapq.heapify(heap)
         if not self._dirty:
             return
-        wm, cache, alpha = self._wm, self._cache, self._alpha
+        wm, cache = self._wm, self._cache
+        sigma_of = getattr(wm, "spilled_fraction", None)
         is_spilled = getattr(wm, "is_spilled", None)
         for b in self._dirty:
             q = wm.queues.get(b)
@@ -246,27 +324,38 @@ class LifeRaftScheduler:
                 continue
             size = q.size
             cached = bool(cache.contains(b))
-            spilled = bool(is_spilled(b)) if is_spilled is not None else False
-            ut = workload_throughput(size, cached, self.cost_model, spilled)
+            if sigma_of is not None:
+                sigma = float(sigma_of(b))
+            elif is_spilled is not None:
+                sigma = float(bool(is_spilled(b)))
+            else:
+                sigma = 0.0
+            ut = workload_throughput(size, cached, self.cost_model, sigma)
             oldest = q.oldest_arrival
+            group = self._group_of(b)
+            alpha = self._group_alpha(group)
             key = ut * uts * (1.0 - alpha) - oldest * 1e3 * ags * alpha
             self._version += 1
             self._entries[b] = _Entry(
-                self._version, key, ut, oldest, size, cached, spilled
+                self._version, key, ut, oldest, size, cached, sigma,
+                getattr(q, "resident_size", size), group,
             )
-            heapq.heappush(self._heap, (-key, b, self._version))
+            heapq.heappush(
+                self._heaps.setdefault(group, []), (-key, b, self._version)
+            )
         self._dirty.clear()
-        if len(self._heap) > 4 * max(len(self._entries), 8):
+        if self.heap_size() > 4 * max(len(self._entries), 8):
             self._compact()
 
     def _compact(self) -> None:
-        self._heap = [
-            (-e.key, b, e.version) for b, e in self._entries.items()
-        ]
-        heapq.heapify(self._heap)
+        self._heaps = {}
+        for b, e in self._entries.items():
+            self._heaps.setdefault(e.group, []).append((-e.key, b, e.version))
+        for heap in self._heaps.values():
+            heapq.heapify(heap)
 
-    def _pop_stale(self) -> None:
-        heap = self._heap
+    def _pop_stale(self, group: str) -> None:
+        heap = self._heaps.get(group, [])
         while heap:
             _, b, ver = heap[0]
             e = self._entries.get(b)
@@ -276,39 +365,55 @@ class LifeRaftScheduler:
                 return
 
     def _select_one(self, now: float) -> Optional[SchedulerDecision]:
-        self._pop_stale()
-        if not self._heap:
+        groups = []
+        for g in self._heaps:
+            self._pop_stale(g)
+            if self._heaps[g]:
+                groups.append(g)
+        if not groups:
             return None
-        alpha = self._alpha
         uts, ags = self._key_coeffs()
-        s_max = -self._heap[0][0]
-        # Widen to a tolerance window: the rebased key and the oracle's
-        # U_a formula round differently, so any bucket within a few-ulp
-        # band of the top could be the oracle argmax.  1e-9 relative is
-        # ~4000x the double-precision rounding error of either formula.
-        tol = 1e-9 * (abs(s_max) + abs(now) * 1e3 * ags * alpha + 1.0)
-        popped: list[tuple[float, int, int]] = []
+        # The rebased key S drops the trailing now*1e3*alpha term, which is
+        # only constant *within* a group (one alpha); cross-group
+        # comparison adds each group's correction back.  One group ==
+        # scalar alpha == the historical single-heap path.
+        corr = {
+            g: (now * 1e3) * ags * self._group_alpha(g) for g in groups
+        }
+        best_est = max(-self._heaps[g][0][0] + corr[g] for g in groups)
         finalists: list[tuple[int, _Entry]] = []
-        while self._heap:
-            negk, b, ver = self._heap[0]
-            e = self._entries.get(b)
-            if e is None or e.version != ver:
-                heapq.heappop(self._heap)
-                continue
-            if -negk < s_max - tol:
-                break
-            heapq.heappop(self._heap)
-            popped.append((negk, b, ver))
-            finalists.append((b, e))
-        for item in popped:
-            heapq.heappush(self._heap, item)
+        for g in groups:
+            heap = self._heaps[g]
+            alpha_g = self._group_alpha(g)
+            s_max_g = -heap[0][0]
+            # Widen to a tolerance window: the rebased key and the oracle's
+            # U_a formula round differently, so any bucket within a few-ulp
+            # band of the top could be the oracle argmax.  1e-9 relative is
+            # ~4000x the double-precision rounding error of either formula.
+            tol = 1e-9 * (abs(s_max_g) + abs(now) * 1e3 * ags * alpha_g + 1.0)
+            popped: list[tuple[float, int, int]] = []
+            while heap:
+                negk, b, ver = heap[0]
+                e = self._entries.get(b)
+                if e is None or e.version != ver:
+                    heapq.heappop(heap)
+                    continue
+                if -negk + corr[g] < best_est - tol:
+                    break
+                heapq.heappop(heap)
+                popped.append((negk, b, ver))
+                finalists.append((b, e))
+            for item in popped:
+                heapq.heappush(heap, item)
         # Re-rank finalists with the oracle's exact arithmetic + tie-break
         # (same multiply order as aged_workload_throughput; uts/ags are 1.0
-        # on the raw scales, where x * 1.0 is an IEEE identity).
+        # on the raw scales, where x * 1.0 is an IEEE identity; the group
+        # alpha IS the oracle's per-bucket alpha).
         def ua(be):
             b, e = be
+            a = self._group_alpha(e.group)
             age = (now - e.oldest) * 1e3
-            return ((e.ut * uts) * (1.0 - alpha) + (age * ags) * alpha, -b)
+            return ((e.ut * uts) * (1.0 - a) + (age * ags) * a, -b)
 
         b, e = max(finalists, key=ua)
         return SchedulerDecision(
@@ -316,6 +421,7 @@ class LifeRaftScheduler:
             score=ua((b, e))[0],
             in_cache=e.cached,
             queue_size=e.size,
+            resident_size=e.resident,
         )
 
 
@@ -342,24 +448,36 @@ def _naive_scores(sched, wm, cache, now):
     if not queues:
         return None
     sizes = {q.bucket_id: q.size for q in queues}
+    resident = {
+        q.bucket_id: getattr(q, "resident_size", q.size) for q in queues
+    }
     cached = {q.bucket_id: cache.contains(q.bucket_id) for q in queues}
+    sigma_of = getattr(wm, "spilled_fraction", None)
     is_spilled = getattr(wm, "is_spilled", None)
-    spilled = (
-        {b: bool(is_spilled(b)) for b in sizes} if is_spilled is not None else None
+    if sigma_of is not None:
+        spilled = {b: float(sigma_of(b)) for b in sizes}
+    elif is_spilled is not None:
+        spilled = {b: float(bool(is_spilled(b))) for b in sizes}
+    else:
+        spilled = None
+    alpha_map = (
+        {b: sched._alpha_for(b) for b in sizes}
+        if sched._tenant_alphas is not None
+        else None
     )
     ages = wm.ages_ms(now)
     ua = aged_workload_throughput(
         sizes, ages, cached, sched.cost_model, sched.alpha, sched.normalized,
-        spilled,
+        spilled, alpha_map,
     )
-    return sizes, cached, ua
+    return sizes, resident, cached, ua
 
 
 def _naive_select(sched, wm, cache, now) -> Optional[SchedulerDecision]:
     scored = _naive_scores(sched, wm, cache, now)
     if scored is None:
         return None
-    sizes, cached, ua = scored
+    sizes, resident, cached, ua = scored
     # Deterministic tie-break on bucket id for reproducibility.
     best = max(ua, key=lambda b: (ua[b], -b))
     return SchedulerDecision(
@@ -367,6 +485,7 @@ def _naive_select(sched, wm, cache, now) -> Optional[SchedulerDecision]:
         score=ua[best],
         in_cache=cached[best],
         queue_size=sizes[best],
+        resident_size=resident[best],
     )
 
 
@@ -374,11 +493,12 @@ def _naive_topk(sched, wm, cache, now, k) -> list[SchedulerDecision]:
     scored = _naive_scores(sched, wm, cache, now)
     if scored is None:
         return []
-    sizes, cached, ua = scored
+    sizes, resident, cached, ua = scored
     order = sorted(ua, key=lambda b: (ua[b], -b), reverse=True)
     return [
         SchedulerDecision(
-            bucket_id=b, score=ua[b], in_cache=cached[b], queue_size=sizes[b]
+            bucket_id=b, score=ua[b], in_cache=cached[b], queue_size=sizes[b],
+            resident_size=resident[b],
         )
         for b in order[:k]
     ]

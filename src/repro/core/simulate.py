@@ -17,10 +17,10 @@ from typing import Callable, Iterable, Optional, Sequence
 import numpy as np
 
 from .cache import BucketCache
-from .control import ControlLoop
+from .control import ControlLoop, TenantControlPlane
 from .dispatch import DispatchLoop
 from .hybrid import HybridPlanner
-from .metrics import CostModel
+from .metrics import CostModel, per_tenant_latency
 from .scheduler import (
     BucketScheduler,
     LifeRaftScheduler,
@@ -47,6 +47,8 @@ class SimResult:
     n_batches: int
     indexed_batches: int = 0
     n_dispatches: int = 0  # scheduling rounds (== n_batches unless fused)
+    # per tenant class: {tenant: {n, p50/p95/mean_response, throughput}}
+    per_tenant: dict = dataclasses.field(default_factory=dict)
 
     def row(self) -> dict:
         return dataclasses.asdict(self)
@@ -63,8 +65,15 @@ def _collect(
     indexed_batches: int = 0,
     n_dispatches: int | None = None,
 ) -> SimResult:
-    resp = np.array(sorted(wm.response_times().values()), dtype=np.float64)
+    responses = wm.response_times()
+    resp = np.array(sorted(responses.values()), dtype=np.float64)
     makespan = max(makespan, 1e-9)
+    tenants = {q.tenant for q in wm.queries.values()}
+    per_tenant = (
+        per_tenant_latency(responses, wm.tenant_of_query, makespan, tenants)
+        if len(tenants) > 1
+        else {}
+    )
     return SimResult(
         policy=policy,
         makespan=makespan,
@@ -79,6 +88,7 @@ def _collect(
         n_batches=n_batches,
         indexed_batches=indexed_batches,
         n_dispatches=n_batches if n_dispatches is None else n_dispatches,
+        per_tenant=per_tenant,
     )
 
 
@@ -92,7 +102,8 @@ def simulate_batched(
     alpha_hook: Optional[Callable[[float], float]] = None,
     bucket_of_keys=None,
     fuse_k: int = 1,
-    control: Optional[ControlLoop] = None,
+    control: Optional[ControlLoop | TenantControlPlane] = None,
+    on_round=None,
 ) -> SimResult:
     """Batched policies (LifeRaft any alpha, RR): one bucket batch at a time.
 
@@ -102,14 +113,20 @@ def simulate_batched(
     supplies only the cost-model executor.
 
     ``control`` plugs in the closed-loop ControlLoop (alpha/fuse_k/spill per
-    round); it overrides ``alpha_hook`` and the static ``fuse_k``.
+    round); it overrides ``alpha_hook`` and the static ``fuse_k``.  A
+    ``TenantControlPlane`` runs one control vector per tenant class —
+    queries are classed by their ``meta['tenant']`` tag, buckets by the
+    tenant of their oldest pending unit — and ``SimResult.per_tenant``
+    reports the per-class p50/p95/throughput rollup.
     ``alpha_hook(t) -> alpha`` remains for open-loop retuning on arrivals.
     ``fuse_k > 1`` services the top-k buckets per scheduling round (the
     fused multi-bucket execution path); residency/cost accounting stays
     per-bucket, but only one dispatch is counted.
     """
     queries = sorted(queries, key=lambda q: q.arrival_time)
-    wm = WorkloadManager(bucket_of_range, bucket_of_keys)
+    wm = WorkloadManager(
+        bucket_of_range, bucket_of_keys, probe_bytes=cost.probe_bytes
+    )
     cache = BucketCache(cache_capacity)
     i = 0
     indexed_batches = 0
@@ -123,10 +140,13 @@ def simulate_batched(
             # insertion can evict a later one; cost must track the actual
             # read (for fuse_k == 1 this equals the decision snapshot).
             in_cache = cache.contains(decision.bucket_id)
-            spilled = wm.is_spilled(decision.bucket_id)
+            # sigma-pro-rated §6 read-back (== full T_spill for a wholly
+            # spilled queue) — mirrors CrossMatchEngine._plan_and_fetch
+            # and the scheduler's Eq. 1 so priced and charged costs agree.
+            sigma = wm.spilled_fraction(decision.bucket_id)
             if hybrid is not None:
                 plan = hybrid.plan(decision.queue_size, in_cache)
-                step = plan.est_cost + (cost.T_spill if spilled else 0.0)
+                step = plan.est_cost + cost.T_spill * sigma
                 if plan.strategy == "indexed":
                     indexed_batches += 1
                     # Same accounting as CrossMatchEngine._plan_and_fetch:
@@ -139,14 +159,15 @@ def simulate_batched(
                 else:
                     cache.access(decision.bucket_id)
             else:
-                step = cost.batch_cost(decision.queue_size, in_cache, spilled)
+                step = cost.batch_cost(decision.queue_size, in_cache, sigma)
                 cache.access(decision.bucket_id)
             round_cost += step
             total_objects += decision.queue_size
         return round_cost
 
     loop = DispatchLoop(
-        scheduler, wm, cache, execute, control=control, fuse_k=fuse_k
+        scheduler, wm, cache, execute, control=control, fuse_k=fuse_k,
+        tenant_of=wm.tenant_of_bucket, on_round=on_round,
     )
 
     def admit(until: float) -> None:
@@ -176,7 +197,9 @@ def simulate_batched(
     name = getattr(scheduler, "name", type(scheduler).__name__)
     if isinstance(scheduler, LifeRaftScheduler):
         name = f"{scheduler.name}(a={scheduler.alpha:g})"
-    if control is not None:
+    if isinstance(control, TenantControlPlane):
+        name = f"{name}+mt"
+    elif control is not None:
         name = f"{name}+ctl"
     return _collect(
         name, wm, cache, loop.clock, loop.busy, loop.batches, total_objects,
@@ -230,6 +253,7 @@ def run_policy(
     bucket_of_keys=None,
     fuse_k: int = 1,
     control: Optional[ControlLoop] = None,
+    on_round=None,
 ) -> SimResult:
     """Convenience dispatcher used by benchmarks:
     'noshare'|'rr'|'liferaft'|'liferaft-naive'."""
@@ -249,4 +273,5 @@ def run_policy(
     return simulate_batched(
         queries, bucket_of_range, sched, cost, cache_capacity, hybrid,
         bucket_of_keys=bucket_of_keys, fuse_k=fuse_k, control=control,
+        on_round=on_round,
     )

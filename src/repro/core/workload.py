@@ -7,6 +7,16 @@ interleaved in the same queue and joined in one pass.
 
 A query completes only when every one of its work units has been evaluated
 (the paper's "last-mile bottleneck", §3.3).
+
+§6 workload overflow is *partial* and *byte-accurate*: a queue can spill
+only its youngest work units to host (``spill_bucket(b, frac)``) while the
+oldest units stay resident — so the age term A(i) keeps its monotone
+now-independent rebase (the oldest pending arrival never moves on a spill)
+and the requesters who have waited longest never pay the host round-trip.
+Accounting is in actual probe bytes (``CostModel.probe_bytes`` stamped
+onto each unit at submit), not the object-count proxy: the §6 budget is a
+memory budget, and probe payloads — not abstract objects — are what
+occupy it.
 """
 from __future__ import annotations
 
@@ -16,7 +26,9 @@ from typing import Any, Callable, Iterable
 
 import numpy as np
 
-__all__ = ["Query", "WorkUnit", "WorkloadQueue", "WorkloadManager"]
+__all__ = ["Query", "WorkUnit", "WorkloadQueue", "WorkloadManager", "DEFAULT_TENANT"]
+
+DEFAULT_TENANT = "default"
 
 
 @dataclasses.dataclass
@@ -26,6 +38,8 @@ class Query:
     ``keys_lo``/``keys_hi`` are per-object SFC bounding ranges (the paper's
     per-object HTM ID range covering all potential match regions).
     ``payload`` carries whatever the evaluator needs (e.g. unit vectors).
+    ``meta['tenant']`` tags the query's tenant class (interactive vs batch)
+    for the multi-tenant control plane; untagged queries are 'default'.
     """
 
     query_id: int
@@ -39,15 +53,26 @@ class Query:
     def n_objects(self) -> int:
         return len(self.keys_lo)
 
+    @property
+    def tenant(self) -> str:
+        return self.meta.get("tenant", DEFAULT_TENANT)
+
 
 @dataclasses.dataclass
 class WorkUnit:
-    """W_j^i: the part of query ``query_id`` overlapping bucket ``bucket_id``."""
+    """W_j^i: the part of query ``query_id`` overlapping bucket ``bucket_id``.
+
+    ``nbytes`` is the unit's probe payload size (object count x the cost
+    model's ``probe_bytes``), stamped at submit — the currency of the §6
+    overflow budget.  ``tenant`` is the parent query's tenant class.
+    """
 
     query_id: int
     bucket_id: int
     object_idx: np.ndarray  # indices into the parent query's object arrays
     arrival_time: float
+    nbytes: float = 0.0
+    tenant: str = DEFAULT_TENANT
 
     @property
     def size(self) -> int:
@@ -55,43 +80,173 @@ class WorkUnit:
 
 
 class WorkloadQueue:
-    """Pending work units for one bucket."""
+    """Pending work units for one bucket, split into a *resident prefix*
+    (the oldest units) and a *spilled suffix* (the youngest, paged to
+    host under §6 overflow).
 
-    __slots__ = ("bucket_id", "units", "_size", "_oldest")
+    Invariants the schedulers and the control plane rely on:
+      * ``oldest_arrival`` spans both sides and is maintained O(1) on push
+        (units leave only wholesale via ``drain``), so the incremental
+        scheduler's rebased key stays now-independent;
+      * spilling moves only the *youngest* units — for a partial spill the
+        oldest unit is always resident;
+      * ``size``/``nbytes`` count all pending work (Eq. 1's |W_i| is
+        unchanged by residency); ``resident_size``/``resident_bytes``
+        count only the resident prefix (the §6 budget target).
+    """
+
+    __slots__ = (
+        "bucket_id", "units", "spilled_units",
+        "_size", "_spilled_size", "_bytes", "_spilled_bytes",
+        "_oldest", "_oldest_tenant", "_spilled_oldest",
+    )
 
     def __init__(self, bucket_id: int) -> None:
         self.bucket_id = bucket_id
-        self.units: list[WorkUnit] = []
+        self.units: list[WorkUnit] = []  # resident prefix (oldest work)
+        self.spilled_units: list[WorkUnit] = []  # youngest, on host
         self._size = 0
+        self._spilled_size = 0
+        self._bytes = 0.0
+        self._spilled_bytes = 0.0
         self._oldest = np.inf
+        self._oldest_tenant = DEFAULT_TENANT
+        self._spilled_oldest = np.inf  # oldest arrival on the spilled side
 
     def push(self, unit: WorkUnit) -> None:
-        self.units.append(unit)
+        # While any of the queue is spilled, new (youngest) work lands on
+        # the spilled side: the resident prefix stays an age-contiguous
+        # cut, and an overflowing queue cannot grow its resident footprint
+        # behind the budget's back.  A unit older than the spill boundary
+        # (late out-of-order arrival) still belongs in the resident prefix.
+        if self.spilled_units and unit.arrival_time >= self._spilled_oldest:
+            self.spilled_units.append(unit)
+            self._spilled_size += unit.size
+            self._spilled_bytes += unit.nbytes
+        else:
+            self.units.append(unit)
         self._size += unit.size
+        self._bytes += unit.nbytes
         if unit.arrival_time < self._oldest:
             self._oldest = unit.arrival_time
+            self._oldest_tenant = unit.tenant
 
     def drain(self) -> list[WorkUnit]:
-        units, self.units, self._size = self.units, [], 0
+        units = self.units + self.spilled_units
+        self.units, self.spilled_units = [], []
+        self._size = self._spilled_size = 0
+        self._bytes = self._spilled_bytes = 0.0
         self._oldest = np.inf
+        self._oldest_tenant = DEFAULT_TENANT
+        self._spilled_oldest = np.inf
         return units
 
+    # -- §6 partial spill -------------------------------------------------------
+    def spill_youngest(self, frac: float = 1.0) -> int:
+        """Move the youngest resident units to host until the spilled byte
+        fraction reaches ``frac`` of the queue's total bytes.  Unit
+        granularity rounds *up* (spill at least the requested bytes); for
+        ``frac < 1`` the oldest unit always stays resident.  Returns the
+        number of units moved."""
+        if not self.units:
+            return 0
+        target = min(max(frac, 0.0), 1.0) * self._bytes
+        keep_oldest = frac < 1.0
+        # Youngest == largest arrival time; stable on ties so repeated
+        # partial spills are deterministic.
+        order = sorted(
+            range(len(self.units)),
+            key=lambda i: (self.units[i].arrival_time, i),
+        )
+        moved = 0
+        while self._spilled_bytes < target and order:
+            if keep_oldest and len(order) == 1:
+                break
+            i = order.pop()  # youngest remaining
+            unit = self.units[i]
+            self._spilled_size += unit.size
+            self._spilled_bytes += unit.nbytes
+            moved += 1
+        if moved:
+            resident_idx = sorted(order)
+            keep = set(resident_idx)
+            spilled = [u for i, u in enumerate(self.units) if i not in keep]
+            self.units = [self.units[i] for i in resident_idx]
+            # Spilled suffix stays youngest-last like the resident list.
+            self.spilled_units.extend(
+                sorted(spilled, key=lambda u: u.arrival_time)
+            )
+            self._spilled_oldest = min(
+                self._spilled_oldest,
+                min(u.arrival_time for u in spilled),
+            )
+        return moved
+
+    def unspill_all(self) -> int:
+        """Page every spilled unit back into the resident prefix.
+        Idempotent.  Returns the number of units restored."""
+        moved = len(self.spilled_units)
+        if moved:
+            merged = self.units + self.spilled_units
+            merged.sort(key=lambda u: u.arrival_time)
+            self.units = merged
+            self.spilled_units = []
+            self._spilled_size = 0
+            self._spilled_bytes = 0.0
+            self._spilled_oldest = np.inf
+        return moved
+
+    # -- accounting -------------------------------------------------------------
     @property
     def size(self) -> int:
-        """Total pending objects — |W_i| in Eq. 1."""
+        """Total pending objects — |W_i| in Eq. 1 (resident + spilled)."""
         return self._size
 
     @property
+    def resident_size(self) -> int:
+        return self._size - self._spilled_size
+
+    @property
+    def nbytes(self) -> float:
+        """Total pending probe bytes (resident + spilled)."""
+        return self._bytes
+
+    @property
+    def resident_bytes(self) -> float:
+        return self._bytes - self._spilled_bytes
+
+    @property
+    def spilled_bytes(self) -> float:
+        return self._spilled_bytes
+
+    @property
+    def spilled_fraction(self) -> float:
+        """sigma(i) in Eq. 1: spilled share of the queue's probe bytes.
+        Exactly 0.0 / 1.0 at the ends (a fully spilled queue pays exactly
+        T_spill, bit-identical to the legacy boolean semantics)."""
+        if not self._size or not self.spilled_units:
+            return 0.0
+        if not self.units:
+            return 1.0
+        return self._spilled_bytes / self._bytes
+
+    @property
     def oldest_arrival(self) -> float:
-        """Arrival time of the oldest pending unit, O(1) (maintained on
-        push; units are only removed wholesale by drain)."""
-        return self._oldest if self.units else np.inf
+        """Arrival time of the oldest pending unit (either side), O(1)."""
+        return self._oldest if self._size else np.inf
+
+    @property
+    def oldest_tenant(self) -> str:
+        """Tenant class of the oldest pending unit — the bucket's tenant
+        for per-tenant alpha (the oldest requester is who the age term is
+        protecting)."""
+        return self._oldest_tenant
 
     def __len__(self) -> int:
-        return len(self.units)
+        return len(self.units) + len(self.spilled_units)
 
     def __bool__(self) -> bool:
-        return bool(self.units)
+        return self._size > 0
 
 
 class WorkloadManager:
@@ -100,30 +255,35 @@ class WorkloadManager:
     Maintains: per-bucket workload queues, the query -> outstanding-bucket
     map, and per-queue oldest-request age.  ``decompose`` is the Query
     Pre-Processor: it maps each query object to the buckets its key range
-    overlaps.
+    overlaps.  ``probe_bytes`` (normally set from ``CostModel.probe_bytes``
+    by the engine) prices each pending object's host-side state for the §6
+    overflow budget.
     """
 
     def __init__(
         self,
         bucket_of_range: Callable[[int, int], np.ndarray],
         bucket_of_keys: Callable[[np.ndarray], np.ndarray] | None = None,
+        probe_bytes: float = 1.0,
     ):
         # bucket_of_range(key_lo, key_hi) -> array of overlapping bucket ids
         # bucket_of_keys(keys) -> bucket id per key (vectorized fast path)
         self._bucket_of_range = bucket_of_range
         self._bucket_of_keys = bucket_of_keys
+        self.probe_bytes = float(probe_bytes)
         self.queues: dict[int, WorkloadQueue] = {}
         self.outstanding: dict[int, set[int]] = {}  # query_id -> bucket ids
         self.queries: dict[int, Query] = {}
         self.completed: dict[int, float] = {}  # query_id -> completion time
         self._listeners: list[Callable[[int], None]] = []
-        self._spilled: set[int] = set()  # §6 workload overflow: queues on host
+        self._spilled: set[int] = set()  # buckets with any spilled units
 
     # -- change notification -------------------------------------------------
     def subscribe(self, fn: Callable[[int], None]) -> Callable[[int], None]:
         """Register ``fn(bucket_id)`` to fire whenever a bucket's queue
-        contents change (submit/drain).  Incremental schedulers use this to
-        rescore only touched buckets instead of rescanning every queue."""
+        contents change (submit/drain/spill).  Incremental schedulers use
+        this to rescore only touched buckets instead of rescanning every
+        queue."""
         self._listeners.append(fn)
         return fn
 
@@ -171,6 +331,8 @@ class WorkloadManager:
                 bucket_id=b,
                 object_idx=np.asarray(idx, dtype=np.int64),
                 arrival_time=query.arrival_time,
+                nbytes=len(idx) * self.probe_bytes,
+                tenant=query.tenant,
             )
             self.queues.setdefault(b, WorkloadQueue(b)).push(unit)
             units.append(unit)
@@ -188,33 +350,56 @@ class WorkloadManager:
         return self.queues.setdefault(bucket_id, WorkloadQueue(bucket_id))
 
     def ages_ms(self, now: float) -> dict[int, float]:
-        """A(i): age in milliseconds of the oldest request per bucket (§3.3)."""
+        """A(i): age in milliseconds of the oldest pending request per bucket
+        (§3.3).  Spilled units still age — overflow defers work, it never
+        forgets it."""
         return {
             b: (now - q.oldest_arrival) * 1e3
             for b, q in self.queues.items()
             if q
         }
 
+    def tenant_of_bucket(self, bucket_id: int) -> str:
+        """The bucket's tenant class for per-tenant alpha: the tenant of
+        its oldest pending unit (whoever the age term is protecting).
+        Changes only on push/drain, both of which notify subscribers."""
+        q = self.queues.get(bucket_id)
+        return q.oldest_tenant if q else DEFAULT_TENANT
+
     # -- §6 workload overflow (spill to host) ----------------------------------
     def is_spilled(self, bucket_id: int) -> bool:
+        """True if any of the bucket's pending workload is on host."""
         return bucket_id in self._spilled
 
-    def spill_bucket(self, bucket_id: int) -> bool:
-        """Mark a bucket's pending workload as overflowed to host.  The queue
-        stays schedulable but pays the cost model's ``T_spill`` read-back
-        surcharge, so the scheduler deprioritizes it until its age term
-        reclaims it (no starvation).  Returns True if the state changed."""
+    def spilled_fraction(self, bucket_id: int) -> float:
+        """sigma(i): the bucket's spilled byte fraction, in [0, 1]."""
         q = self.queues.get(bucket_id)
-        if bucket_id in self._spilled or q is None or not q:
+        return q.spilled_fraction if q else 0.0
+
+    def spill_bucket(self, bucket_id: int, frac: float = 1.0) -> bool:
+        """Spill the youngest ``frac`` of the bucket's pending probe bytes
+        to host (unit granularity, rounding up; ``frac=1`` spills the whole
+        queue — the legacy semantics).  The queue stays schedulable but
+        pays a sigma-pro-rated ``T_spill`` read-back surcharge in the
+        scheduler score, so it is deprioritized until its age term reclaims
+        it (no starvation).  Returns True if any unit moved."""
+        q = self.queues.get(bucket_id)
+        if q is None or not q:
+            return False
+        if not q.spill_youngest(frac):
             return False
         self._spilled.add(bucket_id)
         self._notify(bucket_id)
         return True
 
     def unspill_bucket(self, bucket_id: int) -> bool:
-        """Page a spilled workload queue back into the resident set."""
+        """Page a bucket's spilled workload back into the resident set.
+        Idempotent: unspilling an unspilled bucket is a no-op."""
         if bucket_id not in self._spilled:
             return False
+        q = self.queues.get(bucket_id)
+        if q is not None:
+            q.unspill_all()
         self._spilled.discard(bucket_id)
         self._notify(bucket_id)
         return True
@@ -223,19 +408,28 @@ class WorkloadManager:
         return sorted(self._spilled)
 
     def resident_objects(self) -> int:
-        """Pending objects NOT spilled to host (the overflow budget target)."""
-        return sum(
-            q.size for b, q in self.queues.items() if q and b not in self._spilled
-        )
+        """Pending objects NOT spilled to host."""
+        return sum(q.resident_size for q in self.queues.values() if q)
+
+    def resident_bytes(self) -> float:
+        """Pending probe bytes NOT spilled to host (the §6 budget target)."""
+        return sum(q.resident_bytes for q in self.queues.values() if q)
+
+    def pending_bytes(self) -> float:
+        return sum(q.nbytes for q in self.queues.values() if q)
+
+    def spilled_bytes(self) -> float:
+        return sum(q.spilled_bytes for q in self.queues.values() if q)
 
     # -- completion ------------------------------------------------------------
     def complete_bucket(self, bucket_id: int, now: float) -> list[int]:
-        """Drain bucket's queue; return ids of queries that fully completed."""
+        """Drain bucket's queue (both sides — servicing pages the spilled
+        suffix back in); return ids of queries that fully completed."""
         done = []
         q = self.queues.get(bucket_id)
         if q is None:
             return done
-        self._spilled.discard(bucket_id)  # servicing pages the workload back in
+        self._spilled.discard(bucket_id)
         if q:
             self._notify(bucket_id)
         for unit in q.drain():
@@ -262,3 +456,7 @@ class WorkloadManager:
             qid: t - self.queries[qid].arrival_time
             for qid, t in self.completed.items()
         }
+
+    def tenant_of_query(self, query_id: int) -> str:
+        q = self.queries.get(query_id)
+        return q.tenant if q is not None else DEFAULT_TENANT

@@ -29,10 +29,10 @@ from typing import Optional, Sequence
 import numpy as np
 
 from ..core.cache import BucketCache
-from ..core.control import ControlLoop
+from ..core.control import ControlLoop, TenantControlPlane
 from ..core.dispatch import DispatchLoop
 from ..core.hybrid import HybridPlanner
-from ..core.metrics import CostModel
+from ..core.metrics import CostModel, per_tenant_latency
 from ..core.scheduler import BucketScheduler, LifeRaftScheduler, SchedulerDecision
 from ..core.workload import Query, WorkloadManager
 from .catalog import SkyCatalog
@@ -63,12 +63,17 @@ class CrossMatchEngine:
         use_pallas: bool = False,
         mag_cut: float = 24.0,
         fuse_k: int = 1,
-        control: Optional[ControlLoop] = None,
+        control: Optional[ControlLoop | TenantControlPlane] = None,
     ) -> None:
         self.catalog = catalog
         self.cost_model = cost_model or CostModel()
         self.scheduler = scheduler or LifeRaftScheduler(self.cost_model, alpha=0.25)
-        self.wm = WorkloadManager(catalog.partitioner.buckets_for_range)
+        # Queries are tenant-classed by their meta['tenant'] tag; probe
+        # bytes price the §6 overflow budget (CostModel.probe_bytes).
+        self.wm = WorkloadManager(
+            catalog.partitioner.buckets_for_range,
+            probe_bytes=self.cost_model.probe_bytes,
+        )
         self.cache = BucketCache(cache_capacity)
         self.cos_thr = float(np.cos(match_radius_rad))
         self.hybrid = hybrid
@@ -82,6 +87,7 @@ class CrossMatchEngine:
         self.loop = DispatchLoop(
             self.scheduler, self.wm, self.cache, self._execute,
             control=control, fuse_k=self.fuse_k,
+            tenant_of=self.wm.tenant_of_bucket,
         )
 
     # -- loop-owned counters (kept as attributes for back-compat) --------------
@@ -140,13 +146,16 @@ class CrossMatchEngine:
             plan.est_cost
             if plan is not None
             else self.cost_model.batch_cost(
-                decision.queue_size, in_cache, self.wm.is_spilled(b)
+                decision.queue_size, in_cache, self.wm.spilled_fraction(b)
             )
         )
         return plan, payload, cost
 
     def _gather_probes(self, bucket_id: int):
-        units = list(self.wm.queue(bucket_id).units)
+        q = self.wm.queue(bucket_id)
+        # Servicing evaluates the whole queue — the spilled suffix is paged
+        # back in for the pass (T_spill already charged in the cost).
+        units = q.units + q.spilled_units
         probe_pos = np.concatenate(
             [
                 self.wm.queries[u.query_id].payload["positions"][u.object_idx]
@@ -278,6 +287,7 @@ class CrossMatchEngine:
     # -- metrics --------------------------------------------------------------------
     def summary(self) -> dict:
         rt = self.wm.response_times()
+        tenants = {q.tenant for q in self.wm.queries.values()}
         return {
             "n_queries": len(rt),
             "n_batches": self.batches,
@@ -285,4 +295,9 @@ class CrossMatchEngine:
             "mean_response": float(np.mean(list(rt.values()))) if rt else 0.0,
             "cache_hit_rate": self.cache.stats.hit_rate,
             "makespan": self.sim_clock,
+            "per_tenant": per_tenant_latency(
+                rt, self.wm.tenant_of_query, max(self.sim_clock, 1e-9), tenants
+            )
+            if len(tenants) > 1
+            else {},
         }

@@ -40,10 +40,16 @@ from typing import Callable, Optional
 import numpy as np
 
 from ..core.cache import BucketCache
-from ..core.control import ControlConfig, ControlLoop
+from ..core.control import (
+    ControlConfig,
+    ControlLoop,
+    TenantControlPlane,
+    TenantPolicy,
+)
 from ..core.dispatch import DispatchLoop
-from ..core.metrics import CostModel
+from ..core.metrics import CostModel, per_tenant_latency
 from ..core.scheduler import LifeRaftScheduler, RoundRobinScheduler
+from ..core.workload import DEFAULT_TENANT
 
 __all__ = [
     "Request",
@@ -73,6 +79,7 @@ class Request:
 class AdapterSpec:
     adapter_id: int
     nbytes: int  # adapter weight bytes (sets T_b via hbm_bw)
+    tenant: str = DEFAULT_TENANT  # tenant class (interactive vs batch)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,33 +101,147 @@ class ServeConfig:
     rate_knee: float = 200.0  # req/s at which saturation maxes out
     depth_knee: float = 64.0  # pending requests at which backlog maxes out
     spill_budget: Optional[int] = None  # §6 overflow: resident request budget
+    spill_budget_bytes: Optional[float] = None  # byte-accurate §6 budget
     spill_penalty_s: float = 0.0  # T_spill host read-back surcharge
+    kv_bytes_per_token: float = 1.0  # spillable host state per prompt token
+    # -- multi-tenant control plane (one ControlVector per adapter class) ------
+    tenant_policies: Optional[tuple[TenantPolicy, ...]] = None
 
 
 class _AdapterQueue:
-    """WorkloadQueue façade over one adapter's pending request list."""
+    """WorkloadQueue façade over one adapter's pending request list, with
+    the same resident-prefix / spilled-suffix split as the core
+    WorkloadQueue: §6 overflow pages the *youngest* requests' prompt state
+    to host (``prompt_len * kv_bytes_per_token`` each); the oldest keep
+    their state resident.
 
-    __slots__ = ("bucket_id", "requests")
+    NOTE: this mirrors ``core.workload.WorkloadQueue``'s spill mechanics
+    (push boundary rule, youngest-first eviction, O(1) maintained byte
+    counters) over ``Request`` items — keep the two in lockstep; the
+    partial-spill property suite runs against both
+    (tests/test_partial_spill.py::TestServingQueueMirrorsCore)."""
 
-    def __init__(self, bucket_id: int) -> None:
+    __slots__ = (
+        "bucket_id", "requests", "spilled_requests", "_probe_bytes",
+        "_bytes", "_spilled_bytes", "_spilled_oldest",
+    )
+
+    def __init__(self, bucket_id: int, probe_bytes: float = 1.0) -> None:
         self.bucket_id = bucket_id
-        self.requests: list[Request] = []
+        self.requests: list[Request] = []  # resident prefix (oldest)
+        self.spilled_requests: list[Request] = []  # youngest, on host
+        self._probe_bytes = probe_bytes
+        self._bytes = 0.0
+        self._spilled_bytes = 0.0
+        self._spilled_oldest = float("inf")
+
+    def _rbytes(self, r: Request) -> float:
+        return r.prompt_len * self._probe_bytes
 
     @property
     def size(self) -> int:
+        return len(self.requests) + len(self.spilled_requests)
+
+    @property
+    def resident_size(self) -> int:
         return len(self.requests)
 
     @property
-    def oldest_arrival(self) -> float:
+    def nbytes(self) -> float:
+        return self._bytes
+
+    @property
+    def resident_bytes(self) -> float:
+        return self._bytes - self._spilled_bytes
+
+    @property
+    def spilled_bytes(self) -> float:
+        return self._spilled_bytes
+
+    @property
+    def spilled_fraction(self) -> float:
+        """Exactly 0.0 / 1.0 at the ends, like the core queue (a fully
+        spilled adapter pays exactly T_spill)."""
+        if not self.spilled_requests:
+            return 0.0
         if not self.requests:
+            return 1.0
+        return self._spilled_bytes / self._bytes if self._bytes else 0.0
+
+    @property
+    def oldest_arrival(self) -> float:
+        pending = self.requests + self.spilled_requests
+        if not pending:
             return float("inf")
-        return min(r.arrival_time for r in self.requests)
+        return min(r.arrival_time for r in pending)
+
+    def all_requests(self) -> list[Request]:
+        """Resident prefix first (the oldest work), then the spilled tail."""
+        return self.requests + self.spilled_requests
+
+    def push(self, req: Request) -> None:
+        # Overflowing queues take new (youngest) work on the spilled side,
+        # keeping the resident prefix an age-contiguous cut (same rule as
+        # core WorkloadQueue.push); late out-of-order arrivals older than
+        # the spill boundary still join the resident prefix.
+        if self.spilled_requests and req.arrival_time >= self._spilled_oldest:
+            self.spilled_requests.append(req)
+            self._spilled_bytes += self._rbytes(req)
+        else:
+            self.requests.append(req)
+        self._bytes += self._rbytes(req)
+
+    def spill_youngest(self, frac: float = 1.0) -> int:
+        """Move the youngest resident requests to host until the spilled
+        byte fraction reaches ``frac``; for ``frac < 1`` the oldest request
+        always stays resident.  Returns requests moved."""
+        if not self.requests:
+            return 0
+        target = min(max(frac, 0.0), 1.0) * self._bytes
+        keep_oldest = frac < 1.0
+        order = sorted(
+            range(len(self.requests)),
+            key=lambda i: (self.requests[i].arrival_time, i),
+        )
+        taken: list[int] = []
+        while self._spilled_bytes < target and order:
+            if keep_oldest and len(order) == 1:
+                break
+            i = order.pop()
+            self._spilled_bytes += self._rbytes(self.requests[i])
+            taken.append(i)
+        if not taken:
+            return 0
+        keep = set(order)
+        moved = [r for i, r in enumerate(self.requests) if i not in keep]
+        self.requests = [self.requests[i] for i in sorted(keep)]
+        moved.sort(key=lambda r: r.arrival_time)
+        self.spilled_requests.extend(moved)
+        self._spilled_oldest = min(self._spilled_oldest, moved[0].arrival_time)
+        return len(taken)
+
+    def unspill_all(self) -> int:
+        moved = len(self.spilled_requests)
+        if moved:
+            merged = self.requests + self.spilled_requests
+            merged.sort(key=lambda r: (r.arrival_time, r.request_id))
+            self.requests = merged
+            self.spilled_requests = []
+            self._spilled_bytes = 0.0
+            self._spilled_oldest = float("inf")
+        return moved
+
+    def _drop_finished(self) -> None:
+        """Trim finished requests (resident only — retire unspills first)
+        and rebase the byte counter."""
+        self.requests = [r for r in self.requests if not r.done]
+        self._bytes = sum(self._rbytes(r) for r in self.requests)
 
     def __len__(self) -> int:
-        return len(self.requests)
+        return self.size
 
     def __bool__(self) -> bool:
-        return bool(self.requests)
+        return self.size > 0
 
 
 class AdapterWorkload:
@@ -129,12 +250,23 @@ class AdapterWorkload:
 
     Having a stable, subscribable workload object — instead of the façades
     the old ``_select`` helper rebuilt on every call — is what lets the
-    serving engine ride the scheduler's incremental heap index."""
+    serving engine ride the scheduler's incremental heap index.
 
-    def __init__(self, adapter_ids=()) -> None:
+    ``probe_bytes`` prices one prompt token's spillable host state (KV /
+    prompt cache) for the §6 byte budget; ``tenant_of_adapter`` maps each
+    adapter to its tenant class for the multi-tenant control plane."""
+
+    def __init__(
+        self,
+        adapter_ids=(),
+        probe_bytes: float = 1.0,
+        tenants: Optional[dict[int, str]] = None,
+    ) -> None:
+        self.probe_bytes = float(probe_bytes)
         self.queues: dict[int, _AdapterQueue] = {
-            a: _AdapterQueue(a) for a in adapter_ids
+            a: _AdapterQueue(a, self.probe_bytes) for a in adapter_ids
         }
+        self._tenants: dict[int, str] = dict(tenants or {})
         self._listeners: list[Callable[[int], None]] = []
         self._spilled: set[int] = set()
 
@@ -153,19 +285,24 @@ class AdapterWorkload:
 
     # -- intake / service ------------------------------------------------------
     def push(self, req: Request) -> None:
-        q = self.queues.setdefault(req.adapter_id, _AdapterQueue(req.adapter_id))
-        q.requests.append(req)
+        q = self.queues.setdefault(
+            req.adapter_id, _AdapterQueue(req.adapter_id, self.probe_bytes)
+        )
+        q.push(req)
         self._notify(req.adapter_id)
 
     def take(self, adapter_id: int, n: int) -> list[Request]:
-        """The next batch (does not remove; ``retire`` trims finished)."""
-        return self.queues[adapter_id].requests[:n]
+        """The next batch, oldest (resident) work first (does not remove;
+        ``retire`` trims finished).  Taking spilled requests is fine —
+        servicing pays the T_spill surcharge and pages them back in."""
+        return self.queues[adapter_id].all_requests()[:n]
 
     def retire(self, adapter_id: int) -> None:
         """Drop finished requests after a dispatch; servicing also pages a
         spilled adapter back in (mirrors WorkloadManager.complete_bucket)."""
         q = self.queues[adapter_id]
-        q.requests = [r for r in q.requests if not r.done]
+        q.unspill_all()
+        q._drop_finished()
         self._spilled.discard(adapter_id)
         self._notify(adapter_id)
 
@@ -174,7 +311,9 @@ class AdapterWorkload:
         return [q for q in self.queues.values() if q]
 
     def queue(self, adapter_id: int) -> _AdapterQueue:
-        return self.queues.setdefault(adapter_id, _AdapterQueue(adapter_id))
+        return self.queues.setdefault(
+            adapter_id, _AdapterQueue(adapter_id, self.probe_bytes)
+        )
 
     def ages_ms(self, now: float) -> dict[int, float]:
         return {
@@ -186,13 +325,34 @@ class AdapterWorkload:
     def pending_objects(self) -> int:
         return sum(q.size for q in self.queues.values())
 
+    def resident_objects(self) -> int:
+        return sum(q.resident_size for q in self.queues.values() if q)
+
+    def pending_bytes(self) -> float:
+        return sum(q.nbytes for q in self.queues.values() if q)
+
+    def resident_bytes(self) -> float:
+        return sum(q.resident_bytes for q in self.queues.values() if q)
+
+    def tenant_of_adapter(self, adapter_id: int) -> str:
+        return self._tenants.get(adapter_id, DEFAULT_TENANT)
+
     # -- §6 workload overflow ---------------------------------------------------
     def is_spilled(self, adapter_id: int) -> bool:
         return adapter_id in self._spilled
 
-    def spill_bucket(self, adapter_id: int) -> bool:
+    def spilled_fraction(self, adapter_id: int) -> float:
         q = self.queues.get(adapter_id)
-        if adapter_id in self._spilled or q is None or not q:
+        return q.spilled_fraction if q else 0.0
+
+    def spill_bucket(self, adapter_id: int, frac: float = 1.0) -> bool:
+        """Spill the youngest ``frac`` of the adapter's pending request
+        state (prompt KV bytes) to host; ``frac=1`` spills the whole queue
+        (legacy semantics)."""
+        q = self.queues.get(adapter_id)
+        if q is None or not q:
+            return False
+        if not q.spill_youngest(frac):
             return False
         self._spilled.add(adapter_id)
         self._notify(adapter_id)
@@ -201,6 +361,9 @@ class AdapterWorkload:
     def unspill_bucket(self, adapter_id: int) -> bool:
         if adapter_id not in self._spilled:
             return False
+        q = self.queues.get(adapter_id)
+        if q is not None:
+            q.unspill_all()
         self._spilled.discard(adapter_id)
         self._notify(adapter_id)
         return True
@@ -215,7 +378,7 @@ class LifeRaftEngine:
         adapters: list[AdapterSpec],
         config: ServeConfig = ServeConfig(),
         decode_batch_fn: Optional[Callable] = None,
-        control: Optional[ControlLoop] = None,
+        control: Optional[ControlLoop | TenantControlPlane] = None,
     ) -> None:
         self.cfg = config
         self.adapters = {a.adapter_id: a for a in adapters}
@@ -224,6 +387,7 @@ class LifeRaftEngine:
             T_b=mean_bytes / config.hbm_bw,
             T_m=config.per_token_cost,
             T_spill=config.spill_penalty_s,
+            probe_bytes=config.kv_bytes_per_token,
         )
         if config.policy == "rr":
             self.scheduler = RoundRobinScheduler(self.cost)
@@ -231,13 +395,25 @@ class LifeRaftEngine:
             alpha = 1.0 if config.policy == "noshare" else config.alpha
             self.scheduler = LifeRaftScheduler(self.cost, alpha=alpha, normalized=True)
         self.cache = BucketCache(config.adapter_slots)
-        self.workload = AdapterWorkload([a.adapter_id for a in adapters])
+        self.workload = AdapterWorkload(
+            [a.adapter_id for a in adapters],
+            probe_bytes=self.cost.probe_bytes,
+            tenants={a.adapter_id: a.tenant for a in adapters},
+        )
         self.decode_batch_fn = decode_batch_fn
         self.completed: list[Request] = []
         self.indexed_batches = 0
         self.tokens_served = 0
         self._inflight: dict[int, list[Request]] = {}
-        if control is None and config.adaptive:
+        if control is None and config.tenant_policies:
+            # Multi-tenant plane: one ControlVector per adapter class, the
+            # global §6 byte budget arbitrated across classes.
+            control = TenantControlPlane(
+                list(config.tenant_policies),
+                global_budget_bytes=config.spill_budget_bytes,
+                halflife_s=config.control_halflife_s,
+            )
+        elif control is None and config.adaptive:
             control = ControlLoop(
                 ControlConfig(
                     alpha_init=config.alpha,
@@ -248,6 +424,7 @@ class LifeRaftEngine:
                     fuse_k_init=config.fuse_k,
                     fuse_k_max=config.fuse_k_max,
                     spill_budget_objects=config.spill_budget,
+                    spill_budget_bytes=config.spill_budget_bytes,
                 )
             )
         self.control = control
@@ -257,6 +434,7 @@ class LifeRaftEngine:
             self.cache,
             self._execute,
             control=control,
+            tenant_of=self.workload.tenant_of_adapter,
             fuse_k=config.fuse_k,
             complete=self._complete,
             batch_capacity=config.max_batch,
@@ -299,7 +477,11 @@ class LifeRaftEngine:
             if not self.cache.contains(adapter):
                 t_load = self.adapters[adapter].nbytes / self.cfg.hbm_bw
             if self.workload.is_spilled(adapter):
-                t_load += self.cost.T_spill  # §6 host read-back surcharge
+                # §6 host read-back surcharge, pro-rated by the spilled
+                # byte fraction (== T_spill for a fully spilled queue).
+                t_load += self.cost.T_spill * self.workload.spilled_fraction(
+                    adapter
+                )
             use_indexed = (
                 len(batch) < self.cfg.hybrid_threshold
                 and not self.cache.contains(adapter)
@@ -395,10 +577,26 @@ class LifeRaftEngine:
     def summary(self) -> dict:
         resp = [r.finish_time - r.arrival_time for r in self.completed]
         vec = self.loop.last_vector
+        response_by_id = {
+            r.request_id: r.finish_time - r.arrival_time for r in self.completed
+        }
+        adapter_of = {r.request_id: r.adapter_id for r in self.completed}
+        tenants = {a.tenant for a in self.adapters.values()}
+        per_tenant = (
+            per_tenant_latency(
+                response_by_id,
+                lambda rid: self.workload.tenant_of_adapter(adapter_of[rid]),
+                max(self.clock, 1e-9),
+                tenants,
+            )
+            if len(tenants) > 1
+            else {}
+        )
         return {
             "policy": self.cfg.policy,
             "alpha": getattr(self.scheduler, "alpha", None),
             "adaptive": self.control is not None,
+            "multi_tenant": isinstance(self.control, TenantControlPlane),
             "fuse_k": vec.fuse_k if vec is not None else self.cfg.fuse_k,
             "n_completed": len(self.completed),
             "makespan": self.clock,
@@ -410,4 +608,5 @@ class LifeRaftEngine:
             "batches": self.batches,
             "indexed_batches": self.indexed_batches,
             "spilled": self.workload.spilled_buckets(),
+            "per_tenant": per_tenant,
         }

@@ -1,0 +1,34 @@
+"""Regenerate the golden decision-log traces in ``tests/golden/``.
+
+    PYTHONPATH=src python tests/make_golden.py [scenario ...]
+
+Only run this deliberately: committing a regenerated golden declares
+"the new decision log is the correct one" and waives bit-identity with
+the previous behavior for that scenario.  The regression tests in
+``tests/test_replay_golden.py`` exist precisely to make that waiver an
+explicit, reviewed act instead of an accident.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+import replay  # noqa: E402
+
+
+def main(argv: list[str]) -> None:
+    names = argv or sorted(replay.SCENARIOS)
+    unknown = [n for n in names if n not in replay.SCENARIOS]
+    if unknown:
+        raise SystemExit(f"unknown scenarios: {unknown}; have {sorted(replay.SCENARIOS)}")
+    replay.GOLDEN_DIR.mkdir(exist_ok=True)
+    for name in names:
+        entries = replay.SCENARIOS[name]()
+        path = replay.GOLDEN_DIR / f"{name}.json"
+        replay.save_trace(path, entries, meta={"scenario": name})
+        print(f"  {name}: {len(entries)} rounds -> {path}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,97 @@
+"""Golden-trace regression tests + the per-tenant starvation bound.
+
+The goldens in ``tests/golden/`` are recorded DispatchLoop decision logs
+(see tests/replay.py).  The ``PRE_REFACTOR_SCENARIOS`` were recorded
+*before* the multi-tenant control plane / partial-spill refactor, so
+their bit-identity proves the refactor moved no single-tenant decision:
+the per-group heap rework, sigma fractions, resident-prefix entries and
+per-bucket alpha plumbing all collapse to the historical arithmetic when
+one tenant runs.  ``sim_two_tenant`` was recorded at feature introduction
+and pins the multi-tenant decisions against future drift.
+
+Regenerate deliberately with ``PYTHONPATH=src python tests/make_golden.py
+<scenario>`` — a regenerated golden is a reviewed waiver of bit-identity,
+never an accident.
+"""
+import pytest
+
+import replay
+from repro.core import CostModel, LifeRaftScheduler, simulate_batched
+
+
+@pytest.mark.parametrize("name", sorted(replay.SCENARIOS))
+def test_decision_log_matches_golden(name):
+    golden_path = replay.GOLDEN_DIR / f"{name}.json"
+    assert golden_path.exists(), (
+        f"missing golden {golden_path}; run tests/make_golden.py {name}"
+    )
+    expect = replay.load_trace(golden_path)
+    got = replay.SCENARIOS[name]()
+    divergence = replay.diff_traces(expect, got)
+    assert not divergence, "\n".join(
+        [f"decision log diverged from golden {name}:"] + divergence
+    )
+
+
+def test_diff_traces_reports_divergence():
+    """The harness itself must catch a moved decision, not just agree."""
+    base = replay.SCENARIOS["sim_raw_fused"]()
+    mutated = [dict(e) for e in base]
+    mutated[3] = dict(mutated[3])
+    mutated[3]["decisions"] = [
+        [d[0] + 1, d[1], d[2], d[3]] for d in mutated[3]["decisions"]
+    ]
+    out = replay.diff_traces(base, mutated)
+    assert out and "round 3" in out[0]
+    assert replay.diff_traces(base, base[:-1])  # length change detected
+
+
+class TestPerTenantStarvation:
+    """Paper §6 scenario: a batch flood must not starve interactive
+    queries.  Under the per-tenant plane the interactive class pins
+    alpha >= ALPHA_MIN, so an interactive bucket's normalized score is at
+    least ALPHA_MIN * age/age_scale while any batch bucket scores at most
+    ~1 (U_t_norm <= 1) + its own small age term — interactive therefore
+    wins selection within an age_scale_ms-derived horizon.  The bound
+    below is that horizon plus one worst-case fused round in flight."""
+
+    ALPHA_MIN = 0.7  # interactive tenant's alpha floor (two_tenant_plane)
+    ROUND_SLACK_S = 0.7  # one worst-case fused dispatch ahead of us
+
+    def _bound_s(self, cost: CostModel) -> float:
+        return cost.age_scale_ms / 1e3 / self.ALPHA_MIN + self.ROUND_SLACK_S
+
+    def _run(self, seed, control=None, alpha=0.5):
+        cost = CostModel(T_b=0.08, T_m=2e-4, T_spill=0.1, probe_bytes=16.0)
+        qs = replay.two_tenant_trace(
+            seed, horizon=10.0, flood_gap=0.03, depth_lo=60, depth_hi=120
+        )
+        r = simulate_batched(
+            qs, replay._identity_range,
+            LifeRaftScheduler(cost, alpha, normalized=True), cost,
+            cache_capacity=8, control=control,
+        )
+        return r, self._bound_s(cost)
+
+    @pytest.mark.parametrize("seed", [41, 42, 43])
+    def test_no_interactive_query_ages_past_bound(self, seed):
+        r, bound = self._run(seed, control=replay.two_tenant_plane(60_000.0))
+        stats = r.per_tenant["interactive"]
+        assert stats["n"] > 0
+        assert stats["max_response"] <= bound, (stats, bound)
+
+    @pytest.mark.parametrize("seed", [41, 42, 43])
+    def test_global_greedy_violates_the_bound(self, seed):
+        """The bound has teeth: the same flood under one global greedy
+        alpha starves interactive singletons past it (which is exactly why
+        per-tenant alpha exists)."""
+        r, bound = self._run(seed, alpha=0.0)
+        assert r.per_tenant["interactive"]["max_response"] > bound
+
+    def test_batch_throughput_not_sacrificed(self):
+        """Isolation is not partitioning: with the plane active the batch
+        class keeps >= 0.9x the aggregate throughput of the global greedy
+        run (shared scheduling still amortizes the flood)."""
+        r_mt, _ = self._run(41, control=replay.two_tenant_plane(60_000.0))
+        r_greedy, _ = self._run(41, alpha=0.0)
+        assert r_mt.query_throughput >= 0.9 * r_greedy.query_throughput

@@ -18,9 +18,12 @@ def _identity_range(lo, hi):
     return np.arange(lo, hi + 1)
 
 
-def _mk_query(qid, t, buckets):
+TENANTS = ("default", "interactive", "batch")
+
+
+def _mk_query(qid, t, buckets, tenant="default"):
     ks = np.asarray(buckets, dtype=np.uint64)
-    return Query(qid, t, ks, ks)
+    return Query(qid, t, ks, ks, meta={"tenant": tenant})
 
 
 class _Mirror:
@@ -36,21 +39,27 @@ class _Mirror:
         self.cache_i = BucketCache(cache_cap)
         self.cache_n = BucketCache(cache_cap)
 
-    def submit(self, qid, t, buckets):
-        self.wm_i.submit(_mk_query(qid, t, buckets))
-        self.wm_n.submit(_mk_query(qid, t, buckets))
+    def submit(self, qid, t, buckets, tenant="default"):
+        self.wm_i.submit(_mk_query(qid, t, buckets, tenant))
+        self.wm_n.submit(_mk_query(qid, t, buckets, tenant))
 
     def set_alpha(self, a):
         self.inc.alpha = a
         self.nai.alpha = a
 
+    def set_tenant_alphas(self, alphas):
+        """Per-tenant Eq. 2 blends on both sides (each side's tenant_of
+        reads its own workload, but the workloads are mirrored)."""
+        self.inc.set_tenant_alphas(alphas, self.wm_i.tenant_of_bucket)
+        self.nai.set_tenant_alphas(alphas, self.wm_n.tenant_of_bucket)
+
     def touch_cache(self, b):
         self.cache_i.access(b)
         self.cache_n.access(b)
 
-    def spill(self, b):
-        self.wm_i.spill_bucket(b)
-        self.wm_n.spill_bucket(b)
+    def spill(self, b, frac=1.0):
+        self.wm_i.spill_bucket(b, frac)
+        self.wm_n.spill_bucket(b, frac)
 
     def unspill(self, b):
         self.wm_i.unspill_bucket(b)
@@ -78,8 +87,9 @@ class TestIncrementalEquivalence:
     @settings(max_examples=25, deadline=None)
     def test_randomized_trace_decisions_identical(self, seed, alpha, norm):
         """Covers both scoring modes: raw scales and the monotone rebased
-        ``normalized=True`` form, plus §6 spill/unspill churn (T_spill > 0
-        so spilling actually moves scores)."""
+        ``normalized=True`` form, plus §6 spill/unspill churn — whole-queue
+        AND partial (byte-fraction sigma) spills (T_spill > 0 so spilling
+        actually moves scores)."""
         rng = np.random.default_rng(seed)
         m = _Mirror(
             alpha, cache_cap=4, normalized=bool(norm),
@@ -106,11 +116,65 @@ class TestIncrementalEquivalence:
                 m.touch_cache(int(rng.integers(0, 12)))
             elif op < 0.95:
                 b = int(rng.integers(0, 12))
-                m.spill(b) if rng.random() < 0.6 else m.unspill(b)
+                r = rng.random()
+                if r < 0.35:
+                    m.spill(b)  # whole queue (legacy sigma = 1)
+                elif r < 0.7:
+                    m.spill(b, float(rng.uniform(0.1, 0.9)))  # partial
+                else:
+                    m.unspill(b)
             else:
                 clock += float(rng.exponential(0.5))
             m.compare_select(clock)
         # Drain fully — tie-breaks dominate at the tail.
+        while m.compare_select(clock) is not None:
+            d = m.compare_select(clock)
+            clock += 0.01
+            m.complete(d.bucket_id, clock)
+
+    @given(st.integers(0, 10_000), st.integers(0, 1))
+    @settings(max_examples=20, deadline=None)
+    def test_per_tenant_alphas_decisions_identical(self, seed, norm):
+        """The multi-tenant scheduler invariant: per-bucket tenant alphas
+        (hot-swapped every few ops, like the plane does every round) with
+        partial-spill churn in the mix — the incremental heap path must
+        stay decision-bit-identical to the oracle."""
+        rng = np.random.default_rng(seed)
+        m = _Mirror(0.5, cache_cap=4, normalized=bool(norm),
+                    cost=CostModel(T_spill=0.8))
+        m.set_tenant_alphas(
+            {"interactive": 0.9, "batch": 0.1}  # 'default' falls back to 0.5
+        )
+        clock = 0.0
+        qid = 0
+        for _ in range(50):
+            op = rng.random()
+            if op < 0.40:
+                tenant = TENANTS[int(rng.integers(0, 3))]
+                m.submit(qid, clock, rng.integers(0, 10, int(rng.integers(1, 5))),
+                         tenant)
+                qid += 1
+            elif op < 0.70:
+                d = m.compare_select(clock)
+                if d is not None:
+                    m.touch_cache(d.bucket_id)
+                    clock += 0.01 + 1e-4 * d.queue_size
+                    m.complete(d.bucket_id, clock)
+            elif op < 0.80:
+                # Hot-swap the per-tenant alphas (plane retunes per round).
+                m.set_tenant_alphas({
+                    "interactive": float(rng.uniform(0.5, 1.0)),
+                    "batch": float(rng.uniform(0.0, 0.5)),
+                })
+            elif op < 0.92:
+                b = int(rng.integers(0, 10))
+                if rng.random() < 0.6:
+                    m.spill(b, float(rng.uniform(0.2, 1.0)))
+                else:
+                    m.unspill(b)
+            else:
+                clock += float(rng.exponential(0.4))
+            m.compare_select(clock)
         while m.compare_select(clock) is not None:
             d = m.compare_select(clock)
             clock += 0.01
@@ -172,7 +236,7 @@ class TestIncrementalEquivalence:
         di = inc.select(wm, cache, 1.0)
         dn = nai.select(wm, cache, 1.0)
         assert di.bucket_id == dn.bucket_id and di.score == dn.score
-        assert inc._entries and inc._heap  # the incremental index engaged
+        assert inc._entries and inc.heap_size()  # the incremental index engaged
 
     def test_rebuild_recovers_from_external_mutation(self):
         cm = CostModel()
@@ -278,7 +342,7 @@ class TestHeapCompaction:
             # live entries (+k winners suspended awaiting the dirty-restore
             # on the next flush).
             bound = 4 * max(len(inc._entries) + k, 8)
-            assert len(inc._heap) <= bound, (len(inc._heap), bound)
+            assert inc.heap_size() <= bound, (inc.heap_size(), bound)
 
         # Build-up: hundreds of buckets; every cache access flips some
         # bucket's residency and re-keys it, leaving version garbage.
@@ -303,7 +367,7 @@ class TestHeapCompaction:
                 wm.complete_bucket(d.bucket_id, clock)
             assert_bounded()
         assert compactions > 0, "compaction never triggered under churn"
-        assert len(inc._heap) == 0 and len(inc._entries) == 0
+        assert inc.heap_size() == 0 and len(inc._entries) == 0
 
 
 class TestSelectScaling:
