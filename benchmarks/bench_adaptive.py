@@ -25,8 +25,16 @@ Emits ``BENCH_adaptive.json`` with three measurements:
    closed loop on a batch-flood + interactive-singleton workload.
    Acceptance: per-tenant control achieves interactive p95 <= the global
    closed loop's at >= 0.95x aggregate throughput, with byte-accounted
-   resident state never exceeding the global budget after enforcement
-   (modulo the oldest-unit no-starvation floors).
+   resident state never exceeding the global budget on any enforcement
+   round — spills AND rounds immediately after an unspill grant (modulo
+   the oldest-unit no-starvation floors).
+5. ``unspill_oscillation`` — the paged oldest-first unspill protocol vs
+   the legacy whole-queue unspill on a steady saturating serving load.
+   Acceptance: the paged protocol's spill-bit flip count does not regress
+   vs the whole-queue baseline and NO paged round that returned spilled
+   work ends above the budget (+ floors); the whole-queue baseline's
+   overshoot rounds are reported for contrast (it re-exceeds the budget
+   whenever a deep spilled adapter is serviced).
 
 Run: ``PYTHONPATH=src python -m benchmarks.bench_adaptive [--out PATH]``
 """
@@ -285,6 +293,20 @@ def _global_control():
     ))
 
 
+def _slice_stat(result, tenant, stat):
+    """Per-tenant stat or None — empty slices report ``None`` (n=0), and a
+    summary must skip them, never average them in as zero latency."""
+    s = result.per_tenant.get(tenant)
+    if not s or not s["n"]:
+        return None
+    return s[stat]
+
+
+def _mean_defined(values):
+    vals = [v for v in values if v is not None]
+    return float(np.mean(vals)) if vals else None
+
+
 def bench_two_tenant() -> dict:
     from repro.core import dispatch as _dispatch
 
@@ -292,7 +314,10 @@ def bench_two_tenant() -> dict:
     # point — its first argument is the wm, which simulate_batched never
     # exposes) only stashes the reference; sampling happens in on_round,
     # i.e. after EVERY tenant's enforcement ran, so a not-yet-walked
-    # tenant's overhang cannot read as a budget violation.
+    # tenant's overhang cannot read as a budget violation.  Sampled on
+    # every enforcement round — engaged spills AND rounds that paged an
+    # unspill grant back in (the §6 overshoot bugfix's acceptance: no
+    # round immediately after an unspill may exceed the budget).
     max_resident_after_spill = 0.0
     seen_wm = None
     real_apply_spill = _dispatch.apply_spill
@@ -304,7 +329,7 @@ def bench_two_tenant() -> dict:
 
     def sample_round(outcome):
         nonlocal max_resident_after_spill
-        if outcome.vector.spill and seen_wm is not None:
+        if (outcome.vector.spill or outcome.spill_changed) and seen_wm is not None:
             max_resident_after_spill = max(
                 max_resident_after_spill, seen_wm.resident_bytes()
             )
@@ -327,21 +352,23 @@ def bench_two_tenant() -> dict:
             rows.append({
                 "seed": int(seed),
                 "global": {
-                    "interactive_p95": rg.per_tenant["interactive"]["p95_response"],
-                    "batch_p95": rg.per_tenant["batch"]["p95_response"],
+                    "interactive_p95": _slice_stat(rg, "interactive", "p95_response"),
+                    "batch_p95": _slice_stat(rg, "batch", "p95_response"),
                     "query_throughput": rg.query_throughput,
                 },
                 "per_tenant": {
-                    "interactive_p95": rm.per_tenant["interactive"]["p95_response"],
-                    "batch_p95": rm.per_tenant["batch"]["p95_response"],
+                    "interactive_p95": _slice_stat(rm, "interactive", "p95_response"),
+                    "batch_p95": _slice_stat(rm, "batch", "p95_response"),
                     "query_throughput": rm.query_throughput,
                 },
             })
     finally:
         _dispatch.apply_spill = real_apply_spill
 
-    g_p95 = float(np.mean([r["global"]["interactive_p95"] for r in rows]))
-    m_p95 = float(np.mean([r["per_tenant"]["interactive_p95"] for r in rows]))
+    # Empty slices (n=0 -> None) are skipped, not averaged in as zeros.
+    g_p95 = _mean_defined([r["global"]["interactive_p95"] for r in rows])
+    m_p95 = _mean_defined([r["per_tenant"]["interactive_p95"] for r in rows])
+    assert g_p95 is not None and m_p95 is not None, "no interactive completions"
     g_qtp = float(np.mean([r["global"]["query_throughput"] for r in rows]))
     m_qtp = float(np.mean([r["per_tenant"]["query_throughput"] for r in rows]))
     # The §6 floors: each tenant's boundary victim keeps its oldest unit
@@ -359,6 +386,106 @@ def bench_two_tenant() -> dict:
         "spill_within_budget": bool(within_budget),
         "passes": bool(
             m_p95 <= g_p95 and m_qtp >= 0.95 * g_qtp and within_budget
+        ),
+    }
+
+
+# ------------------------------------------- 5. unspill-oscillation gate
+def bench_unspill_oscillation() -> dict:
+    """Paged vs whole-queue unspill under a steady saturating serving
+    load against a tight §6 byte budget.
+
+    Wholesale unspill pages a serviced adapter's whole spilled suffix
+    back in one shot: on this load it re-exceeds the budget on every such
+    round (``overshoot_rounds_after_unspill`` > 0) — it only *looks*
+    cheap because it holds several times the budget resident.  The paged
+    protocol stays within the budget and pays for it in repeated
+    sigma-pro-rated T_spill surcharges while the backlog drains (the
+    measured ``latency_cost_ratio``).  Gates: (a) the paged protocol's
+    spill-bit flip count does not regress vs the whole-queue baseline
+    (it must not *introduce* hysteresis oscillation), (b) no paged round
+    that returned spilled work ends above the budget + the
+    service-batch/oldest-unit floors — the §6 overshoot bugfix — while
+    the wholesale baseline demonstrably does, (c) the paged protocol's
+    makespan stays within 2.2x the budget-violating baseline (pins
+    today's ~1.9x surcharge cost so silent latency regressions fail the
+    nightly), and (d) all requests complete either way.
+    """
+    from repro.serving import AdapterSpec, LifeRaftEngine, Request, ServeConfig
+
+    budget = 2_000.0
+    req_bytes = 100.0  # prompt_len 10 x kv_bytes_per_token 10
+    max_batch = 4
+    n_adapters = 4
+
+    def trace():
+        rng = np.random.default_rng(17)
+        t, reqs = 0.0, []
+        for i in range(240):  # steady ~500 req/s, ~24 kB of prompt state
+            t += float(rng.exponential(0.002))
+            reqs.append(Request(i, int(rng.integers(0, n_adapters)), t, 10, 32))
+        return reqs
+
+    def run_mode(wholesale):
+        cfg = ServeConfig(
+            policy="liferaft", adaptive=True, max_batch=max_batch,
+            decode_quantum=16, spill_budget_bytes=budget,
+            spill_penalty_s=0.05, kv_bytes_per_token=10.0,
+            control_halflife_s=1.0, wholesale_unspill=wholesale,
+        )
+        eng = LifeRaftEngine(
+            [AdapterSpec(a, 8 << 30) for a in range(n_adapters)], cfg
+        )
+        flips, prev_bit = 0, False
+        overshoot_rounds, unspill_rounds = 0, 0
+        prev_spilled = 0.0
+        # Same floors formula as the pinning regression test
+        # (tests/test_partial_spill.py TestWholesaleUnspillOvershoot._bound):
+        # one serviced batch of spilled requests + one oldest-unit
+        # no-starvation floor per adapter queue.
+        bound = budget + (max_batch + n_adapters) * req_bytes
+
+        def on_round(outcome):
+            nonlocal flips, prev_bit, overshoot_rounds, unspill_rounds, prev_spilled
+            if outcome.vector.spill != prev_bit:
+                flips += 1
+            prev_bit = outcome.vector.spill
+            spilled = sum(
+                q.spilled_bytes for q in eng.workload.queues.values()
+            )
+            if spilled < prev_spilled - 1e-9:
+                unspill_rounds += 1
+                if eng.workload.resident_bytes() > bound:
+                    overshoot_rounds += 1
+            prev_spilled = spilled
+
+        eng.loop.on_round = on_round
+        summary = eng.run(trace())
+        return {
+            "flips": flips,
+            "unspill_rounds": unspill_rounds,
+            "overshoot_rounds_after_unspill": overshoot_rounds,
+            "n_completed": summary["n_completed"],
+            "p95_response": summary["p95_response"],
+            "makespan": summary["makespan"],
+        }
+
+    paged = run_mode(wholesale=False)
+    wholesale = run_mode(wholesale=True)
+    latency_cost = paged["makespan"] / max(wholesale["makespan"], 1e-9)
+    return {
+        "budget_bytes": budget,
+        "paged": paged,
+        "wholesale": wholesale,
+        "flip_ratio": paged["flips"] / max(wholesale["flips"], 1),
+        "latency_cost_ratio": latency_cost,
+        "passes": bool(
+            paged["flips"] <= wholesale["flips"]
+            and paged["unspill_rounds"] > 0
+            and paged["overshoot_rounds_after_unspill"] == 0
+            and wholesale["overshoot_rounds_after_unspill"] > 0
+            and latency_cost <= 2.2
+            and paged["n_completed"] == wholesale["n_completed"] == 240
         ),
     }
 
@@ -394,11 +521,13 @@ def run(out_path: str = "BENCH_adaptive.json", verbose: bool = True) -> dict:
         "normalized_equivalence": bench_normalized_equivalence(),
         "fuse_and_spill": bench_fuse_and_spill(),
         "two_tenant": bench_two_tenant(),
+        "unspill_oscillation": bench_unspill_oscillation(),
     }
     cl = report["closed_loop_vs_static"]
     eq = report["normalized_equivalence"]
     fs = report["fuse_and_spill"]
     tt = report["two_tenant"]
+    uo = report["unspill_oscillation"]
     pathlib.Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
     if verbose:
         ad, best = cl["adaptive"], cl["best_static"]
@@ -422,6 +551,13 @@ def run(out_path: str = "BENCH_adaptive.json", verbose: bool = True) -> dict:
             f" (per-tenant) vs {tt['global_interactive_p95']:.2f}s (global) at"
             f" {tt['throughput_ratio']:.2f}x throughput; spill within budget:"
             f" {tt['spill_within_budget']}"
+        )
+        print(
+            f"  unspill oscillation: {uo['paged']['flips']} spill-bit flips"
+            f" (paged) vs {uo['wholesale']['flips']} (whole-queue);"
+            f" overshoot rounds after unspill:"
+            f" {uo['paged']['overshoot_rounds_after_unspill']} (paged) vs"
+            f" {uo['wholesale']['overshoot_rounds_after_unspill']} (whole-queue)"
         )
         print(f"  wrote {out_path}")
     emit(
@@ -454,6 +590,10 @@ def main() -> None:
     assert tt["tenant_interactive_p95"] <= tt["global_interactive_p95"]
     assert tt["throughput_ratio"] >= 0.95
     assert tt["spill_within_budget"]
+    uo = report["unspill_oscillation"]
+    assert uo["passes"], uo
+    assert uo["paged"]["flips"] <= uo["wholesale"]["flips"]
+    assert uo["paged"]["overshoot_rounds_after_unspill"] == 0
 
 
 if __name__ == "__main__":

@@ -4,6 +4,8 @@ Public surface:
   * space-filling curves (``sfc``): HTM trixel ids, Morton codes
   * ``Partitioner``/``BucketStore``: equal-count bucket partitioning
   * ``WorkloadManager``: query pre-processing into per-bucket work units
+  * ``SpillQueue``: the shared §6 resident-prefix/spilled-suffix queue
+    primitive both engines' workload queues are built on (``spillq``)
   * ``CostModel`` + Eq.1/Eq.2 metrics
   * ``BucketCache``: LRU residency (phi in Eq. 1)
   * schedulers: ``LifeRaftScheduler`` (alpha in [0,1]), ``RoundRobinScheduler``
@@ -34,6 +36,7 @@ from .control import (
     TenantControlPlane,
     TenantPolicy,
     apply_spill,
+    unspill_price,
 )
 from .dispatch import DispatchLoop, DispatchOutcome
 from .scheduler import (
@@ -44,6 +47,7 @@ from .scheduler import (
     SchedulerDecision,
 )
 from .simulate import SimResult, run_policy, simulate_batched, simulate_noshare
+from .spillq import SpillQueue
 from .workload import Query, WorkloadManager, WorkloadQueue, WorkUnit
 from . import sfc
 
@@ -72,6 +76,8 @@ __all__ = [
     "TenantControlPlane",
     "TenantPolicy",
     "apply_spill",
+    "unspill_price",
+    "SpillQueue",
     "DispatchLoop",
     "DispatchOutcome",
     "LifeRaftScheduler",

@@ -59,6 +59,7 @@ __all__ = [
     "TenantPolicy",
     "TenantControlPlane",
     "apply_spill",
+    "unspill_price",
 ]
 
 
@@ -112,6 +113,11 @@ class ControlConfig:
     spill_budget_bytes: Optional[float] = None  # byte-accurate §6 budget
     #   (preferred; enables *partial* queue spill — see apply_spill)
     spill_low_water: float = 0.8  # disengage below this fraction
+    # Legacy unspill: page each spilled queue's whole suffix back in one
+    # shot instead of the paged oldest-first protocol.  Wholesale paging
+    # is all-or-nothing per queue: a big queue either blocks the walk or
+    # lands entirely at once — keep it off unless replaying old traces.
+    wholesale_unspill: bool = False
 
 
 class ControlLoop:
@@ -221,6 +227,24 @@ class ControlLoop:
         return self._spilling
 
 
+def unspill_price(q, cost) -> float:
+    """The §6 wait-cost-per-byte of leaving queue ``q`` spilled — the
+    arbiter's unspill-grant priority.
+
+    Each service of a spilled queue pays ``T_spill * sigma`` on top of the
+    bucket read (Eq. 1), with ``sigma = spilled_bytes / nbytes``; paging
+    one byte back in therefore saves ``T_spill / nbytes`` seconds of
+    read-back surcharge per future service.  Small queues clear their
+    whole surcharge with few bytes, so they page in first — maximum
+    surcharge relief per granted byte.  Returns 0.0 (unpriced — walk
+    falls back to oldest-first) without a cost model or with
+    ``T_spill == 0``.
+    """
+    if cost is None or getattr(cost, "T_spill", 0.0) <= 0.0:
+        return 0.0
+    return cost.T_spill / q.nbytes if q.nbytes else 0.0
+
+
 def apply_spill(
     wm,
     vector: ControlVector,
@@ -228,6 +252,7 @@ def apply_spill(
     *,
     budget_bytes: Optional[float] = None,
     only: Optional[Callable[[int], bool]] = None,
+    cost=None,
 ) -> list[int]:
     """Enforce the §6 overflow budget on a workload manager.
 
@@ -239,9 +264,15 @@ def apply_spill(
     while the deficit exceeds them, then a partial ``spill_bucket(b,
     frac)`` on the boundary victim, whose oldest units stay resident.  The
     oldest queue is never fully spilled, so resident work always remains.
-    When disengaged: page spilled queues back in oldest-first while they
-    fit under the low-water mark.  ``only`` restricts the walk to one
-    tenant's buckets (per-tenant enforcement under the shared loop).
+    When disengaged: page spilled work back in *paged* — queues ordered
+    by their ``T_spill`` wait-cost-per-byte (highest first; see
+    ``unspill_price``, fed by ``cost`` — typically the scheduler's
+    CostModel — and oldest-first when unpriced), each granted only the
+    remaining low-water headroom via ``unspill_bucket(b, budget_bytes=…)``
+    so the paged-in bytes can never re-exceed the budget
+    (``config.wholesale_unspill`` restores the legacy whole-queue walk).
+    ``only`` restricts the walk to one tenant's buckets (per-tenant
+    enforcement under the shared loop).
 
     Legacy object mode (``spill_budget_objects``): whole-queue spill on
     the object-count proxy, bit-for-bit the historical behavior.
@@ -252,7 +283,7 @@ def apply_spill(
         return []
     if budget_bytes is not None or config.spill_budget_bytes is not None:
         budget = budget_bytes if budget_bytes is not None else config.spill_budget_bytes
-        return _apply_spill_bytes(wm, vector, config, budget, only)
+        return _apply_spill_bytes(wm, vector, config, budget, only, cost)
     budget = config.spill_budget_objects
     if budget is None:
         return []
@@ -288,6 +319,7 @@ def apply_spill(
 
 def _apply_spill_bytes(
     wm, vector: ControlVector, config: ControlConfig, budget: float, only,
+    cost=None,
 ) -> list[int]:
     """Byte-accurate partial-spill enforcement (see apply_spill)."""
     changed: list[int] = []
@@ -324,17 +356,37 @@ def _apply_spill_bytes(
                 deficit -= before - q.resident_bytes
     else:
         low = budget * config.spill_low_water
-        spilled = sorted(
-            (q for q in queues if q.spilled_bytes > 0),
-            key=lambda q: (q.oldest_arrival, q.bucket_id),
-        )  # oldest first
+        spilled = [q for q in queues if q.spilled_bytes > 0]
+        if config.wholesale_unspill:
+            # Legacy whole-queue walk, oldest first: a queue pages back
+            # all-or-nothing while its whole suffix fits under low water.
+            spilled.sort(key=lambda q: (q.oldest_arrival, q.bucket_id))
+            for q in spilled:
+                if resident_total + q.spilled_bytes > low:
+                    break
+                gain = q.spilled_bytes
+                if wm.unspill_bucket(q.bucket_id):
+                    changed.append(q.bucket_id)
+                    resident_total += gain
+            return changed
+        # Paged unspill: grants priced by T_spill wait-cost-per-byte
+        # (highest first; oldest-first tie-break doubles as the whole
+        # order when unpriced).  Each queue pages back only the remaining
+        # low-water headroom, oldest units first, so no single grant —
+        # and no round — can push residency back over the budget.
+        spilled.sort(
+            key=lambda q: (-unspill_price(q, cost), q.oldest_arrival, q.bucket_id)
+        )
+        headroom = low - resident_total
         for q in spilled:
-            if resident_total + q.spilled_bytes > low:
+            if headroom <= 0.0:
                 break
-            gain = q.spilled_bytes
-            if wm.unspill_bucket(q.bucket_id):
+            before = q.resident_bytes
+            if wm.unspill_bucket(
+                q.bucket_id, budget_bytes=min(q.spilled_bytes, headroom)
+            ):
                 changed.append(q.bucket_id)
-                resident_total += gain
+                headroom -= q.resident_bytes - before
     return changed
 
 

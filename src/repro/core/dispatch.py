@@ -176,7 +176,10 @@ class DispatchLoop:
             vector = self.control.update(self.telemetry())
             if hasattr(self.scheduler, "alpha"):
                 self.scheduler.alpha = vector.alpha
-            spill_changed = apply_spill(self.wm, vector, self.control.cfg)
+            spill_changed = apply_spill(
+                self.wm, vector, self.control.cfg,
+                cost=getattr(self.scheduler, "cost_model", None),
+            )
         else:
             vector = ControlVector(
                 alpha=getattr(self.scheduler, "alpha", 0.0),
@@ -232,6 +235,7 @@ class DispatchLoop:
                 {t: v.alpha for t, v in vecs.items()}, self.tenant_of
             )
         changed: list[int] = []
+        cost = getattr(self.scheduler, "cost_model", None)
         for t, v in vecs.items():
             grant = (
                 plane.granted_bytes.get(t)
@@ -242,6 +246,7 @@ class DispatchLoop:
                 self.wm, v, plane.policies[t].config,
                 budget_bytes=grant,
                 only=lambda b, _t=t: self.tenant_of(b) == _t,
+                cost=cost,
             )
         merged = ControlVector(
             # alpha is informational here — scoring used per-bucket tenant

@@ -53,7 +53,10 @@ class CostModel:
     byte fraction sigma.  ``age_scale_ms`` is the fixed age-normalization
     horizon used by ``normalized=True`` scoring.  ``probe_bytes`` is the
     size of one pending probe object's host-side state — the §6 overflow
-    budget is denominated in these actual bytes, not object counts.
+    budget is denominated in these actual bytes, not object counts — and
+    ``min_unit_bytes`` floors each pending unit's price (>= 1 byte by
+    default) so degenerate units (e.g. zero-length serving prompts)
+    cannot free-ride the budget and sigma at zero cost.
     """
 
     T_b: float = 1.2  # seconds to read one bucket from backing store
@@ -61,6 +64,7 @@ class CostModel:
     T_spill: float = 0.0  # seconds to page a fully spilled queue back in
     age_scale_ms: float = 1e3  # normalized=True age horizon (ms)
     probe_bytes: float = 1.0  # bytes of spillable state per pending object
+    min_unit_bytes: float = 1.0  # floor per pending unit (§6 budget currency)
 
     def batch_cost(
         self, queue_size: int, in_cache: bool,
@@ -160,6 +164,11 @@ def per_tenant_latency(
     throughput}}`` — the per-class SLO surface the multi-tenant control
     plane is steering (interactive p95 vs batch throughput).  ``tenants``
     seeds classes that should appear even with zero completions.
+
+    A tenant with **no completed queries** reports ``n=0`` and ``None``
+    for every latency stat — a slice with nothing in it has no latency,
+    and reporting 0.0 made it indistinguishable from true zero latency
+    (summaries must skip or surface it, never average it in).
     """
     import numpy as np
 
@@ -172,13 +181,23 @@ def per_tenant_latency(
     makespan = max(makespan, 1e-9)
     out = {}
     for tenant, resp in sorted(groups.items()):
+        if not resp:
+            out[tenant] = {
+                "n": 0,
+                "p50_response": None,
+                "p95_response": None,
+                "max_response": None,
+                "mean_response": None,
+                "throughput": 0.0,
+            }
+            continue
         arr = np.asarray(sorted(resp), dtype=np.float64)
         out[tenant] = {
             "n": int(len(arr)),
-            "p50_response": float(np.percentile(arr, 50)) if len(arr) else 0.0,
-            "p95_response": float(np.percentile(arr, 95)) if len(arr) else 0.0,
-            "max_response": float(arr[-1]) if len(arr) else 0.0,
-            "mean_response": float(arr.mean()) if len(arr) else 0.0,
+            "p50_response": float(np.percentile(arr, 50)),
+            "p95_response": float(np.percentile(arr, 95)),
+            "max_response": float(arr[-1]),
+            "mean_response": float(arr.mean()),
             "throughput": len(arr) / makespan,
         }
     return out

@@ -125,7 +125,8 @@ def simulate_batched(
     """
     queries = sorted(queries, key=lambda q: q.arrival_time)
     wm = WorkloadManager(
-        bucket_of_range, bucket_of_keys, probe_bytes=cost.probe_bytes
+        bucket_of_range, bucket_of_keys, probe_bytes=cost.probe_bytes,
+        min_unit_bytes=cost.min_unit_bytes,
     )
     cache = BucketCache(cache_capacity)
     i = 0

@@ -8,11 +8,17 @@ interleaved in the same queue and joined in one pass.
 A query completes only when every one of its work units has been evaluated
 (the paper's "last-mile bottleneck", §3.3).
 
-§6 workload overflow is *partial* and *byte-accurate*: a queue can spill
-only its youngest work units to host (``spill_bucket(b, frac)``) while the
-oldest units stay resident — so the age term A(i) keeps its monotone
-now-independent rebase (the oldest pending arrival never moves on a spill)
-and the requesters who have waited longest never pay the host round-trip.
+§6 workload overflow is *partial* and *byte-accurate* in both directions:
+a queue can spill only its youngest work units to host
+(``spill_bucket(b, frac)``) while the oldest units stay resident — so the
+age term A(i) keeps its monotone now-independent rebase (the oldest
+pending arrival never moves on a spill) and the requesters who have
+waited longest never pay the host round-trip — and it pages back *paged*,
+oldest units first, never exceeding the arbiter's byte grant
+(``unspill_bucket(b, budget_bytes=...)``), so an unspill can never
+re-exceed the budget in one shot.  The mechanics live in the shared
+``SpillQueue`` primitive (``core/spillq.py``), the same container the
+serving engine's per-adapter queues run on.
 Accounting is in actual probe bytes (``CostModel.probe_bytes`` stamped
 onto each unit at submit), not the object-count proxy: the §6 budget is a
 memory budget, and probe payloads — not abstract objects — are what
@@ -21,10 +27,13 @@ occupy it.
 from __future__ import annotations
 
 import dataclasses
+import operator
 from collections import defaultdict
 from typing import Any, Callable, Iterable
 
 import numpy as np
+
+from .spillq import SpillBookkeepingMixin, SpillQueue
 
 __all__ = ["Query", "WorkUnit", "WorkloadQueue", "WorkloadManager", "DEFAULT_TENANT"]
 
@@ -79,156 +88,60 @@ class WorkUnit:
         return len(self.object_idx)
 
 
-class WorkloadQueue:
-    """Pending work units for one bucket, split into a *resident prefix*
-    (the oldest units) and a *spilled suffix* (the youngest, paged to
-    host under §6 overflow).
+class WorkloadQueue(SpillQueue):
+    """Pending work units for one bucket — the core instantiation of the
+    shared ``SpillQueue`` primitive (resident-oldest prefix / spilled-
+    youngest suffix; ``core/spillq.py`` owns the spill mechanics, shared
+    with serving's per-adapter queue).
 
     Invariants the schedulers and the control plane rely on:
       * ``oldest_arrival`` spans both sides and is maintained O(1) on push
         (units leave only wholesale via ``drain``), so the incremental
         scheduler's rebased key stays now-independent;
       * spilling moves only the *youngest* units — for a partial spill the
-        oldest unit is always resident;
+        oldest unit is always resident — and a paged unspill
+        (``unspill_oldest``) returns the *oldest* spilled units first,
+        never exceeding its byte grant;
       * ``size``/``nbytes`` count all pending work (Eq. 1's |W_i| is
         unchanged by residency); ``resident_size``/``resident_bytes``
         count only the resident prefix (the §6 budget target).
     """
 
-    __slots__ = (
-        "bucket_id", "units", "spilled_units",
-        "_size", "_spilled_size", "_bytes", "_spilled_bytes",
-        "_oldest", "_oldest_tenant", "_spilled_oldest",
-    )
+    __slots__ = ("_oldest", "_oldest_tenant")
 
     def __init__(self, bucket_id: int) -> None:
-        self.bucket_id = bucket_id
-        self.units: list[WorkUnit] = []  # resident prefix (oldest work)
-        self.spilled_units: list[WorkUnit] = []  # youngest, on host
-        self._size = 0
-        self._spilled_size = 0
-        self._bytes = 0.0
-        self._spilled_bytes = 0.0
+        super().__init__(
+            bucket_id,
+            bytes_of=operator.attrgetter("nbytes"),
+            arrival_of=operator.attrgetter("arrival_time"),
+            count_of=operator.attrgetter("size"),
+        )
         self._oldest = np.inf
         self._oldest_tenant = DEFAULT_TENANT
-        self._spilled_oldest = np.inf  # oldest arrival on the spilled side
+
+    # Historical names for the two sides (tests and the cross-match
+    # engine's probe gather read these directly).
+    @property
+    def units(self) -> list[WorkUnit]:
+        """Resident prefix (the oldest pending work)."""
+        return self.resident
+
+    @property
+    def spilled_units(self) -> list[WorkUnit]:
+        """Spilled suffix (the youngest, on host)."""
+        return self.spilled
 
     def push(self, unit: WorkUnit) -> None:
-        # While any of the queue is spilled, new (youngest) work lands on
-        # the spilled side: the resident prefix stays an age-contiguous
-        # cut, and an overflowing queue cannot grow its resident footprint
-        # behind the budget's back.  A unit older than the spill boundary
-        # (late out-of-order arrival) still belongs in the resident prefix.
-        if self.spilled_units and unit.arrival_time >= self._spilled_oldest:
-            self.spilled_units.append(unit)
-            self._spilled_size += unit.size
-            self._spilled_bytes += unit.nbytes
-        else:
-            self.units.append(unit)
-        self._size += unit.size
-        self._bytes += unit.nbytes
+        super().push(unit)
         if unit.arrival_time < self._oldest:
             self._oldest = unit.arrival_time
             self._oldest_tenant = unit.tenant
 
     def drain(self) -> list[WorkUnit]:
-        units = self.units + self.spilled_units
-        self.units, self.spilled_units = [], []
-        self._size = self._spilled_size = 0
-        self._bytes = self._spilled_bytes = 0.0
+        units = super().drain()
         self._oldest = np.inf
         self._oldest_tenant = DEFAULT_TENANT
-        self._spilled_oldest = np.inf
         return units
-
-    # -- §6 partial spill -------------------------------------------------------
-    def spill_youngest(self, frac: float = 1.0) -> int:
-        """Move the youngest resident units to host until the spilled byte
-        fraction reaches ``frac`` of the queue's total bytes.  Unit
-        granularity rounds *up* (spill at least the requested bytes); for
-        ``frac < 1`` the oldest unit always stays resident.  Returns the
-        number of units moved."""
-        if not self.units:
-            return 0
-        target = min(max(frac, 0.0), 1.0) * self._bytes
-        keep_oldest = frac < 1.0
-        # Youngest == largest arrival time; stable on ties so repeated
-        # partial spills are deterministic.
-        order = sorted(
-            range(len(self.units)),
-            key=lambda i: (self.units[i].arrival_time, i),
-        )
-        moved = 0
-        while self._spilled_bytes < target and order:
-            if keep_oldest and len(order) == 1:
-                break
-            i = order.pop()  # youngest remaining
-            unit = self.units[i]
-            self._spilled_size += unit.size
-            self._spilled_bytes += unit.nbytes
-            moved += 1
-        if moved:
-            resident_idx = sorted(order)
-            keep = set(resident_idx)
-            spilled = [u for i, u in enumerate(self.units) if i not in keep]
-            self.units = [self.units[i] for i in resident_idx]
-            # Spilled suffix stays youngest-last like the resident list.
-            self.spilled_units.extend(
-                sorted(spilled, key=lambda u: u.arrival_time)
-            )
-            self._spilled_oldest = min(
-                self._spilled_oldest,
-                min(u.arrival_time for u in spilled),
-            )
-        return moved
-
-    def unspill_all(self) -> int:
-        """Page every spilled unit back into the resident prefix.
-        Idempotent.  Returns the number of units restored."""
-        moved = len(self.spilled_units)
-        if moved:
-            merged = self.units + self.spilled_units
-            merged.sort(key=lambda u: u.arrival_time)
-            self.units = merged
-            self.spilled_units = []
-            self._spilled_size = 0
-            self._spilled_bytes = 0.0
-            self._spilled_oldest = np.inf
-        return moved
-
-    # -- accounting -------------------------------------------------------------
-    @property
-    def size(self) -> int:
-        """Total pending objects — |W_i| in Eq. 1 (resident + spilled)."""
-        return self._size
-
-    @property
-    def resident_size(self) -> int:
-        return self._size - self._spilled_size
-
-    @property
-    def nbytes(self) -> float:
-        """Total pending probe bytes (resident + spilled)."""
-        return self._bytes
-
-    @property
-    def resident_bytes(self) -> float:
-        return self._bytes - self._spilled_bytes
-
-    @property
-    def spilled_bytes(self) -> float:
-        return self._spilled_bytes
-
-    @property
-    def spilled_fraction(self) -> float:
-        """sigma(i) in Eq. 1: spilled share of the queue's probe bytes.
-        Exactly 0.0 / 1.0 at the ends (a fully spilled queue pays exactly
-        T_spill, bit-identical to the legacy boolean semantics)."""
-        if not self._size or not self.spilled_units:
-            return 0.0
-        if not self.units:
-            return 1.0
-        return self._spilled_bytes / self._bytes
 
     @property
     def oldest_arrival(self) -> float:
@@ -242,14 +155,8 @@ class WorkloadQueue:
         protecting)."""
         return self._oldest_tenant
 
-    def __len__(self) -> int:
-        return len(self.units) + len(self.spilled_units)
 
-    def __bool__(self) -> bool:
-        return self._size > 0
-
-
-class WorkloadManager:
+class WorkloadManager(SpillBookkeepingMixin):
     """The paper's Workload Manager (Fig. 3).
 
     Maintains: per-bucket workload queues, the query -> outstanding-bucket
@@ -257,7 +164,9 @@ class WorkloadManager:
     Pre-Processor: it maps each query object to the buckets its key range
     overlaps.  ``probe_bytes`` (normally set from ``CostModel.probe_bytes``
     by the engine) prices each pending object's host-side state for the §6
-    overflow budget.
+    overflow budget; ``min_unit_bytes`` floors each unit's price so no
+    pending unit is a zero-byte free-rider invisible to the budget and to
+    sigma (``CostModel.min_unit_bytes``).
     """
 
     def __init__(
@@ -265,12 +174,14 @@ class WorkloadManager:
         bucket_of_range: Callable[[int, int], np.ndarray],
         bucket_of_keys: Callable[[np.ndarray], np.ndarray] | None = None,
         probe_bytes: float = 1.0,
+        min_unit_bytes: float = 1.0,
     ):
         # bucket_of_range(key_lo, key_hi) -> array of overlapping bucket ids
         # bucket_of_keys(keys) -> bucket id per key (vectorized fast path)
         self._bucket_of_range = bucket_of_range
         self._bucket_of_keys = bucket_of_keys
         self.probe_bytes = float(probe_bytes)
+        self.min_unit_bytes = float(min_unit_bytes)
         self.queues: dict[int, WorkloadQueue] = {}
         self.outstanding: dict[int, set[int]] = {}  # query_id -> bucket ids
         self.queries: dict[int, Query] = {}
@@ -331,10 +242,10 @@ class WorkloadManager:
                 bucket_id=b,
                 object_idx=np.asarray(idx, dtype=np.int64),
                 arrival_time=query.arrival_time,
-                nbytes=len(idx) * self.probe_bytes,
+                nbytes=max(len(idx) * self.probe_bytes, self.min_unit_bytes),
                 tenant=query.tenant,
             )
-            self.queues.setdefault(b, WorkloadQueue(b)).push(unit)
+            self.queue(b).push(unit)
             units.append(unit)
             self._notify(b)
         if not per_bucket:  # degenerate empty query completes immediately
@@ -347,7 +258,12 @@ class WorkloadManager:
         return [q for q in self.queues.values() if q]
 
     def queue(self, bucket_id: int) -> WorkloadQueue:
-        return self.queues.setdefault(bucket_id, WorkloadQueue(bucket_id))
+        # get-or-create without constructing a throwaway queue per call
+        # (this sits on the per-unit submit hot path).
+        q = self.queues.get(bucket_id)
+        if q is None:
+            q = self.queues[bucket_id] = WorkloadQueue(bucket_id)
+        return q
 
     def ages_ms(self, now: float) -> dict[int, float]:
         """A(i): age in milliseconds of the oldest pending request per bucket
@@ -367,45 +283,9 @@ class WorkloadManager:
         return q.oldest_tenant if q else DEFAULT_TENANT
 
     # -- §6 workload overflow (spill to host) ----------------------------------
-    def is_spilled(self, bucket_id: int) -> bool:
-        """True if any of the bucket's pending workload is on host."""
-        return bucket_id in self._spilled
-
-    def spilled_fraction(self, bucket_id: int) -> float:
-        """sigma(i): the bucket's spilled byte fraction, in [0, 1]."""
-        q = self.queues.get(bucket_id)
-        return q.spilled_fraction if q else 0.0
-
-    def spill_bucket(self, bucket_id: int, frac: float = 1.0) -> bool:
-        """Spill the youngest ``frac`` of the bucket's pending probe bytes
-        to host (unit granularity, rounding up; ``frac=1`` spills the whole
-        queue — the legacy semantics).  The queue stays schedulable but
-        pays a sigma-pro-rated ``T_spill`` read-back surcharge in the
-        scheduler score, so it is deprioritized until its age term reclaims
-        it (no starvation).  Returns True if any unit moved."""
-        q = self.queues.get(bucket_id)
-        if q is None or not q:
-            return False
-        if not q.spill_youngest(frac):
-            return False
-        self._spilled.add(bucket_id)
-        self._notify(bucket_id)
-        return True
-
-    def unspill_bucket(self, bucket_id: int) -> bool:
-        """Page a bucket's spilled workload back into the resident set.
-        Idempotent: unspilling an unspilled bucket is a no-op."""
-        if bucket_id not in self._spilled:
-            return False
-        q = self.queues.get(bucket_id)
-        if q is not None:
-            q.unspill_all()
-        self._spilled.discard(bucket_id)
-        self._notify(bucket_id)
-        return True
-
-    def spilled_buckets(self) -> list[int]:
-        return sorted(self._spilled)
+    # is_spilled / spilled_fraction / spill_bucket / unspill_bucket /
+    # spilled_buckets come from SpillBookkeepingMixin — ONE copy of the
+    # §6 bucket protocol, shared with serving's AdapterWorkload.
 
     def resident_objects(self) -> int:
         """Pending objects NOT spilled to host."""

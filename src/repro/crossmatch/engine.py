@@ -73,6 +73,7 @@ class CrossMatchEngine:
         self.wm = WorkloadManager(
             catalog.partitioner.buckets_for_range,
             probe_bytes=self.cost_model.probe_bytes,
+            min_unit_bytes=self.cost_model.min_unit_bytes,
         )
         self.cache = BucketCache(cache_capacity)
         self.cos_thr = float(np.cos(match_radius_rad))

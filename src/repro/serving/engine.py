@@ -49,6 +49,7 @@ from ..core.control import (
 from ..core.dispatch import DispatchLoop
 from ..core.metrics import CostModel, per_tenant_latency
 from ..core.scheduler import LifeRaftScheduler, RoundRobinScheduler
+from ..core.spillq import SpillBookkeepingMixin, SpillQueue
 from ..core.workload import DEFAULT_TENANT
 
 __all__ = [
@@ -104,147 +105,68 @@ class ServeConfig:
     spill_budget_bytes: Optional[float] = None  # byte-accurate §6 budget
     spill_penalty_s: float = 0.0  # T_spill host read-back surcharge
     kv_bytes_per_token: float = 1.0  # spillable host state per prompt token
+    min_unit_bytes: float = 1.0  # floor per request (no zero-byte free-riders)
+    # Legacy §6 unspill: page a queue's whole spilled suffix back in one
+    # shot (on service and under low-water) instead of the paged
+    # oldest-first protocol.  Wholesale paging can re-exceed the budget
+    # the moment it lands — keep it off unless replaying old traces.
+    wholesale_unspill: bool = False
     # -- multi-tenant control plane (one ControlVector per adapter class) ------
     tenant_policies: Optional[tuple[TenantPolicy, ...]] = None
 
 
-class _AdapterQueue:
-    """WorkloadQueue façade over one adapter's pending request list, with
-    the same resident-prefix / spilled-suffix split as the core
-    WorkloadQueue: §6 overflow pages the *youngest* requests' prompt state
-    to host (``prompt_len * kv_bytes_per_token`` each); the oldest keep
-    their state resident.
+class _AdapterQueue(SpillQueue):
+    """One adapter's pending request list on the shared ``SpillQueue``
+    primitive (``core/spillq.py``) — the same resident-prefix /
+    spilled-suffix container the core WorkloadQueue runs on, so the §6
+    spill mechanics exist exactly once.  §6 overflow pages the *youngest*
+    requests' prompt state to host (``prompt_len * kv_bytes_per_token``
+    each, floored at ``min_unit_bytes`` so zero-length prompts cannot
+    free-ride the budget); the oldest keep their state resident."""
 
-    NOTE: this mirrors ``core.workload.WorkloadQueue``'s spill mechanics
-    (push boundary rule, youngest-first eviction, O(1) maintained byte
-    counters) over ``Request`` items — keep the two in lockstep; the
-    partial-spill property suite runs against both
-    (tests/test_partial_spill.py::TestServingQueueMirrorsCore)."""
+    __slots__ = ("_probe_bytes", "_min_unit_bytes")
 
-    __slots__ = (
-        "bucket_id", "requests", "spilled_requests", "_probe_bytes",
-        "_bytes", "_spilled_bytes", "_spilled_oldest",
-    )
-
-    def __init__(self, bucket_id: int, probe_bytes: float = 1.0) -> None:
-        self.bucket_id = bucket_id
-        self.requests: list[Request] = []  # resident prefix (oldest)
-        self.spilled_requests: list[Request] = []  # youngest, on host
+    def __init__(
+        self,
+        bucket_id: int,
+        probe_bytes: float = 1.0,
+        min_unit_bytes: float = 1.0,
+    ) -> None:
+        super().__init__(
+            bucket_id,
+            bytes_of=self._rbytes,
+            arrival_of=lambda r: r.arrival_time,
+            order_of=lambda r: (r.arrival_time, r.request_id),
+        )
         self._probe_bytes = probe_bytes
-        self._bytes = 0.0
-        self._spilled_bytes = 0.0
-        self._spilled_oldest = float("inf")
+        self._min_unit_bytes = min_unit_bytes
 
     def _rbytes(self, r: Request) -> float:
-        return r.prompt_len * self._probe_bytes
+        return max(r.prompt_len * self._probe_bytes, self._min_unit_bytes)
+
+    # Historical names for the two sides (the engine and the property
+    # suite read these directly).
+    @property
+    def requests(self) -> list[Request]:
+        """Resident prefix (the oldest pending requests)."""
+        return self.resident
 
     @property
-    def size(self) -> int:
-        return len(self.requests) + len(self.spilled_requests)
-
-    @property
-    def resident_size(self) -> int:
-        return len(self.requests)
-
-    @property
-    def nbytes(self) -> float:
-        return self._bytes
-
-    @property
-    def resident_bytes(self) -> float:
-        return self._bytes - self._spilled_bytes
-
-    @property
-    def spilled_bytes(self) -> float:
-        return self._spilled_bytes
-
-    @property
-    def spilled_fraction(self) -> float:
-        """Exactly 0.0 / 1.0 at the ends, like the core queue (a fully
-        spilled adapter pays exactly T_spill)."""
-        if not self.spilled_requests:
-            return 0.0
-        if not self.requests:
-            return 1.0
-        return self._spilled_bytes / self._bytes if self._bytes else 0.0
-
-    @property
-    def oldest_arrival(self) -> float:
-        pending = self.requests + self.spilled_requests
-        if not pending:
-            return float("inf")
-        return min(r.arrival_time for r in pending)
+    def spilled_requests(self) -> list[Request]:
+        """Spilled suffix (the youngest, on host)."""
+        return self.spilled
 
     def all_requests(self) -> list[Request]:
         """Resident prefix first (the oldest work), then the spilled tail."""
-        return self.requests + self.spilled_requests
-
-    def push(self, req: Request) -> None:
-        # Overflowing queues take new (youngest) work on the spilled side,
-        # keeping the resident prefix an age-contiguous cut (same rule as
-        # core WorkloadQueue.push); late out-of-order arrivals older than
-        # the spill boundary still join the resident prefix.
-        if self.spilled_requests and req.arrival_time >= self._spilled_oldest:
-            self.spilled_requests.append(req)
-            self._spilled_bytes += self._rbytes(req)
-        else:
-            self.requests.append(req)
-        self._bytes += self._rbytes(req)
-
-    def spill_youngest(self, frac: float = 1.0) -> int:
-        """Move the youngest resident requests to host until the spilled
-        byte fraction reaches ``frac``; for ``frac < 1`` the oldest request
-        always stays resident.  Returns requests moved."""
-        if not self.requests:
-            return 0
-        target = min(max(frac, 0.0), 1.0) * self._bytes
-        keep_oldest = frac < 1.0
-        order = sorted(
-            range(len(self.requests)),
-            key=lambda i: (self.requests[i].arrival_time, i),
-        )
-        taken: list[int] = []
-        while self._spilled_bytes < target and order:
-            if keep_oldest and len(order) == 1:
-                break
-            i = order.pop()
-            self._spilled_bytes += self._rbytes(self.requests[i])
-            taken.append(i)
-        if not taken:
-            return 0
-        keep = set(order)
-        moved = [r for i, r in enumerate(self.requests) if i not in keep]
-        self.requests = [self.requests[i] for i in sorted(keep)]
-        moved.sort(key=lambda r: r.arrival_time)
-        self.spilled_requests.extend(moved)
-        self._spilled_oldest = min(self._spilled_oldest, moved[0].arrival_time)
-        return len(taken)
-
-    def unspill_all(self) -> int:
-        moved = len(self.spilled_requests)
-        if moved:
-            merged = self.requests + self.spilled_requests
-            merged.sort(key=lambda r: (r.arrival_time, r.request_id))
-            self.requests = merged
-            self.spilled_requests = []
-            self._spilled_bytes = 0.0
-            self._spilled_oldest = float("inf")
-        return moved
+        return self.resident + self.spilled
 
     def _drop_finished(self) -> None:
-        """Trim finished requests (resident only — retire unspills first)
-        and rebase the byte counter."""
-        self.requests = [r for r in self.requests if not r.done]
-        self._bytes = sum(self._rbytes(r) for r in self.requests)
-
-    def __len__(self) -> int:
-        return self.size
-
-    def __bool__(self) -> bool:
-        return self.size > 0
+        """Trim finished requests (resident only — retire pages serviced
+        requests in first) and rebase the byte counter."""
+        self.prune_resident(lambda r: not r.done)
 
 
-class AdapterWorkload:
+class AdapterWorkload(SpillBookkeepingMixin):
     """WorkloadManager protocol (subscriptions, ages, §6 spill marks) over
     per-adapter request queues.
 
@@ -253,18 +175,26 @@ class AdapterWorkload:
     serving engine ride the scheduler's incremental heap index.
 
     ``probe_bytes`` prices one prompt token's spillable host state (KV /
-    prompt cache) for the §6 byte budget; ``tenant_of_adapter`` maps each
-    adapter to its tenant class for the multi-tenant control plane."""
+    prompt cache) for the §6 byte budget (``min_unit_bytes`` floors the
+    per-request price — a zero-length prompt still occupies request
+    state); ``tenant_of_adapter`` maps each adapter to its tenant class
+    for the multi-tenant control plane.  ``wholesale_unspill`` restores
+    the legacy whole-suffix paging on service."""
 
     def __init__(
         self,
         adapter_ids=(),
         probe_bytes: float = 1.0,
         tenants: Optional[dict[int, str]] = None,
+        min_unit_bytes: float = 1.0,
+        wholesale_unspill: bool = False,
     ) -> None:
         self.probe_bytes = float(probe_bytes)
+        self.min_unit_bytes = float(min_unit_bytes)
+        self.wholesale_unspill = bool(wholesale_unspill)
         self.queues: dict[int, _AdapterQueue] = {
-            a: _AdapterQueue(a, self.probe_bytes) for a in adapter_ids
+            a: _AdapterQueue(a, self.probe_bytes, self.min_unit_bytes)
+            for a in adapter_ids
         }
         self._tenants: dict[int, str] = dict(tenants or {})
         self._listeners: list[Callable[[int], None]] = []
@@ -285,10 +215,7 @@ class AdapterWorkload:
 
     # -- intake / service ------------------------------------------------------
     def push(self, req: Request) -> None:
-        q = self.queues.setdefault(
-            req.adapter_id, _AdapterQueue(req.adapter_id, self.probe_bytes)
-        )
-        q.push(req)
+        self.queue(req.adapter_id).push(req)
         self._notify(req.adapter_id)
 
     def take(self, adapter_id: int, n: int) -> list[Request]:
@@ -297,13 +224,25 @@ class AdapterWorkload:
         servicing pays the T_spill surcharge and pages them back in."""
         return self.queues[adapter_id].all_requests()[:n]
 
-    def retire(self, adapter_id: int) -> None:
-        """Drop finished requests after a dispatch; servicing also pages a
-        spilled adapter back in (mirrors WorkloadManager.complete_bucket)."""
+    def retire(self, adapter_id: int, serviced=None) -> None:
+        """Drop finished requests after a dispatch.  Servicing pages back
+        in only the requests that were actually in the batch
+        (``serviced``) — paging the *whole* spilled suffix on every
+        dispatch was the §6 wholesale-unspill budget overshoot: one
+        serviced adapter could re-exceed ``spill_budget_bytes`` in one
+        shot and re-engage spill next round.  Only the explicit
+        ``wholesale_unspill`` legacy flag restores that whole-suffix
+        paging (mirroring WorkloadManager.complete_bucket's drain); a
+        caller that does not know its batch (``serviced=None``) pages in
+        nothing rather than everything."""
         q = self.queues[adapter_id]
-        q.unspill_all()
+        if self.wholesale_unspill:
+            q.unspill_all()
+        elif serviced is not None:
+            q.unspill_items(serviced)
         q._drop_finished()
-        self._spilled.discard(adapter_id)
+        if not q.spilled_requests:
+            self._spilled.discard(adapter_id)
         self._notify(adapter_id)
 
     # -- scheduler-facing protocol ---------------------------------------------
@@ -311,9 +250,14 @@ class AdapterWorkload:
         return [q for q in self.queues.values() if q]
 
     def queue(self, adapter_id: int) -> _AdapterQueue:
-        return self.queues.setdefault(
-            adapter_id, _AdapterQueue(adapter_id, self.probe_bytes)
-        )
+        # get-or-create without constructing a throwaway queue per call
+        # (this sits on the per-request intake hot path).
+        q = self.queues.get(adapter_id)
+        if q is None:
+            q = self.queues[adapter_id] = _AdapterQueue(
+                adapter_id, self.probe_bytes, self.min_unit_bytes
+            )
+        return q
 
     def ages_ms(self, now: float) -> dict[int, float]:
         return {
@@ -338,38 +282,9 @@ class AdapterWorkload:
         return self._tenants.get(adapter_id, DEFAULT_TENANT)
 
     # -- §6 workload overflow ---------------------------------------------------
-    def is_spilled(self, adapter_id: int) -> bool:
-        return adapter_id in self._spilled
-
-    def spilled_fraction(self, adapter_id: int) -> float:
-        q = self.queues.get(adapter_id)
-        return q.spilled_fraction if q else 0.0
-
-    def spill_bucket(self, adapter_id: int, frac: float = 1.0) -> bool:
-        """Spill the youngest ``frac`` of the adapter's pending request
-        state (prompt KV bytes) to host; ``frac=1`` spills the whole queue
-        (legacy semantics)."""
-        q = self.queues.get(adapter_id)
-        if q is None or not q:
-            return False
-        if not q.spill_youngest(frac):
-            return False
-        self._spilled.add(adapter_id)
-        self._notify(adapter_id)
-        return True
-
-    def unspill_bucket(self, adapter_id: int) -> bool:
-        if adapter_id not in self._spilled:
-            return False
-        q = self.queues.get(adapter_id)
-        if q is not None:
-            q.unspill_all()
-        self._spilled.discard(adapter_id)
-        self._notify(adapter_id)
-        return True
-
-    def spilled_buckets(self) -> list[int]:
-        return sorted(self._spilled)
+    # is_spilled / spilled_fraction / spill_bucket / unspill_bucket /
+    # spilled_buckets come from SpillBookkeepingMixin — ONE copy of the
+    # §6 bucket protocol, shared with the core WorkloadManager.
 
 
 class LifeRaftEngine:
@@ -388,6 +303,7 @@ class LifeRaftEngine:
             T_m=config.per_token_cost,
             T_spill=config.spill_penalty_s,
             probe_bytes=config.kv_bytes_per_token,
+            min_unit_bytes=config.min_unit_bytes,
         )
         if config.policy == "rr":
             self.scheduler = RoundRobinScheduler(self.cost)
@@ -399,6 +315,8 @@ class LifeRaftEngine:
             [a.adapter_id for a in adapters],
             probe_bytes=self.cost.probe_bytes,
             tenants={a.adapter_id: a.tenant for a in adapters},
+            min_unit_bytes=self.cost.min_unit_bytes,
+            wholesale_unspill=config.wholesale_unspill,
         )
         self.decode_batch_fn = decode_batch_fn
         self.completed: list[Request] = []
@@ -425,6 +343,7 @@ class LifeRaftEngine:
                     fuse_k_max=config.fuse_k_max,
                     spill_budget_objects=config.spill_budget,
                     spill_budget_bytes=config.spill_budget_bytes,
+                    wholesale_unspill=config.wholesale_unspill,
                 )
             )
         self.control = control
@@ -514,11 +433,14 @@ class LifeRaftEngine:
         returns all segments at once)."""
         for d in decisions:
             adapter = d.bucket_id
-            for r in self._inflight.get(adapter, ()):
+            batch = self._inflight.get(adapter, ())
+            for r in batch:
                 if r.done and r.finish_time is None:
                     r.finish_time = now
                     self.completed.append(r)
-            self.workload.retire(adapter)
+            # Only the serviced requests page back in — the unserviced
+            # spilled tail stays on host, within the §6 budget.
+            self.workload.retire(adapter, batch)
         self._inflight = {}
 
     # ------------------------------------------------------------- scheduling
@@ -557,7 +479,7 @@ class LifeRaftEngine:
         if req.done and req.finish_time is None:
             req.finish_time = self.clock
             self.completed.append(req)
-        self.workload.retire(adapter)
+        self.workload.retire(adapter, [req])
         return adapter
 
     def run(self, requests: list[Request]) -> dict:

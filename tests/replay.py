@@ -233,6 +233,22 @@ def sim_scenario(name: str) -> list[dict]:
             _identity_range, CostModel(T_b=0.8, T_m=2e-4), alpha=0.5,
             cache_capacity=8, normalized=True, control=ctl, on_round=rec,
         )
+    elif name == "sim_spill_paged":
+        # §6 byte budget on a saturating flood: spill engages mid-trace,
+        # drains disengage it, and work pages back *paged* (oldest units
+        # first, T_spill-priced grants, never over the budget).  Recorded
+        # at feature introduction; pins the paged-unspill decisions.
+        cost = CostModel(T_b=0.06, T_m=2e-4, T_spill=0.3, probe_bytes=8.0)
+        ctl = ControlLoop(ControlConfig(
+            alpha_init=0.5, alpha_step=0.2, halflife_s=2.0,
+            rate_knee=12.0, depth_knee=1_200.0, fuse_k_max=4,
+            spill_budget_bytes=5_000.0,
+        ))
+        run_policy(
+            "liferaft", sim_trace(37, n=240, buckets=40, gap=0.012, depth_hi=28),
+            _identity_range, cost, alpha=0.5, cache_capacity=8,
+            normalized=True, control=ctl, on_round=rec,
+        )
     else:
         raise ValueError(name)
     return rec.entries
@@ -242,23 +258,42 @@ def serving_scenario(name: str) -> list[dict]:
     """Serving-engine DispatchLoop scenarios (virtual-clock decode)."""
     from repro.serving import AdapterSpec, LifeRaftEngine, Request, ServeConfig
 
-    rng = np.random.default_rng(31)
     n_adapters = 8
     w = 1.0 / np.arange(1, n_adapters + 1) ** 1.5
     w /= w.sum()
-    t, reqs = 0.0, []
-    for i in range(160):
-        t += float(rng.exponential(1.0 / 150.0))
-        reqs.append(
-            Request(i, int(rng.choice(n_adapters, p=w)), t,
-                    int(rng.integers(8, 64)), 16)
-        )
     adapters = [AdapterSpec(i, 8 << 30) for i in range(n_adapters)]
+
+    def trace(seed, n, rate, prompt_lo, prompt_hi, max_new):
+        rng = np.random.default_rng(seed)
+        t, reqs = 0.0, []
+        for i in range(n):
+            t += float(rng.exponential(1.0 / rate))
+            reqs.append(
+                Request(i, int(rng.choice(n_adapters, p=w)), t,
+                        int(rng.integers(prompt_lo, prompt_hi)), max_new)
+            )
+        return reqs
+
     if name == "serving_static":
+        reqs = trace(31, 160, 150.0, 8, 64, 16)
         cfg = ServeConfig(policy="liferaft", alpha=0.25, fuse_k=2)
     elif name == "serving_adaptive":
         # Closed loop, again without a spill budget (see sim_norm_ctl).
+        reqs = trace(31, 160, 150.0, 8, 64, 16)
         cfg = ServeConfig(policy="liferaft", adaptive=True, fuse_k_max=4)
+    elif name == "serving_spill_paged":
+        # §6 byte budget on the serving engine: a deep-decode flood spills
+        # prompt state to host, servicing pages back only the decoded
+        # batch (no wholesale retire), and disengaged rounds page in
+        # T_spill-priced grants.  Recorded at feature introduction; pins
+        # the paged protocol on this engine.
+        reqs = trace(53, 220, 400.0, 16, 96, 48)
+        cfg = ServeConfig(
+            policy="liferaft", adaptive=True, fuse_k_max=4, max_batch=8,
+            spill_budget_bytes=25_000.0, spill_penalty_s=0.05,
+            kv_bytes_per_token=16.0, control_halflife_s=1.0,
+            rate_knee=200.0, depth_knee=64.0,
+        )
     else:
         raise ValueError(name)
     eng = LifeRaftEngine(adapters, cfg)
@@ -294,8 +329,10 @@ SCENARIOS = {
     "sim_raw_fused": lambda: sim_scenario("sim_raw_fused"),
     "sim_norm_ctl": lambda: sim_scenario("sim_norm_ctl"),
     "sim_two_tenant": lambda: sim_scenario("sim_two_tenant"),
+    "sim_spill_paged": lambda: sim_scenario("sim_spill_paged"),
     "serving_static": lambda: serving_scenario("serving_static"),
     "serving_adaptive": lambda: serving_scenario("serving_adaptive"),
+    "serving_spill_paged": lambda: serving_scenario("serving_spill_paged"),
     "crossmatch_fused": lambda: crossmatch_scenario(),
 }
 

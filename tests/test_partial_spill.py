@@ -1,13 +1,23 @@
 """Property tests for §6 partial-queue spill with byte-accurate accounting.
 
 Invariants locked down here:
-  * byte/object conservation: resident + spilled == pending, always;
+  * byte/object conservation: resident + spilled == pending, always —
+    on the shared ``SpillQueue`` primitive and on both engines' queues
+    built on it;
   * the resident prefix is an age-contiguous cut — the oldest pending
-    unit is never spilled (partial spill evicts youngest-first), so the
-    age term A(i) and its monotone rebase are untouched by overflow;
+    unit is never spilled (partial spill evicts youngest-first), the
+    *oldest* spilled units return first (paged unspill), so the age term
+    A(i) and its monotone rebase are untouched by overflow;
+  * paged unspill never overshoots its byte grant — the §6
+    wholesale-unspill budget-overshoot bugfix (the legacy whole-queue
+    mode survives behind ``wholesale_unspill`` and still overshoots,
+    which the regression test demonstrates);
+  * unit prices are floored at ``min_unit_bytes`` — zero-length prompts
+    cannot free-ride the budget or sigma;
   * unspill is idempotent and restores the whole queue;
   * apply_spill enforces the byte budget (resident <= budget modulo the
-    oldest-unit floors) and never both spills and unspills in one round;
+    oldest-unit floors), never both spills and unspills in one round,
+    and prices paged unspill grants by T_spill wait-cost-per-byte;
   * the ControlLoop / TenantControlPlane spill hysteresis only
     transitions when a threshold is actually crossed — it cannot engage
     and disengage within one round.
@@ -21,6 +31,7 @@ from repro.core import (
     ControlLoop,
     ControlVector,
     CostModel,
+    SpillQueue,
     Telemetry,
     TenantControlPlane,
     TenantPolicy,
@@ -171,6 +182,99 @@ class TestPartialSpillInvariants:
         assert [u.arrival_time for u in q.units] == [0.0, 1.0]
 
 
+def _mk_spillq():
+    """Bare SpillQueue over (arrival, nbytes, ident) tuples — the shared
+    primitive both engines' queues are built on."""
+    return SpillQueue(
+        0, bytes_of=lambda it: it[1], arrival_of=lambda it: it[0]
+    )
+
+
+class TestSpillQueuePrimitive:
+    """spill -> partial-unspill -> spill round trips on the shared
+    primitive itself: conservation, oldest-first return, strict grants."""
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=40, deadline=None)
+    def test_round_trip_conserves_bytes_and_items(self, seed):
+        rng = np.random.default_rng(seed)
+        sq = _mk_spillq()
+        live = []
+
+        def push(ident):
+            it = (float(rng.uniform(0, 10)), float(rng.integers(1, 50)), ident)
+            live.append(it)
+            sq.push(it)
+
+        for i in range(8):
+            push(i)
+        for step in range(40):
+            op = rng.random()
+            if op < 0.3:
+                push(100 + step)
+            elif op < 0.55:
+                sq.spill_youngest(float(rng.uniform(0.05, 1.0)))
+            elif op < 0.8:
+                before = sq.resident_bytes
+                budget = float(rng.uniform(0.0, 120.0))
+                sq.unspill_oldest(budget_bytes=budget)
+                # A grant is a budget, not a target: never overshot.
+                assert sq.resident_bytes - before <= budget + 1e-9
+            else:
+                sq.unspill_all()
+            assert sq.resident_bytes + sq.spilled_bytes == pytest.approx(
+                sq.nbytes, rel=1e-12
+            )
+            assert len(sq.resident) + len(sq.spilled) == len(live)
+            assert sorted(id(x) for x in sq.resident + sq.spilled) == sorted(
+                id(x) for x in live
+            )
+            # Age cut holds through paged unspill: no resident item is
+            # younger than any spilled item.
+            if sq.resident and sq.spilled:
+                assert max(x[0] for x in sq.resident) <= min(
+                    x[0] for x in sq.spilled
+                )
+            assert 0.0 <= sq.spilled_fraction <= 1.0
+        drained = sq.drain()
+        assert sorted(x[2] for x in drained) == sorted(x[2] for x in live)
+        assert sq.nbytes == 0.0 and sq.size == 0 and not sq
+
+    def test_unspill_oldest_returns_strictly_oldest_first(self):
+        sq = _mk_spillq()
+        for i, t in enumerate([0.0, 1.0, 2.0, 3.0, 4.0]):
+            sq.push((t, 10.0, i))
+        sq.spill_youngest(0.8)  # arrivals 1..4 spilled (40 of 50 bytes)
+        assert [x[0] for x in sq.spilled] == [1.0, 2.0, 3.0, 4.0]
+        # A 25 B grant covers exactly the two OLDEST spilled items; the
+        # third (10 B) would overshoot and stays on host.
+        assert sq.unspill_oldest(budget_bytes=25.0) == 2
+        assert [x[0] for x in sq.resident] == [0.0, 1.0, 2.0]
+        assert [x[0] for x in sq.spilled] == [3.0, 4.0]
+        assert sq.spilled_bytes == 20.0
+
+    def test_grant_smaller_than_oldest_item_pages_nothing(self):
+        """Oldest-first is strict: a younger, smaller item is never paged
+        in ahead of an older one that does not fit."""
+        sq = _mk_spillq()
+        sq.push((0.0, 10.0, 0))
+        sq.push((1.0, 30.0, 1))  # old, big
+        sq.push((2.0, 5.0, 2))  # young, small — would fit, must still wait
+        sq.spill_youngest(0.7)
+        assert [x[2] for x in sq.spilled] == [1, 2]
+        assert sq.unspill_oldest(budget_bytes=8.0) == 0
+        assert [x[2] for x in sq.spilled] == [1, 2]
+        assert sq.resident_bytes == 10.0
+
+    def test_max_items_bound(self):
+        sq = _mk_spillq()
+        for i in range(5):
+            sq.push((float(i), 4.0, i))
+        sq.spill_youngest(1.0)
+        assert sq.unspill_oldest(max_items=2) == 2
+        assert [x[2] for x in sq.resident] == [0, 1]
+
+
 class TestApplySpillBytes:
     def _wm(self, probe_bytes=2.0):
         wm = WorkloadManager(_identity_range, probe_bytes=probe_bytes)
@@ -205,18 +309,63 @@ class TestApplySpillBytes:
 
     def test_one_round_never_spills_and_unspills(self):
         """Within a single apply_spill call the walk is one-directional:
-        engaged rounds only spill, disengaged rounds only unspill."""
+        engaged rounds only grow spilled bytes, disengaged rounds only
+        shrink them (a paged grant may leave a bucket partially spilled)."""
         wm = self._wm()
         cfg = ControlConfig(spill_budget_bytes=25.0, spill_low_water=0.9)
         spilled_before = set(wm.spilled_buckets())
         changed = apply_spill(wm, ControlVector(0.5, 1, True), cfg)
         assert all(wm.is_spilled(b) for b in changed)
         assert spilled_before.issubset(set(wm.spilled_buckets()))
-        # Drain enough that the disengaged round pages everything back.
+        # Drain enough that the disengaged round pages work back.
         wm.complete_bucket(1, 5.0)
         wm.complete_bucket(2, 5.0)
+        before = {b: wm.queues[b].spilled_bytes for b in wm.spilled_buckets()}
         changed = apply_spill(wm, ControlVector(0.5, 1, False), cfg)
-        assert all(not wm.is_spilled(b) for b in changed)
+        assert changed
+        for b in changed:
+            assert wm.queues[b].spilled_bytes < before[b]  # only unspilled
+
+    def test_paged_unspill_fills_exactly_the_low_water_headroom(self):
+        """The disengaged walk grants only ``low - resident`` bytes in
+        total, so a disengaged round can never push residency back above
+        the low-water mark, let alone the budget."""
+        wm = self._wm()  # 4 queues x 10 B
+        cfg = ControlConfig(spill_budget_bytes=25.0, spill_low_water=0.8)
+        apply_spill(wm, ControlVector(0.5, 1, True), cfg)  # spill to <= 25
+        wm.complete_bucket(1, 5.0)  # resident 24 -> 14; low = 20
+        resident_before = wm.resident_bytes()
+        changed = apply_spill(wm, ControlVector(0.5, 1, False), cfg)
+        assert changed
+        assert wm.resident_bytes() <= 25.0 * 0.8 + 1e-9
+        assert wm.resident_bytes() > resident_before  # it did page work in
+
+    def test_unspill_grants_priced_by_t_spill_per_byte(self):
+        """Highest wait-cost-per-byte pages in first: a small spilled
+        queue clears its whole T_spill surcharge with few granted bytes,
+        so it outranks a big older one; unpriced (no cost model or
+        T_spill == 0) falls back to oldest-first."""
+        def build():
+            wm = WorkloadManager(_identity_range, probe_bytes=2.0)
+            for j in range(10):  # bucket 1: old and big (20 B)
+                wm.submit(_mk_query(j, 0.1 * j, [1]))
+            for j in range(2):  # bucket 2: young and small (4 B)
+                wm.submit(_mk_query(100 + j, 5.0 + 0.1 * j, [2]))
+            wm.spill_bucket(1, 0.5)  # 10 B spilled
+            wm.spill_bucket(2, 0.6)  # 2 B spilled
+            return wm
+
+        # low = 14, resident = 12 -> 2 B of headroom: exactly one grant.
+        cfg = ControlConfig(spill_budget_bytes=17.5, spill_low_water=0.8)
+        vec = ControlVector(0.5, 1, False)
+        priced = build()
+        changed = apply_spill(priced, vec, cfg, cost=CostModel(T_spill=0.4))
+        assert changed == [2]  # T_spill/4 per byte beats T_spill/20
+        assert not priced.is_spilled(2)
+        unpriced = build()
+        changed = apply_spill(unpriced, vec, cfg, cost=None)
+        assert changed == [1]  # oldest-first when unpriced
+        assert unpriced.is_spilled(2)
 
     def test_tenant_filter_only_touches_own_buckets(self):
         wm = WorkloadManager(_identity_range, probe_bytes=1.0)
@@ -233,9 +382,10 @@ class TestApplySpillBytes:
 
 
 class TestServingQueueMirrorsCore:
-    """The serving engine's _AdapterQueue re-implements the core
-    WorkloadQueue's spill mechanics over Request items — these properties
-    pin the twin to the same invariants (conservation, age-cut,
+    """The serving engine's _AdapterQueue and the core WorkloadQueue now
+    share one ``SpillQueue`` implementation — these properties pin the
+    serving instantiation (Request items, prompt-byte pricing with the
+    zero-prompt floor) to the same invariants (conservation, age-cut,
     idempotent unspill, exact 0/1 sigma endpoints)."""
 
     def _workload(self, rng, n=20, n_adapters=4, probe_bytes=2.0):
@@ -262,11 +412,13 @@ class TestServingQueueMirrorsCore:
             op = rng.random()
             if op < 0.4:
                 aw.spill_bucket(a, float(rng.uniform(0.05, 1.0)) if op < 0.25 else frac)
-            elif op < 0.6:
+            elif op < 0.5:
                 aw.unspill_bucket(a)
-            elif op < 0.85:  # out-of-order arrivals included
+            elif op < 0.6:  # paged unspill: grants leave partial suffixes
+                aw.unspill_bucket(a, budget_bytes=float(rng.uniform(0, 80)))
+            elif op < 0.85:  # out-of-order arrivals + zero-length prompts
                 aw.push(Request(rid, a, float(rng.uniform(0, 3)),
-                                int(rng.integers(4, 64)), 16))
+                                int(rng.integers(0, 64)), 16))
                 rid += 1
             else:
                 aw.retire(a)
@@ -297,6 +449,142 @@ class TestServingQueueMirrorsCore:
         aw.spill_bucket(0, 0.4)
         assert 0.0 < q.spilled_fraction < 1.0
         assert q.requests[0].arrival_time == 0.0  # oldest stays resident
+
+
+class TestZeroByteFloor:
+    """§6 budget free-riders: units must never price at 0 bytes, or they
+    escape the budget and sigma entirely (a zero-length serving prompt
+    still holds request state; ``CostModel.min_unit_bytes`` floors it)."""
+
+    def test_zero_length_prompts_cannot_free_ride_the_budget(self):
+        from repro.serving import AdapterWorkload, Request
+
+        aw = AdapterWorkload([0], probe_bytes=4.0, min_unit_bytes=2.0)
+        for i, t in enumerate([0.0, 1.0, 2.0]):
+            aw.push(Request(i, 0, t, 0, 16))  # zero-length prompts
+        q = aw.queues[0]
+        assert q.nbytes == 6.0  # 3 x the 2 B floor, not 0
+        assert aw.spill_bucket(0, 0.5)  # spillable: there are bytes to move
+        assert q.spilled_bytes > 0.0
+        assert 0.0 < q.spilled_fraction < 1.0
+
+    def test_core_units_floored_at_min_unit_bytes(self):
+        wm = WorkloadManager(_identity_range, probe_bytes=0.0, min_unit_bytes=3.0)
+        wm.submit(_mk_query(0, 0.0, [1, 1]))
+        q = wm.queues[1]
+        assert q.nbytes == 3.0  # floored, not 2 * 0.0
+        assert wm.spill_bucket(1)
+        assert q.spilled_fraction == 1.0
+
+    def test_floor_does_not_alter_nonzero_prices(self):
+        from repro.serving import AdapterWorkload, Request
+
+        aw = AdapterWorkload([0], probe_bytes=4.0)  # default 1 B floor
+        aw.push(Request(0, 0, 0.0, 10, 16))
+        assert aw.queues[0].nbytes == 40.0
+
+
+class TestWholesaleUnspillOvershoot:
+    """The §6 bugfix this PR pins: wholesale unspill pages a queue's whole
+    spilled suffix back in one shot, which can immediately re-exceed
+    ``spill_budget_bytes`` and re-engage spill next round — oscillating
+    across the hysteresis band.  The paged protocol pages back only what
+    fits; the legacy behavior survives behind ``wholesale_unspill``
+    (where this suite demonstrates the overshoot it reintroduces)."""
+
+    BUDGET = 1_000.0
+    REQ_BYTES = 100.0  # prompt_len 10 x kv_bytes_per_token 10
+
+    def _run_serving(self, wholesale):
+        from repro.serving import AdapterSpec, LifeRaftEngine, Request, ServeConfig
+
+        cfg = ServeConfig(
+            policy="liferaft", adaptive=True, max_batch=4, decode_quantum=16,
+            spill_budget_bytes=self.BUDGET, spill_penalty_s=0.05,
+            kv_bytes_per_token=10.0, control_halflife_s=1.0,
+            wholesale_unspill=wholesale,
+        )
+        eng = LifeRaftEngine([AdapterSpec(a, 8 << 30) for a in range(3)], cfg)
+        rng = np.random.default_rng(5)
+        t, reqs = 0.0, []
+        for i in range(80):  # ~8 kB of prompt state vs a 1 kB budget
+            t += float(rng.exponential(0.002))
+            reqs.append(Request(i, int(rng.integers(0, 3)), t, 10, 16))
+        samples = []
+        prev_spilled = [0.0]
+
+        def on_round(outcome):
+            spilled = sum(
+                q.spilled_bytes for q in eng.workload.queues.values()
+            )
+            samples.append(
+                {
+                    "resident": eng.workload.resident_bytes(),
+                    "unspilled": spilled < prev_spilled[0] - 1e-9,
+                }
+            )
+            prev_spilled[0] = spilled
+
+        eng.loop.on_round = on_round
+        summary = eng.run(reqs)
+        assert summary["n_completed"] == len(reqs)
+        return samples
+
+    def _bound(self):
+        # The §6 floors: servicing pages in at most one batch (max_batch
+        # = 4) of spilled requests (they were decoded — their state is on
+        # device by definition), plus one oldest-unit no-starvation floor
+        # per adapter queue (3 adapters).  bench_adaptive's
+        # unspill_oscillation gate pins the same budget + (max_batch +
+        # n_adapters) * req_bytes formula.
+        return self.BUDGET + (4 + 3) * self.REQ_BYTES
+
+    def test_no_above_budget_round_follows_a_paged_unspill(self):
+        """The pinned regression: with the paged protocol, no scheduling
+        round that paged spilled work back in ends above the budget (+ the
+        service-batch and oldest-unit floors)."""
+        samples = self._run_serving(wholesale=False)
+        unspill_rounds = [s for s in samples if s["unspilled"]]
+        assert unspill_rounds, "scenario must exercise unspill"
+        bad = [s for s in unspill_rounds if s["resident"] > self._bound()]
+        assert not bad, bad
+
+    def test_wholesale_flag_reproduces_the_overshoot(self):
+        """The legacy mode is preserved behind the explicit flag — and it
+        demonstrably overshoots on the same trace, which is why it is no
+        longer the default (this is the bound's teeth)."""
+        samples = self._run_serving(wholesale=True)
+        unspill_rounds = [s for s in samples if s["unspilled"]]
+        assert any(s["resident"] > self._bound() for s in unspill_rounds)
+
+    def test_retire_pages_back_only_the_serviced_requests(self):
+        """Servicing a spilled adapter pages in exactly the batch it
+        decoded — not the whole suffix (the overshoot's mechanism)."""
+        from repro.serving import AdapterWorkload, Request
+
+        aw = AdapterWorkload([0], probe_bytes=10.0)
+        for i in range(10):
+            aw.push(Request(i, 0, float(i), 10, 32))  # 100 B each
+        aw.spill_bucket(0, 0.8)  # 8 youngest spilled
+        q = aw.queues[0]
+        assert len(q.spilled_requests) == 8
+        batch = aw.take(0, 4)  # 2 resident + the 2 oldest spilled
+        for r in batch:
+            r.tokens_done = 16  # serviced but unfinished
+        aw.retire(0, batch)
+        # Only the two serviced spilled requests paged back in.
+        assert len(q.requests) == 4 and len(q.spilled_requests) == 6
+        assert q.spilled_bytes == 600.0
+        assert aw.is_spilled(0)  # suffix remains -> still pays sigma
+        # Wholesale flag restores the legacy page-everything behavior.
+        aw_legacy = AdapterWorkload([0], probe_bytes=10.0, wholesale_unspill=True)
+        for i in range(10):
+            aw_legacy.push(Request(i, 0, float(i), 10, 32))
+        aw_legacy.spill_bucket(0, 0.8)
+        batch = aw_legacy.take(0, 4)
+        aw_legacy.retire(0, batch)
+        assert not aw_legacy.queues[0].spilled_requests
+        assert not aw_legacy.is_spilled(0)
 
 
 class TestSpillHysteresis:

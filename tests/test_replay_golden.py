@@ -33,6 +33,16 @@ def test_decision_log_matches_golden(name):
     )
 
 
+@pytest.mark.parametrize("name", ["sim_spill_paged", "serving_spill_paged"])
+def test_paged_spill_goldens_exercise_both_directions(name):
+    """The paged-unspill goldens must actually pin the §6 paths they were
+    recorded for: rounds that engage spill AND disengaged rounds that page
+    work back in (otherwise drift in the paged protocol would go unseen)."""
+    rounds = replay.load_trace(replay.GOLDEN_DIR / f"{name}.json")
+    assert any(e["vector"][2] and e["spill_changed"] for e in rounds)
+    assert any(not e["vector"][2] and e["spill_changed"] for e in rounds)
+
+
 def test_diff_traces_reports_divergence():
     """The harness itself must catch a moved decision, not just agree."""
     base = replay.SCENARIOS["sim_raw_fused"]()

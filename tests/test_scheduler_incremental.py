@@ -61,9 +61,12 @@ class _Mirror:
         self.wm_i.spill_bucket(b, frac)
         self.wm_n.spill_bucket(b, frac)
 
-    def unspill(self, b):
-        self.wm_i.unspill_bucket(b)
-        self.wm_n.unspill_bucket(b)
+    def unspill(self, b, budget=None):
+        """Wholesale (budget=None) or paged (budget_bytes) unspill on both
+        sides — partial unspill must update sigma/resident through the
+        change notification exactly like a spill does."""
+        self.wm_i.unspill_bucket(b, budget_bytes=budget)
+        self.wm_n.unspill_bucket(b, budget_bytes=budget)
 
     def compare_select(self, now):
         di = self.inc.select(self.wm_i, self.cache_i, now)
@@ -117,10 +120,14 @@ class TestIncrementalEquivalence:
             elif op < 0.95:
                 b = int(rng.integers(0, 12))
                 r = rng.random()
-                if r < 0.35:
+                if r < 0.3:
                     m.spill(b)  # whole queue (legacy sigma = 1)
-                elif r < 0.7:
+                elif r < 0.55:
                     m.spill(b, float(rng.uniform(0.1, 0.9)))  # partial
+                elif r < 0.8:
+                    # Paged unspill: a byte grant pages back only part of
+                    # the suffix — sigma moves without reaching 0.
+                    m.unspill(b, float(rng.uniform(0.5, 8.0)))
                 else:
                     m.unspill(b)
             else:
@@ -168,8 +175,11 @@ class TestIncrementalEquivalence:
                 })
             elif op < 0.92:
                 b = int(rng.integers(0, 10))
-                if rng.random() < 0.6:
+                r = rng.random()
+                if r < 0.5:
                     m.spill(b, float(rng.uniform(0.2, 1.0)))
+                elif r < 0.75:
+                    m.unspill(b, float(rng.uniform(0.5, 6.0)))  # paged
                 else:
                     m.unspill(b)
             else:
