@@ -14,6 +14,7 @@ def main() -> None:
     t0 = time.time()
     from . import (  # noqa: E402
         bench_adaptive,
+        bench_prefetch,
         bench_scheduler,
         fig2_hybrid_join,
         fig5_bucket_reuse,
@@ -34,6 +35,7 @@ def main() -> None:
         ("Fig.8 saturation trade-off + adaptive alpha", fig8_tradeoff.main),
         ("Scheduler hot path: incremental vs naive + compile counts", bench_scheduler.main),
         ("Adaptive control plane: closed loop vs best static alpha", bench_adaptive.main),
+        ("Prefetch: scan-horizon staging vs reactive LRU", bench_prefetch.main),
         ("Serving: multi-tenant LifeRaft engine", serving_bench.main),
         ("Kernels: micro-benchmarks", kernel_bench.main),
         ("Fault tolerance: goodput under failures", ft_bench.main),

@@ -15,10 +15,13 @@ Public surface:
     drives alpha, fuse_k and §6 spill from live telemetry (``control``)
   * ``DispatchLoop``: the one scheduling inner loop shared by both engines
     and the simulator (``dispatch``)
+  * ``ScanPlanner``/``PrefetchPipeline``: the scan-horizon prefetch
+    subsystem — commit the scheduler's next-H buckets in elevator-sweep
+    order and stage their I/O ahead of compute (``scanplan``/``prefetch``)
   * ``simulate``: the event-driven harness behind Figs. 7/8
 """
 from .bucket import BucketSpec, BucketStore, Partitioner
-from .cache import BucketCache, CacheStats
+from .cache import BucketCache, CacheOverflowError, CacheStats
 from .hybrid import HybridCostModel, HybridPlanner, JoinPlan
 from .metrics import (
     PAPER_COST_MODEL,
@@ -39,6 +42,8 @@ from .control import (
     unspill_price,
 )
 from .dispatch import DispatchLoop, DispatchOutcome
+from .prefetch import PrefetchConfig, PrefetchPipeline, build_pipeline
+from .scanplan import ScanPlanConfig, ScanPlanner
 from .scheduler import (
     LifeRaftScheduler,
     NaiveLifeRaftScheduler,
@@ -56,6 +61,7 @@ __all__ = [
     "BucketStore",
     "Partitioner",
     "BucketCache",
+    "CacheOverflowError",
     "CacheStats",
     "HybridCostModel",
     "HybridPlanner",
@@ -80,6 +86,11 @@ __all__ = [
     "SpillQueue",
     "DispatchLoop",
     "DispatchOutcome",
+    "PrefetchConfig",
+    "PrefetchPipeline",
+    "build_pipeline",
+    "ScanPlanConfig",
+    "ScanPlanner",
     "LifeRaftScheduler",
     "NaiveLifeRaftScheduler",
     "OrderedScheduler",

@@ -70,6 +70,7 @@ class ControlVector:
     alpha: float  # Eq. 2 in-order vs data-driven blend, in [0, 1]
     fuse_k: int  # buckets serviced per fused dispatch, >= 1
     spill: bool  # engage §6 workload overflow this round
+    horizon: int = 0  # prefetch lookahead H (0: law disabled, use static H)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +89,10 @@ class Telemetry:
     occupancy: float  # last dispatch's batch fill fraction, [0, 1]
     pending_bytes: float = 0.0  # total pending probe bytes
     resident_bytes: float = 0.0  # probe bytes NOT spilled (§6 budget target)
+    # -- prefetch pipeline signals (all zero without a pipeline) --------------
+    prefetch_stall_frac: float = 0.0  # last round's stall share of round time
+    prefetch_wasted: int = 0  # prefetched fills evicted untouched last round
+    prefetch_inflight: int = 0  # stages in flight on the staging channel
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,11 +113,22 @@ class ControlConfig:
     fuse_k_max: int = 8
     occ_low: float = 0.5  # below: dispatches underfull -> fuse more
     occ_high: float = 0.95  # above: dispatches saturated -> back off
+    # -- prefetch horizon H ---------------------------------------------------
+    prefetch_horizon_init: int = 4
+    prefetch_horizon_max: int = 0  # 0 disables the law (static H applies)
+    stall_high: float = 0.05  # stall share of round time: above -> deepen H
+    stall_low: float = 1e-3  # at/below this AND fills wasted -> shrink H
     # -- spill ---------------------------------------------------------------
     spill_budget_objects: Optional[int] = None  # legacy object-count budget
     spill_budget_bytes: Optional[float] = None  # byte-accurate §6 budget
     #   (preferred; enables *partial* queue spill — see apply_spill)
     spill_low_water: float = 0.8  # disengage below this fraction
+    # Price the *spill* victim walk by each queue's T_spill
+    # wait-cost-per-byte (lowest relief-per-byte evicted first), mirroring
+    # the unspill-grant pricing.  Off by default so recorded decision
+    # traces keep replaying bit-identically; unpriced walks (no cost model
+    # or T_spill == 0) are youngest-first either way.
+    price_spill_victims: bool = False
     # Legacy unspill: page each spilled queue's whole suffix back in one
     # shot instead of the paged oldest-first protocol.  Wholesale paging
     # is all-or-nothing per queue: a big queue either blocks the walk or
@@ -139,6 +155,7 @@ class ControlLoop:
         self.estimator = estimator or SaturationEstimator(config.halflife_s)
         self._alpha = min(max(config.alpha_init, config.alpha_min), config.alpha_max)
         self._fuse_k = max(1, int(config.fuse_k_init))
+        self._horizon = max(1, int(config.prefetch_horizon_init))
         self._depth_ewma = 0.0
         self._spilling = False
         self.rounds = 0
@@ -158,6 +175,7 @@ class ControlLoop:
             alpha=self._update_alpha(tel),
             fuse_k=self._update_fuse_k(tel),
             spill=self._update_spill(tel),
+            horizon=self._update_horizon(tel),
         )
         self.last = vec
         self.rounds += 1
@@ -206,6 +224,31 @@ class ControlLoop:
         k = max(1, min(k, cfg.fuse_k_max, max(tel.n_queues, 1)))
         self._fuse_k = k
         return k
+
+    # -- prefetch-horizon law -----------------------------------------------------
+    def _update_horizon(self, tel: Telemetry) -> int:
+        """AIMD-style H sizing, mirroring the fuse_k law: a round that
+        stalled on an in-flight stage means the pipeline looked ahead too
+        shallowly — deepen the horizon; stall-free rounds that *wasted*
+        fills (prefetched buckets evicted untouched) mean it looked too
+        far — back off.  Disabled (returns 0) unless
+        ``prefetch_horizon_max`` is set, so vectors stay inert for
+        configurations without a pipeline."""
+        cfg = self.cfg
+        if cfg.prefetch_horizon_max <= 0:
+            return 0
+        h = self._horizon
+        if tel.prefetch_stall_frac > cfg.stall_high:
+            h += 1
+        elif (
+            tel.prefetch_stall_frac <= cfg.stall_low
+            and tel.prefetch_wasted > 0
+            and h > 1
+        ):
+            h -= 1
+        h = max(1, min(h, cfg.prefetch_horizon_max))
+        self._horizon = h
+        return h
 
     # -- spill law --------------------------------------------------------------
     def _update_spill(self, tel: Telemetry) -> bool:
@@ -336,6 +379,23 @@ def _apply_spill_bytes(
             key=lambda q: (q.oldest_arrival, q.bucket_id),
             reverse=True,
         )
+        if config.price_spill_victims and victims:
+            # Priced walk (mirrors the unspill-grant pricing): evict the
+            # queue whose spilled state will cost the *least* future wait
+            # per byte freed — lowest T_spill wait-cost-per-byte
+            # (== largest nbytes) first, youngest-first on ties, so the
+            # unpriced case (no cost model / T_spill == 0) degenerates to
+            # the legacy order exactly.  The oldest queue still walks
+            # last (and is only ever spilled partially): pricing must not
+            # buy throughput with starvation.
+            victims.sort(
+                key=lambda q: (
+                    unspill_price(q, cost), -q.oldest_arrival, -q.bucket_id
+                )
+            )
+            oldest = min(victims, key=lambda q: (q.oldest_arrival, q.bucket_id))
+            victims.remove(oldest)
+            victims.append(oldest)
         for i, q in enumerate(victims):
             if deficit <= 0:
                 break

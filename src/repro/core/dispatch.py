@@ -7,12 +7,17 @@ fuse_k, clocks and dispatch counting, and the adaptive controller was only
 consulted by one benchmark.  ``DispatchLoop`` owns that round now:
 
     round():
-      1. snapshot Telemetry (queues, cache, occupancy, arrival EWMA)
+      1. snapshot Telemetry (queues, cache, occupancy, arrival EWMA,
+         prefetch stall/waste signals)
       2. vector = ControlLoop.update(telemetry)     # the ONE consult point
       3. apply vector.alpha to the scheduler (hot-swap re-key)
       4. apply_spill: enforce the §6 overflow budget on the workload
       5. select the top vector.fuse_k buckets (incremental heap path)
-      6. cost = execute(decisions, vector)          # engine-specific compute
+      5b. prefetch stage (when a PrefetchPipeline is wired): harvest
+          completed stages, pay residual stall for demanded in-flight
+          buckets, recommit the scan horizon (H from vector.horizon when
+          the ControlLoop sizes it) and issue the next stages
+      6. cost = stall + execute(decisions, vector)  # engine-specific compute
       7. advance the clock, run completion, count batches/dispatches
 
 Engines supply only ``execute`` (the device call + result routing) and
@@ -62,6 +67,9 @@ class DispatchOutcome:
     vector: ControlVector
     spill_changed: tuple[int, ...] = ()
     tenant_vectors: Optional[Mapping[str, ControlVector]] = None
+    # Residual prefetch stall included in ``cost`` (0.0 without a pipeline
+    # or when every demanded bucket was already staged).
+    stall: float = 0.0
 
 
 class DispatchLoop:
@@ -79,6 +87,7 @@ class DispatchLoop:
         batch_capacity: Optional[int] = None,
         clock: float = 0.0,
         on_round: Optional[Callable[[DispatchOutcome], None]] = None,
+        prefetch=None,  # Optional[PrefetchPipeline] (core/prefetch.py)
     ) -> None:
         self.scheduler = scheduler
         self.wm = wm
@@ -99,6 +108,16 @@ class DispatchLoop:
         self.on_round = on_round  # decision-log tap (tests/replay.py)
         self._occupancy = 0.0  # last round's batch fill fraction
         self._occ_by_tenant: dict[str, float] = {}
+        self.prefetch = prefetch
+        self._stall_frac = 0.0  # last round's stall share of round time
+        self._wasted_last = 0  # prefetched fills evicted untouched last round
+        self._wasted_base = 0
+        if prefetch is not None and hasattr(cache, "set_demand_probe"):
+            # Demand-aware eviction: a resident bucket with zero pending
+            # work is a strictly better victim than one queries wait on.
+            cache.set_demand_probe(
+                lambda b: q.size if (q := wm.queues.get(b)) else 0
+            )
 
     # -- intake-side sensor -----------------------------------------------------
     def observe_arrival(self, t: float) -> None:
@@ -149,6 +168,7 @@ class DispatchLoop:
                 a[5] = q.oldest_arrival
         rate = self.control.arrival_rate if self.control else 0.0
         hit = self._hit_rate()
+        inflight = self.prefetch.inflight if self.prefetch is not None else 0
         return {
             t: Telemetry(
                 now=self.clock,
@@ -163,6 +183,11 @@ class DispatchLoop:
                 else self._occupancy,
                 pending_bytes=a[2],
                 resident_bytes=a[3],
+                # Pipeline signals are machine-global (one staging channel),
+                # not per tenant: every slice sees the same values.
+                prefetch_stall_frac=self._stall_frac,
+                prefetch_wasted=self._wasted_last,
+                prefetch_inflight=inflight,
             )
             for t, a in agg.items()
         }
@@ -197,9 +222,25 @@ class DispatchLoop:
         if not decisions:
             return None
 
-        cost = self._execute(decisions, vector)
+        stall = 0.0
+        if self.prefetch is not None:
+            # Between select and execute: harvest due stages, pay residual
+            # stall for demanded in-flight buckets (the executor then sees
+            # them resident and charges no read), recommit the horizon and
+            # issue the next stages to overlap this round's compute.
+            stall = self.prefetch.stage(
+                self.wm, self.clock, decisions,
+                horizon=vector.horizon or None,
+            )
+        cost = stall + self._execute(decisions, vector)
         self.clock += cost
         self.busy += cost
+        if self.prefetch is not None:
+            self.prefetch.note_serviced(decisions)
+            self._stall_frac = stall / cost if cost > 0 else 0.0
+            unused = self.cache.stats.prefetch_unused
+            self._wasted_last = unused - self._wasted_base
+            self._wasted_base = unused
         if self._complete is not None:
             self._complete(decisions, self.clock)
         else:
@@ -214,7 +255,7 @@ class DispatchLoop:
         self.last_tenant_vectors = tenant_vectors
         outcome = DispatchOutcome(
             tuple(decisions), cost, vector, tuple(spill_changed),
-            tenant_vectors,
+            tenant_vectors, stall,
         )
         if self.on_round is not None:
             self.on_round(outcome)
@@ -250,10 +291,12 @@ class DispatchLoop:
             )
         merged = ControlVector(
             # alpha is informational here — scoring used per-bucket tenant
-            # alphas; fuse_k must cover the hungriest tenant's breadth.
+            # alphas; fuse_k must cover the hungriest tenant's breadth,
+            # and the horizon the deepest lookahead any tenant asked for.
             alpha=sum(v.alpha for v in vecs.values()) / max(len(vecs), 1),
             fuse_k=max((v.fuse_k for v in vecs.values()), default=1),
             spill=any(v.spill for v in vecs.values()),
+            horizon=max((v.horizon for v in vecs.values()), default=0),
         )
         return merged, changed, dict(vecs)
 

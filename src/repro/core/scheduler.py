@@ -252,6 +252,39 @@ class LifeRaftScheduler:
         self._dirty.update(suspended)  # restore on the next flush
         return out
 
+    def peek_topk(
+        self, wm: WorkloadManager, cache: BucketCache, now: float, k: int
+    ) -> list[SchedulerDecision]:
+        """Non-mutating preview of the next k distinct buckets by U_a,
+        best first — the scan planner's lookahead.  Unlike
+        :meth:`select_topk` it never suspends winners or touches heap
+        entries beyond ordinary dirty-flush maintenance (which ``select``
+        would perform identically), so peeking cannot move a decision.
+        O(B) over the live entries: planning-rate work, not the select
+        hot path, and ranked with the oracle's exact arithmetic so the
+        incremental and naive schedulers commit identical horizons."""
+        if k <= 0:
+            return []
+        if self._use_naive(wm, cache):
+            return _naive_topk(self, wm, cache, now, k)
+        self._bind(wm, cache)
+        self._flush_dirty()
+        uts, ags = self._key_coeffs()
+
+        def scored():
+            for b, e in self._entries.items():
+                a = self._group_alpha(e.group)
+                age = (now - e.oldest) * 1e3
+                yield ((e.ut * uts) * (1.0 - a) + (age * ags) * a, -b, b, e)
+
+        return [
+            SchedulerDecision(
+                bucket_id=b, score=ua, in_cache=e.cached, queue_size=e.size,
+                resident_size=e.resident,
+            )
+            for ua, _, b, e in heapq.nlargest(k, scored())
+        ]
+
     # -- incremental machinery --------------------------------------------------
     def _use_naive(self, wm, cache) -> bool:
         return not hasattr(wm, "subscribe") or not hasattr(cache, "subscribe")
@@ -441,6 +474,9 @@ class NaiveLifeRaftScheduler(LifeRaftScheduler):
             d = self.select(wm, cache, now)
             return [] if d is None else [d]
         return _naive_topk(self, wm, cache, now, k)
+
+    def peek_topk(self, wm, cache, now, k):
+        return _naive_topk(self, wm, cache, now, k) if k > 0 else []
 
 
 def _naive_scores(sched, wm, cache, now):

@@ -21,6 +21,7 @@ from .control import ControlLoop, TenantControlPlane
 from .dispatch import DispatchLoop
 from .hybrid import HybridPlanner
 from .metrics import CostModel, per_tenant_latency
+from .prefetch import PrefetchConfig, build_pipeline, prefetch_stats
 from .scheduler import (
     BucketScheduler,
     LifeRaftScheduler,
@@ -49,6 +50,9 @@ class SimResult:
     n_dispatches: int = 0  # scheduling rounds (== n_batches unless fused)
     # per tenant class: {tenant: {n, p50/p95/mean_response, throughput}}
     per_tenant: dict = dataclasses.field(default_factory=dict)
+    # prefetch pipeline rollup (empty without one): staged/fills/refused/
+    # demand_waits/stall_s + the CacheStats demand-vs-prefetch hit split
+    prefetch: dict = dataclasses.field(default_factory=dict)
 
     def row(self) -> dict:
         return dataclasses.asdict(self)
@@ -104,6 +108,7 @@ def simulate_batched(
     fuse_k: int = 1,
     control: Optional[ControlLoop | TenantControlPlane] = None,
     on_round=None,
+    prefetch: bool | PrefetchConfig = False,
 ) -> SimResult:
     """Batched policies (LifeRaft any alpha, RR): one bucket batch at a time.
 
@@ -122,6 +127,11 @@ def simulate_batched(
     ``fuse_k > 1`` services the top-k buckets per scheduling round (the
     fused multi-bucket execution path); residency/cost accounting stays
     per-bucket, but only one dispatch is counted.
+    ``prefetch`` (off by default) wires the scan-horizon pipeline: bucket
+    staging runs on a simulated serial I/O channel overlapping compute,
+    and rounds pay only the residual stall for demanded in-flight buckets
+    (``core/prefetch.py``; H is ControlLoop-sized when
+    ``prefetch_horizon_max`` is set).
     """
     queries = sorted(queries, key=lambda q: q.arrival_time)
     wm = WorkloadManager(
@@ -169,6 +179,7 @@ def simulate_batched(
     loop = DispatchLoop(
         scheduler, wm, cache, execute, control=control, fuse_k=fuse_k,
         tenant_of=wm.tenant_of_bucket, on_round=on_round,
+        prefetch=build_pipeline(prefetch, scheduler, cache, cost.T_b),
     )
 
     def admit(until: float) -> None:
@@ -202,10 +213,15 @@ def simulate_batched(
         name = f"{name}+mt"
     elif control is not None:
         name = f"{name}+ctl"
-    return _collect(
+    if loop.prefetch is not None:
+        name = f"{name}+pf"
+    result = _collect(
         name, wm, cache, loop.clock, loop.busy, loop.batches, total_objects,
         indexed_batches, loop.dispatches,
     )
+    if loop.prefetch is not None:
+        result.prefetch = prefetch_stats(loop.prefetch, cache)
+    return result
 
 
 def simulate_noshare(
@@ -255,6 +271,7 @@ def run_policy(
     fuse_k: int = 1,
     control: Optional[ControlLoop] = None,
     on_round=None,
+    prefetch: bool | PrefetchConfig = False,
 ) -> SimResult:
     """Convenience dispatcher used by benchmarks:
     'noshare'|'rr'|'liferaft'|'liferaft-naive'."""
@@ -274,5 +291,5 @@ def run_policy(
     return simulate_batched(
         queries, bucket_of_range, sched, cost, cache_capacity, hybrid,
         bucket_of_keys=bucket_of_keys, fuse_k=fuse_k, control=control,
-        on_round=on_round,
+        on_round=on_round, prefetch=prefetch,
     )

@@ -33,6 +33,7 @@ from ..core.control import ControlLoop, TenantControlPlane
 from ..core.dispatch import DispatchLoop
 from ..core.hybrid import HybridPlanner
 from ..core.metrics import CostModel, per_tenant_latency
+from ..core.prefetch import PrefetchConfig, build_pipeline
 from ..core.scheduler import BucketScheduler, LifeRaftScheduler, SchedulerDecision
 from ..core.workload import Query, WorkloadManager
 from .catalog import SkyCatalog
@@ -64,6 +65,7 @@ class CrossMatchEngine:
         mag_cut: float = 24.0,
         fuse_k: int = 1,
         control: Optional[ControlLoop | TenantControlPlane] = None,
+        prefetch: bool | PrefetchConfig = False,
     ) -> None:
         self.catalog = catalog
         self.cost_model = cost_model or CostModel()
@@ -84,11 +86,17 @@ class CrossMatchEngine:
         self.results: dict[int, list[MatchResult]] = {}
         self.max_probe_batch = 0  # largest probe batch sent to the device
         # The shared scheduling inner loop; the controller (when given) is
-        # consulted there, once per round, never here.
+        # consulted there, once per round, never here.  With ``prefetch``
+        # on, horizon buckets are staged by real threaded store reads
+        # while cost accounting stays on the virtual T_b channel.
         self.loop = DispatchLoop(
             self.scheduler, self.wm, self.cache, self._execute,
             control=control, fuse_k=self.fuse_k,
             tenant_of=self.wm.tenant_of_bucket,
+            prefetch=build_pipeline(
+                prefetch, self.scheduler, self.cache, self.cost_model.T_b,
+                fetch=self.catalog.store.read,
+            ),
         )
 
     # -- loop-owned counters (kept as attributes for back-compat) --------------
@@ -283,7 +291,14 @@ class CrossMatchEngine:
             self.submit(q)
         while self.step() is not None:
             pass
+        self.close()  # reap prefetch workers; they respawn if reused
         return self.results
+
+    def close(self) -> None:
+        """Release the prefetch staging threads (no-op without prefetch;
+        step()-driven callers should close when done)."""
+        if self.loop.prefetch is not None:
+            self.loop.prefetch.close()
 
     # -- metrics --------------------------------------------------------------------
     def summary(self) -> dict:

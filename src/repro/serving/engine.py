@@ -48,6 +48,7 @@ from ..core.control import (
 )
 from ..core.dispatch import DispatchLoop
 from ..core.metrics import CostModel, per_tenant_latency
+from ..core.prefetch import PrefetchConfig, build_pipeline, prefetch_stats
 from ..core.scheduler import LifeRaftScheduler, RoundRobinScheduler
 from ..core.spillq import SpillBookkeepingMixin, SpillQueue
 from ..core.workload import DEFAULT_TENANT
@@ -111,6 +112,14 @@ class ServeConfig:
     # oldest-first protocol.  Wholesale paging can re-exceed the budget
     # the moment it lands — keep it off unless replaying old traces.
     wholesale_unspill: bool = False
+    # -- scan-horizon prefetch (core/prefetch.py) ------------------------------
+    # Stage the next adapters' weights into HBM ahead of their dispatch
+    # (host->HBM DMA modeled as one serial channel overlapping decode).
+    # Off by default: the reactive LRU path replays bit-identically.
+    prefetch: bool = False
+    prefetch_horizon: int = 4  # planner lookahead H (static, or AIMD init)
+    prefetch_depth: int = 2  # stages in flight (2 == double buffering)
+    prefetch_horizon_max: int = 0  # >0 with adaptive: ControlLoop sizes H
     # -- multi-tenant control plane (one ControlVector per adapter class) ------
     tenant_policies: Optional[tuple[TenantPolicy, ...]] = None
 
@@ -344,9 +353,20 @@ class LifeRaftEngine:
                     spill_budget_objects=config.spill_budget,
                     spill_budget_bytes=config.spill_budget_bytes,
                     wholesale_unspill=config.wholesale_unspill,
+                    prefetch_horizon_init=config.prefetch_horizon,
+                    prefetch_horizon_max=(
+                        config.prefetch_horizon_max if config.prefetch else 0
+                    ),
                 )
             )
         self.control = control
+        pf_cfg = (
+            PrefetchConfig(
+                horizon=config.prefetch_horizon, depth=config.prefetch_depth
+            )
+            if config.prefetch
+            else False
+        )
         self.loop = DispatchLoop(
             self.scheduler,
             self.workload,
@@ -357,6 +377,12 @@ class LifeRaftEngine:
             fuse_k=config.fuse_k,
             complete=self._complete,
             batch_capacity=config.max_batch,
+            # Staging cost is per adapter: its weight bytes over HBM bw
+            # (exactly the t_load the demand path would have paid inline).
+            prefetch=build_pipeline(
+                pf_cfg, self.scheduler, self.cache,
+                lambda a: self.adapters[a].nbytes / self.cfg.hbm_bw,
+            ),
         )
 
     # ------------------------------------------------------------- views
@@ -531,4 +557,9 @@ class LifeRaftEngine:
             "indexed_batches": self.indexed_batches,
             "spilled": self.workload.spilled_buckets(),
             "per_tenant": per_tenant,
+            "prefetch": (
+                prefetch_stats(self.loop.prefetch, self.cache)
+                if self.loop.prefetch is not None
+                else {}
+            ),
         }

@@ -47,26 +47,31 @@ class TraceRecorder:
         self.entries: list[dict] = []
 
     def __call__(self, outcome) -> None:
-        self.entries.append(
-            {
-                "decisions": [
-                    [
-                        int(d.bucket_id),
-                        float(d.score),
-                        bool(d.in_cache),
-                        int(d.queue_size),
-                    ]
-                    for d in outcome.decisions
-                ],
-                "cost": float(outcome.cost),
-                "vector": [
-                    float(outcome.vector.alpha),
-                    int(outcome.vector.fuse_k),
-                    bool(outcome.vector.spill),
-                ],
-                "spill_changed": [int(b) for b in outcome.spill_changed],
-            }
-        )
+        entry = {
+            "decisions": [
+                [
+                    int(d.bucket_id),
+                    float(d.score),
+                    bool(d.in_cache),
+                    int(d.queue_size),
+                ]
+                for d in outcome.decisions
+            ],
+            "cost": float(outcome.cost),
+            "vector": [
+                float(outcome.vector.alpha),
+                int(outcome.vector.fuse_k),
+                bool(outcome.vector.spill),
+            ],
+            "spill_changed": [int(b) for b in outcome.spill_changed],
+        }
+        # Residual prefetch stall: only emitted when nonzero, so goldens
+        # recorded before the pipeline existed replay byte-identically
+        # (their rounds never stall) while prefetch-on goldens pin it.
+        stall = float(getattr(outcome, "stall", 0.0))
+        if stall:
+            entry["stall"] = stall
+        self.entries.append(entry)
 
 
 # --------------------------------------------------------------- diffing
@@ -88,8 +93,8 @@ def diff_traces(expect: list[dict], got: list[dict]) -> list[str]:
     if len(expect) != len(got):
         out.append(f"length: expect {len(expect)} rounds, got {len(got)}")
     for i, (e, g) in enumerate(zip(expect, got)):
-        for field in ("decisions", "cost", "vector", "spill_changed"):
-            if e[field] != g[field]:
+        for field in ("decisions", "cost", "vector", "spill_changed", "stall"):
+            if e.get(field) != g.get(field):
                 out.append(
                     f"round {i} {field}:\n  expect {_fmt(e)}\n  got    {_fmt(g)}"
                 )
@@ -194,7 +199,7 @@ def sim_scenario(name: str) -> list[dict]:
     """Simulator DispatchLoop scenarios (cost-model executor)."""
     from repro.core import (
         ControlConfig, ControlLoop, CostModel, LifeRaftScheduler,
-        simulate_batched, run_policy,
+        PrefetchConfig, simulate_batched, run_policy,
     )
 
     rec = TraceRecorder()
@@ -232,6 +237,27 @@ def sim_scenario(name: str) -> list[dict]:
             "liferaft", sim_trace(23, n=180, buckets=90, gap=0.02),
             _identity_range, CostModel(T_b=0.8, T_m=2e-4), alpha=0.5,
             cache_capacity=8, normalized=True, control=ctl, on_round=rec,
+        )
+    elif name == "sim_prefetch":
+        # Scan-horizon prefetch ON (recorded at feature introduction):
+        # deep queues make compute comparable to T_b so staging genuinely
+        # overlaps; the ControlLoop sizes H (AIMD on stall), the §6 byte
+        # budget engages mid-flood, and the spill victim walk runs PRICED
+        # (price_spill_victims) — this golden pins the prefetch-on
+        # decision trace, the per-round residual stalls, and the priced
+        # victim order against future drift.
+        cost = CostModel(T_b=0.08, T_m=2e-4, T_spill=0.2, probe_bytes=8.0)
+        ctl = ControlLoop(ControlConfig(
+            alpha_init=0.5, alpha_step=0.2, halflife_s=2.0,
+            rate_knee=12.0, depth_knee=1_500.0, fuse_k_max=3,
+            spill_budget_bytes=3_000.0, price_spill_victims=True,
+            prefetch_horizon_init=2, prefetch_horizon_max=8,
+        ))
+        run_policy(
+            "liferaft", sim_trace(59, n=220, buckets=48, gap=0.012, depth_hi=60),
+            _identity_range, cost, alpha=0.5, cache_capacity=8,
+            normalized=True, control=ctl, on_round=rec,
+            prefetch=PrefetchConfig(horizon=4, depth=4),
         )
     elif name == "sim_spill_paged":
         # §6 byte budget on a saturating flood: spill engages mid-trace,
@@ -281,6 +307,20 @@ def serving_scenario(name: str) -> list[dict]:
         # Closed loop, again without a spill budget (see sim_norm_ctl).
         reqs = trace(31, 160, 150.0, 8, 64, 16)
         cfg = ServeConfig(policy="liferaft", adaptive=True, fuse_k_max=4)
+    elif name == "serving_prefetch":
+        # Scan-horizon prefetch on the serving engine: adapter weights
+        # stage into HBM slots ahead of their dispatch on the modeled
+        # DMA channel (recorded at feature introduction; pins the
+        # prefetch-on decisions + stalls for this engine).  Heavy 48 GiB
+        # adapters make the stage time exceed a decode quantum, so the
+        # golden pins at least one residual-stall round.
+        adapters = [AdapterSpec(i, 48 << 30) for i in range(n_adapters)]
+        reqs = trace(61, 200, 300.0, 16, 96, 32)
+        cfg = ServeConfig(
+            policy="liferaft", adaptive=True, fuse_k_max=4, max_batch=8,
+            control_halflife_s=1.0, prefetch=True, prefetch_horizon=2,
+            prefetch_horizon_max=6, prefetch_depth=4,
+        )
     elif name == "serving_spill_paged":
         # §6 byte budget on the serving engine: a deep-decode flood spills
         # prompt state to host, servicing pages back only the decoded
@@ -330,9 +370,11 @@ SCENARIOS = {
     "sim_norm_ctl": lambda: sim_scenario("sim_norm_ctl"),
     "sim_two_tenant": lambda: sim_scenario("sim_two_tenant"),
     "sim_spill_paged": lambda: sim_scenario("sim_spill_paged"),
+    "sim_prefetch": lambda: sim_scenario("sim_prefetch"),
     "serving_static": lambda: serving_scenario("serving_static"),
     "serving_adaptive": lambda: serving_scenario("serving_adaptive"),
     "serving_spill_paged": lambda: serving_scenario("serving_spill_paged"),
+    "serving_prefetch": lambda: serving_scenario("serving_prefetch"),
     "crossmatch_fused": lambda: crossmatch_scenario(),
 }
 

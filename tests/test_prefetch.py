@@ -1,0 +1,520 @@
+"""Scan-horizon prefetch subsystem tests (core/scanplan.py, core/prefetch.py)
+plus the demand-aware BucketCache and the priced spill victim walk.
+
+Property invariants locked down here:
+  * the committed horizon is always a *prefix-consistent reorder* of the
+    scheduler's heap order — a permutation of ``peek_topk(H)``: nothing
+    invented, nothing from the top-H dropped, only the staging order
+    within the horizon is layout-driven (elevator sweep);
+  * ``peek_topk`` is non-mutating and bit-identical between the
+    incremental scheduler and the naive oracle, so both commit the same
+    horizon;
+  * invalidation never starves the oldest pending bucket: after
+    ``starvation_deferrals`` commits that leave it behind, it is forced
+    to the horizon front;
+  * a horizon-protected bucket is never evicted while protected, and
+    with a demand probe installed, zero-demand residents are preferred
+    victims;
+  * ``CacheStats`` splits demand hits from prefetch fills (hit rate
+    stays a demand statistic);
+  * cache edge cases are explicit now: over-pinned inserts raise
+    ``CacheOverflowError`` instead of silently exceeding capacity, and
+    invalidating a pinned bucket is a hard error;
+  * with ``price_spill_victims``, the spill victim walk evicts the
+    lowest T_spill wait-cost-per-byte queue first while the oldest queue
+    still walks last (and is never fully spilled); the default walk is
+    bit-for-bit the legacy youngest-first order.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BucketCache,
+    CacheOverflowError,
+    ControlConfig,
+    ControlVector,
+    CostModel,
+    LifeRaftScheduler,
+    NaiveLifeRaftScheduler,
+    PrefetchConfig,
+    PrefetchPipeline,
+    ScanPlanConfig,
+    ScanPlanner,
+    apply_spill,
+    build_pipeline,
+    run_policy,
+    unspill_price,
+)
+from repro.core.workload import Query, WorkloadManager
+
+import replay
+
+
+def _identity_range(lo, hi):
+    return np.arange(lo, hi + 1)
+
+
+def _mk_query(qid, t, buckets):
+    ks = np.asarray(buckets, dtype=np.uint64)
+    return Query(qid, t, ks, ks)
+
+
+def _workload_from_seed(seed, n_queries=30, n_buckets=12):
+    rng = np.random.default_rng(seed)
+    wm = WorkloadManager(_identity_range, probe_bytes=4.0)
+    t = 0.0
+    for qid in range(n_queries):
+        t += float(rng.exponential(0.1))
+        n = int(rng.integers(1, 5))
+        wm.submit(_mk_query(qid, t, rng.integers(0, n_buckets, n)))
+    return wm, t
+
+
+# ------------------------------------------------------------- ScanPlanner
+class TestScanPlanner:
+    @given(st.integers(0, 10_000), st.integers(1, 10))
+    @settings(max_examples=40, deadline=None)
+    def test_horizon_is_prefix_consistent_reorder_of_heap_order(self, seed, h):
+        """The committed horizon is a permutation of the scheduler's own
+        top-H peek — the planner reorders, it never edits the set."""
+        wm, now = _workload_from_seed(seed)
+        cache = BucketCache(4)
+        sched = LifeRaftScheduler(CostModel(T_b=0.1, T_m=1e-3), alpha=0.3)
+        planner = ScanPlanner(sched, ScanPlanConfig(horizon=h))
+        plan = planner.plan(wm, cache, now)
+        top = [d.bucket_id for d in sched.peek_topk(wm, cache, now, h)]
+        assert sorted(plan) == sorted(top)
+
+    @given(st.integers(0, 10_000), st.integers(1, 8))
+    @settings(max_examples=25, deadline=None)
+    def test_peek_topk_is_non_mutating_and_matches_oracle(self, seed, k):
+        wm, now = _workload_from_seed(seed)
+        cache = BucketCache(4)
+        cost = CostModel(T_b=0.1, T_m=1e-3)
+        inc = LifeRaftScheduler(cost, alpha=0.4, normalized=True)
+        nai = NaiveLifeRaftScheduler(cost, alpha=0.4, normalized=True)
+        got = [(d.bucket_id, d.score) for d in inc.peek_topk(wm, cache, now, k)]
+        want = [(d.bucket_id, d.score) for d in nai.peek_topk(wm, cache, now, k)]
+        assert got == want
+        # Peeking left the incremental index untouched: the next select
+        # still bit-matches the oracle.
+        d_inc = inc.select(wm, cache, now + 0.5)
+        d_nai = nai.select(wm, cache, now + 0.5)
+        assert (d_inc.bucket_id, d_inc.score) == (d_nai.bucket_id, d_nai.score)
+
+    def test_elevator_sweep_continues_from_head(self):
+        """Candidates at/after the head sweep ascending first; the
+        stragglers behind come on the way back, descending."""
+        wm, now = _workload_from_seed(3, n_queries=40, n_buckets=20)
+        cache = BucketCache(4)
+        sched = LifeRaftScheduler(CostModel(T_b=0.1, T_m=1e-3), alpha=0.0)
+        planner = ScanPlanner(
+            sched, ScanPlanConfig(horizon=8, starvation_deferrals=10**9)
+        )
+        planner.note_serviced([9])  # head at layout position 9
+        plan = planner.plan(wm, cache, now)
+        ahead = [b for b in plan if b >= 9]
+        behind = [b for b in plan if b < 9]
+        assert plan == ahead + behind
+        assert ahead == sorted(ahead)
+        assert behind == sorted(behind, reverse=True)
+
+    def test_invalidation_never_starves_the_oldest_pending_bucket(self):
+        """Adversarial reshuffling: new deep arrivals keep re-sorting the
+        committed horizon so the oldest pending bucket (a shallow greedy
+        loser) always lands at the back of the sweep.  After
+        ``starvation_deferrals`` commits the guard must force it front."""
+        wm = WorkloadManager(_identity_range, probe_bytes=4.0)
+        wm.submit(_mk_query(0, 0.0, [5]))  # the oldest pending bucket
+        for qid in range(1, 4):
+            wm.submit(_mk_query(qid, 0.1 * qid, [10 + qid] * 6))
+        cache = BucketCache(4)
+        sched = LifeRaftScheduler(CostModel(T_b=0.5, T_m=1e-3), alpha=0.0)
+        planner = ScanPlanner(
+            sched, ScanPlanConfig(horizon=4, starvation_deferrals=3)
+        )
+        qid, fronted = 4, None
+        for commit in range(8):
+            # reshuffle each commit: another deep unit perturbs the scores
+            wm.submit(_mk_query(qid, 1.0 + 0.1 * commit, [11 + commit % 3] * 6))
+            qid += 1
+            plan = planner.plan(wm, cache, 2.0 + 0.1 * commit)
+            assert 5 in plan  # horizon covers all four buckets
+            if plan[0] == 5:
+                fronted = commit
+                break
+        assert fronted is not None, "oldest pending bucket never fronted"
+        assert fronted <= planner.cfg.starvation_deferrals + 1
+
+    def test_planner_without_peek_commits_nothing(self):
+        class NoPeek:
+            pass
+
+        wm, now = _workload_from_seed(1)
+        planner = ScanPlanner(NoPeek(), ScanPlanConfig(horizon=4))
+        assert planner.plan(wm, BucketCache(4), now) == []
+
+    def test_deferrals_survive_horizon_oscillation(self):
+        """A still-pending bucket bouncing in and out of the top-H (each
+        reshuffle drops the promise) keeps accumulating deferrals — a
+        drop from the committed horizon must not wipe the count — and is
+        fronted the next time it qualifies."""
+        from repro.core import SchedulerDecision
+
+        wm = WorkloadManager(_identity_range, probe_bytes=4.0)
+        wm.submit(_mk_query(0, 0.0, [5]))  # oldest pending, rank-boundary
+        for qid, b in enumerate([10, 11, 12], start=1):
+            wm.submit(_mk_query(qid, 0.1 * qid, [b] * 4))
+
+        class Scripted:
+            next: list[int] = []
+
+            def peek_topk(self, wm, cache, now, k):
+                return [
+                    SchedulerDecision(b, 0.0, False, 1) for b in self.next
+                ]
+
+        sched = Scripted()
+        planner = ScanPlanner(
+            sched, ScanPlanConfig(horizon=3, starvation_deferrals=3)
+        )
+        cache = BucketCache(4)
+        fronted = None
+        for i, cands in enumerate(
+            [[10, 5, 11], [10, 11, 12], [10, 5, 11], [10, 11, 12], [10, 5, 11]]
+        ):
+            sched.next = cands
+            plan = planner.plan(wm, cache, float(i))
+            if plan and plan[0] == 5:
+                fronted = i
+                break
+        assert fronted is not None, "oscillating oldest bucket never fronted"
+
+    def test_build_pipeline_rejects_peekless_scheduler(self):
+        """prefetch configured on a scheduler that cannot be peeked (round
+        robin) is a misconfiguration, not a silent no-op."""
+        from repro.core import RoundRobinScheduler
+
+        with pytest.raises(ValueError, match="peek_topk"):
+            build_pipeline(
+                True, RoundRobinScheduler(CostModel()), BucketCache(4), 1.0
+            )
+
+
+# ------------------------------------------------- demand-aware BucketCache
+class TestDemandAwareCache:
+    @given(
+        st.lists(st.integers(0, 15), min_size=1, max_size=200),
+        st.integers(3, 8),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_protected_bucket_never_evicted_while_protected(self, accesses, cap):
+        c = BucketCache(cap)
+        protected = {0, 1}  # within the capacity - 1 protection cap
+        c.protect(protected)
+        for b in accesses:
+            evicted = c.access(b)
+            assert not (set(evicted) & protected)
+        assert len(c) <= cap
+
+    def test_zero_demand_residents_are_preferred_victims(self):
+        c = BucketCache(2)
+        demand = {1: 5, 2: 0}
+        c.set_demand_probe(lambda b: demand.get(b, 0))
+        c.access(1)
+        c.access(2)  # LRU order: 1 (oldest), 2
+        evicted = c.access(3)
+        # plain LRU would evict 1; demand-aware eviction picks idle 2
+        assert evicted == [2]
+        assert c.contains(1)
+
+    def test_demand_fallback_is_lru_when_everyone_has_demand(self):
+        c = BucketCache(2)
+        c.set_demand_probe(lambda b: 1)
+        c.access(1)
+        c.access(2)
+        assert c.access(3) == [1]
+
+    def test_stats_split_demand_hits_from_prefetch_fills(self):
+        c = BucketCache(4)
+        assert c.insert_prefetched(7) == []
+        assert c.stats.prefetch_fills == 1
+        assert c.stats.accesses == 0  # a fill is not an access
+        c.access(7)  # first demand touch of the prefetched entry
+        assert c.stats.hits == 1 and c.stats.prefetch_hits == 1
+        assert c.stats.demand_hits == 0
+        c.access(7)  # second touch: ordinary locality
+        assert c.stats.hits == 2 and c.stats.prefetch_hits == 1
+        assert c.stats.demand_hits == 1
+
+    def test_unused_prefetch_eviction_is_counted_as_waste(self):
+        c = BucketCache(1)
+        c.insert_prefetched(1)
+        c.access(2)  # evicts the untouched prefetched fill
+        assert c.stats.prefetch_unused == 1
+
+    def test_prefetch_fill_refused_when_no_victim(self):
+        c = BucketCache(2)
+        c.access(1)
+        c.access(2)
+        c.pin(1)
+        c.protect([2])
+        assert c.insert_prefetched(3) is None  # refused, not raised
+        assert not c.contains(3)
+        assert len(c) == 2
+
+    def test_protection_capped_below_capacity(self):
+        c = BucketCache(3)
+        c.protect([1, 2, 3, 4])
+        assert len(c.protected()) == 2  # capacity - 1
+        for b in (1, 2, 3):
+            c.access(b)
+        assert c.access(4)  # a victim always exists for demand inserts
+
+
+# ------------------------------------------------------ cache edge cases
+class TestCacheEdgeCases:
+    def test_overpinned_insert_raises_instead_of_overflowing(self):
+        c = BucketCache(2)
+        c.access(1)
+        c.access(2)
+        c.pin(1)
+        c.pin(2)
+        c.pin(3)  # pinned before residency: nothing evictable on insert
+        with pytest.raises(CacheOverflowError):
+            c.access(3)
+        assert len(c) <= c.capacity  # never silently exceeds capacity
+
+    def test_pinned_insert_evicts_newcomer_not_overflow(self):
+        """Pinning everything *resident* is still survivable: the insert
+        itself is the only victim candidate (historical behavior)."""
+        c = BucketCache(1)
+        c.access(1)
+        c.pin(1)
+        c.access(2)  # 2 is evictable; 1 stays
+        assert c.contains(1) and len(c) == 1
+
+    def test_invalidate_pinned_is_a_hard_error(self):
+        c = BucketCache(2)
+        c.access(1)
+        c.pin(1)
+        with pytest.raises(ValueError):
+            c.invalidate([1])
+        assert c.contains(1)
+        c.unpin(1)
+        c.invalidate([1])
+        assert not c.contains(1)
+
+
+# ------------------------------------------------------- PrefetchPipeline
+class TestPrefetchPipeline:
+    def _trace(self, seed, n=120, buckets=30, depth=(50, 300)):
+        rng = np.random.default_rng(seed)
+        qs, t = [], 0.0
+        for qid in range(n):
+            t += float(rng.exponential(0.05))
+            b = int(rng.integers(0, buckets))
+            ks = np.full(int(rng.integers(*depth)), b, dtype=np.uint64)
+            qs.append(Query(qid, t, ks, ks))
+        return qs
+
+    def test_prefetch_overlaps_io_with_compute(self):
+        """On a T_b-dominated workload whose compute is comparable to the
+        bucket read, staging ahead must beat the reactive LRU (the I/O
+        moves off the critical path)."""
+        cost = CostModel(T_b=0.08, T_m=2e-4)
+        qs = self._trace(11)
+        off = run_policy("liferaft", qs, _identity_range, cost, alpha=0.25,
+                         cache_capacity=8)
+        on = run_policy("liferaft", qs, _identity_range, cost, alpha=0.25,
+                        cache_capacity=8, prefetch=True)
+        assert on.makespan < off.makespan
+        assert on.n_queries == off.n_queries  # same completions, faster
+
+    def test_stall_is_residual_not_full_read(self):
+        """A demanded in-flight stage pays eta - now, never a full T_b on
+        top of the staging already under way."""
+        cache = BucketCache(4)
+        sched = LifeRaftScheduler(CostModel(T_b=1.0, T_m=1e-3), alpha=0.0)
+        planner = ScanPlanner(sched, ScanPlanConfig(horizon=2))
+        pipe = PrefetchPipeline(cache, planner, 1.0, depth=2)
+        wm = WorkloadManager(_identity_range)
+        wm.submit(_mk_query(0, 0.0, [1, 2]))
+
+        class _D:
+            def __init__(self, b):
+                self.bucket_id = b
+
+        # round at t=0 services bucket 1, stages bucket 2 (eta=1.0)
+        stall0 = pipe.stage(wm, 0.0, [_D(1)])
+        assert stall0 == 0.0 and pipe.inflight == 1
+        # bucket 2 demanded at t=0.6: residual stall 0.4, and it lands
+        stall1 = pipe.stage(wm, 0.6, [_D(2)])
+        assert stall1 == pytest.approx(0.4)
+        assert cache.contains(2)
+        assert cache.stats.prefetch_fills == 1
+
+    def test_incremental_vs_oracle_identical_with_prefetch_on(self):
+        cost = CostModel(T_b=0.08, T_m=2e-4)
+        qs = self._trace(23, n=100)
+        traces = {}
+        for policy in ("liferaft", "liferaft-naive"):
+            rec = replay.TraceRecorder()
+            run_policy(policy, qs, _identity_range, cost, alpha=0.25,
+                       cache_capacity=8, normalized=True, fuse_k=2,
+                       prefetch=True, on_round=rec)
+            traces[policy] = rec.entries
+        divergence = replay.diff_traces(
+            traces["liferaft-naive"], traces["liferaft"]
+        )
+        assert not divergence, "\n".join(divergence)
+
+    def test_serving_engine_prefetch_path(self):
+        from repro.serving import AdapterSpec, LifeRaftEngine, Request, ServeConfig
+
+        rng = np.random.default_rng(5)
+        adapters = [AdapterSpec(i, 8 << 30) for i in range(8)]
+        reqs, t = [], 0.0
+        for i in range(120):
+            t += float(rng.exponential(1.0 / 150.0))
+            reqs.append(Request(i, int(rng.integers(0, 8)), t,
+                                int(rng.integers(8, 64)), 16))
+        base = LifeRaftEngine(
+            adapters, ServeConfig(policy="liferaft", alpha=0.25, fuse_k=2)
+        )
+        base.run([Request(r.request_id, r.adapter_id, r.arrival_time,
+                          r.prompt_len, r.max_new_tokens) for r in reqs])
+        eng = LifeRaftEngine(
+            adapters,
+            ServeConfig(policy="liferaft", alpha=0.25, fuse_k=2, prefetch=True),
+        )
+        out = eng.run(reqs)
+        assert out["n_completed"] == len(reqs)
+        assert eng.cache.stats.prefetch_fills > 0
+        assert eng.loop.prefetch.staged > 0
+        assert eng.clock <= base.clock  # staged adapter loads never lose
+
+    def test_crossmatch_threaded_staging_preserves_results(self):
+        """The cross-match engine stages real bucket payloads on a thread
+        pool while cost accounting stays on the virtual channel: match
+        results must be identical to the reactive run, the staged
+        payloads must be the real store reads, and the virtual clock must
+        not regress."""
+        from repro.crossmatch import (
+            CrossMatchEngine, TraceConfig, make_catalog, make_trace,
+        )
+
+        catalog = make_catalog(
+            n_objects=2_000, objects_per_bucket=100, htm_level=6, seed=17
+        )
+        trace = make_trace(catalog, TraceConfig(
+            n_queries=16, arrival_rate=2.0, objects_median=40, seed=19,
+        ))
+
+        def run(pf):
+            eng = CrossMatchEngine(
+                catalog, match_radius_rad=4e-3, fuse_k=2, cache_capacity=6,
+                prefetch=pf,
+            )
+            return eng, eng.run(trace)
+
+        e_off, r_off = run(False)
+        e_on, r_on = run(PrefetchConfig(horizon=4, depth=3))
+        try:
+            assert e_on.loop.prefetch.fills > 0
+            assert e_on.sim_clock <= e_off.sim_clock
+            assert set(r_off) == set(r_on)
+            for qid in r_off:
+                assert len(r_off[qid]) == len(r_on[qid])
+                for ma, mb in zip(r_off[qid], r_on[qid]):
+                    np.testing.assert_array_equal(ma.probe_idx, mb.probe_idx)
+                    np.testing.assert_array_equal(ma.match_obj, mb.match_obj)
+                    np.testing.assert_allclose(ma.best_dot, mb.best_dot)
+        finally:
+            e_on.loop.prefetch.close()
+
+    def test_adaptive_horizon_law_engages(self):
+        """With prefetch_horizon_max set, the ControlLoop sizes H and the
+        vector carries a nonzero horizon."""
+        from repro.core import ControlLoop
+
+        cost = CostModel(T_b=0.08, T_m=2e-4)
+        qs = self._trace(31, n=80)
+        ctl = ControlLoop(ControlConfig(
+            alpha_init=0.3, alpha_step=0.2, prefetch_horizon_init=2,
+            prefetch_horizon_max=8,
+        ))
+        rec = replay.TraceRecorder()
+        r = run_policy("liferaft", qs, _identity_range, cost,
+                       cache_capacity=8, normalized=True, control=ctl,
+                       prefetch=True, on_round=rec)
+        assert r.n_queries == len(qs)
+        assert ctl.last.horizon >= 1
+
+    def test_build_pipeline_off_is_none(self):
+        sched = LifeRaftScheduler(CostModel(), alpha=0.0)
+        assert build_pipeline(False, sched, BucketCache(4), 1.0) is None
+        pipe = build_pipeline(
+            PrefetchConfig(horizon=6, depth=3), sched, BucketCache(4), 1.0
+        )
+        assert pipe.depth == 3 and pipe.planner.cfg.horizon == 6
+
+
+# ------------------------------------------------ priced spill victim walk
+class TestPricedSpillVictims:
+    def _wm(self):
+        """Three queues, same arrival shape, very different byte weights:
+        bucket 1 oldest/heavy, 2 mid, 3 youngest/light."""
+        wm = WorkloadManager(_identity_range, probe_bytes=1.0)
+        qid = 0
+        sizes = {1: 40, 2: 10, 3: 2}
+        for i, b in enumerate([1, 2, 3]):
+            for j in range(5):
+                ks = np.full(sizes[b], b, dtype=np.uint64)
+                wm.submit(Query(qid, float(i) + 0.1 * j, ks, ks))
+                qid += 1
+        return wm
+
+    def test_default_walk_is_youngest_first_unchanged(self):
+        wm = self._wm()
+        cfg = ControlConfig(spill_budget_bytes=215.0)
+        changed = apply_spill(
+            wm, ControlVector(0.5, 1, True), cfg,
+            cost=CostModel(T_spill=0.5),
+        )
+        # legacy order: youngest (3) first, then 2
+        assert changed == [3, 2]
+
+    def test_priced_walk_evicts_lowest_relief_per_byte_first(self):
+        wm = self._wm()
+        cfg = ControlConfig(spill_budget_bytes=215.0, price_spill_victims=True)
+        cost = CostModel(T_spill=0.5)
+        qs = {q.bucket_id: q for q in wm.nonempty_queues()}
+        # bucket 2 (50 B) has lower T_spill/nbytes than bucket 3 (10 B):
+        # evicting it buys the deficit at the least future wait per byte.
+        assert unspill_price(qs[2], cost) < unspill_price(qs[3], cost)
+        changed = apply_spill(wm, ControlVector(0.5, 1, True), cfg, cost=cost)
+        assert changed[0] == 2
+        assert 1 not in changed or wm.queues[1].resident_size > 0
+
+    def test_priced_walk_unpriced_degenerates_to_youngest_first(self):
+        for cost in (None, CostModel(T_spill=0.0)):
+            wm = self._wm()
+            cfg = ControlConfig(
+                spill_budget_bytes=215.0, price_spill_victims=True
+            )
+            changed = apply_spill(
+                wm, ControlVector(0.5, 1, True), cfg, cost=cost
+            )
+            assert changed == [3, 2], cost
+
+    def test_priced_walk_never_fully_spills_oldest_queue(self):
+        wm = self._wm()
+        cfg = ControlConfig(spill_budget_bytes=0.0, price_spill_victims=True)
+        apply_spill(
+            wm, ControlVector(0.5, 1, True), cfg, cost=CostModel(T_spill=0.5)
+        )
+        q1 = wm.queues[1]
+        assert q1.resident_size > 0
+        assert wm.resident_bytes() == q1.resident_bytes

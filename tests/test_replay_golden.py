@@ -43,6 +43,18 @@ def test_paged_spill_goldens_exercise_both_directions(name):
     assert any(not e["vector"][2] and e["spill_changed"] for e in rounds)
 
 
+def test_prefetch_goldens_exercise_the_pipeline():
+    """The prefetch-on goldens must pin what they were recorded for:
+    residual-stall rounds (a demanded bucket caught mid-stage), and — on
+    the simulator scenario — §6 rounds under the PRICED victim walk, so
+    drift in the staging protocol or the pricing would move the trace."""
+    sim = replay.load_trace(replay.GOLDEN_DIR / "sim_prefetch.json")
+    assert any("stall" in e for e in sim)
+    assert any(e["vector"][2] and e["spill_changed"] for e in sim)
+    serving = replay.load_trace(replay.GOLDEN_DIR / "serving_prefetch.json")
+    assert any("stall" in e for e in serving)
+
+
 def test_diff_traces_reports_divergence():
     """The harness itself must catch a moved decision, not just agree."""
     base = replay.SCENARIOS["sim_raw_fused"]()
