@@ -27,6 +27,7 @@ from .metrics import (
     PAPER_COST_MODEL,
     CostModel,
     aged_workload_throughput,
+    dispatch_stats,
     per_tenant_latency,
     workload_throughput,
 )
@@ -69,6 +70,7 @@ __all__ = [
     "PAPER_COST_MODEL",
     "CostModel",
     "aged_workload_throughput",
+    "dispatch_stats",
     "per_tenant_latency",
     "workload_throughput",
     "AlphaController",

@@ -62,6 +62,7 @@ class Partitioner:
         starts = np.arange(self.n_buckets) * self.objects_per_bucket
         self._start_idx = starts
         self._boundary_keys = self.sorted_keys[starts]
+        self._layout_pos: dict[int, float] = {}  # layout_position cache
         self.specs: list[BucketSpec] = []
         for b in range(self.n_buckets):
             lo = int(self._boundary_keys[b])
@@ -100,6 +101,21 @@ class Partitioner:
         i0 = self._start_idx[bucket_id]
         i1 = min(len(self.sorted_keys), i0 + self.objects_per_bucket)
         return self.order[i0:i1]
+
+    def layout_position(self, bucket_id: int) -> float:
+        """Physical file position of the bucket: the mean *original-table*
+        row address of its objects (its SFC run gathered back to where the
+        rows actually sit).  The table was written in ingest order, not
+        SFC order, so bucket id (SFC run) and file position are different
+        axes — an elevator sweep that seeks by id zig-zags across the
+        file.  This is the ``layout_of`` the prefetch planner's sweep
+        should order by (ScanPlanConfig.layout_of)."""
+        pos = self._layout_pos.get(bucket_id)
+        if pos is None:
+            idx = self.object_slice(bucket_id)
+            pos = float(idx.mean()) if len(idx) else float(bucket_id)
+            self._layout_pos[bucket_id] = pos
+        return pos
 
 
 class BucketStore:

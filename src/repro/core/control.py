@@ -71,6 +71,7 @@ class ControlVector:
     fuse_k: int  # buckets serviced per fused dispatch, >= 1
     spill: bool  # engage §6 workload overflow this round
     horizon: int = 0  # prefetch lookahead H (0: law disabled, use static H)
+    share_width: int = 0  # queries per shared-plan call (0: law disabled)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +94,8 @@ class Telemetry:
     prefetch_stall_frac: float = 0.0  # last round's stall share of round time
     prefetch_wasted: int = 0  # prefetched fills evicted untouched last round
     prefetch_inflight: int = 0  # stages in flight on the staging channel
+    # -- shared-plan signals (zero without a shared executor) -----------------
+    shared_occupancy: float = 0.0  # queries / (chunks * share_width), [0, 1]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +116,11 @@ class ControlConfig:
     fuse_k_max: int = 8
     occ_low: float = 0.5  # below: dispatches underfull -> fuse more
     occ_high: float = 0.95  # above: dispatches saturated -> back off
+    # -- share_width (shared query plans) -------------------------------------
+    share_width_init: int = 8
+    share_width_max: int = 0  # 0 disables the law (static width applies)
+    share_occ_low: float = 0.5  # below: mostly padding -> narrow the plan
+    share_occ_high: float = 0.95  # above: chunks saturate width -> widen
     # -- prefetch horizon H ---------------------------------------------------
     prefetch_horizon_init: int = 4
     prefetch_horizon_max: int = 0  # 0 disables the law (static H applies)
@@ -125,10 +133,12 @@ class ControlConfig:
     spill_low_water: float = 0.8  # disengage below this fraction
     # Price the *spill* victim walk by each queue's T_spill
     # wait-cost-per-byte (lowest relief-per-byte evicted first), mirroring
-    # the unspill-grant pricing.  Off by default so recorded decision
-    # traces keep replaying bit-identically; unpriced walks (no cost model
-    # or T_spill == 0) are youngest-first either way.
-    price_spill_victims: bool = False
+    # the unspill-grant pricing.  On by default since the PR 6 golden
+    # waiver (see docs/adaptive.md): the goldens of byte-mode scenarios
+    # with T_spill > 0 were deliberately re-recorded under the priced
+    # walk.  Unpriced walks (no cost model or T_spill == 0) are
+    # youngest-first either way; set False to replay pre-waiver traces.
+    price_spill_victims: bool = True
     # Legacy unspill: page each spilled queue's whole suffix back in one
     # shot instead of the paged oldest-first protocol.  Wholesale paging
     # is all-or-nothing per queue: a big queue either blocks the walk or
@@ -155,6 +165,7 @@ class ControlLoop:
         self.estimator = estimator or SaturationEstimator(config.halflife_s)
         self._alpha = min(max(config.alpha_init, config.alpha_min), config.alpha_max)
         self._fuse_k = max(1, int(config.fuse_k_init))
+        self._share_width = max(1, int(config.share_width_init))
         self._horizon = max(1, int(config.prefetch_horizon_init))
         self._depth_ewma = 0.0
         self._spilling = False
@@ -176,6 +187,7 @@ class ControlLoop:
             fuse_k=self._update_fuse_k(tel),
             spill=self._update_spill(tel),
             horizon=self._update_horizon(tel),
+            share_width=self._update_share_width(tel),
         )
         self.last = vec
         self.rounds += 1
@@ -224,6 +236,29 @@ class ControlLoop:
         k = max(1, min(k, cfg.fuse_k_max, max(tel.n_queues, 1)))
         self._fuse_k = k
         return k
+
+    # -- share_width law ---------------------------------------------------------
+    def _update_share_width(self, tel: Telemetry) -> int:
+        """AIMD ceiling on queries per shared-plan device call, bounding
+        the pow2 compile shapes the shared kernel can reach.  Polarity is
+        the *reverse* of fuse_k's: high shared occupancy means demand
+        saturates the current width (the executor is splitting query
+        batches into extra chunks) — widen to cut chunk count; low
+        occupancy means the last chunk was mostly padding — narrow, so
+        compile shapes shrink back.  Disabled (returns 0) unless
+        ``share_width_max`` is set, keeping vectors inert for
+        configurations without a shared executor."""
+        cfg = self.cfg
+        if cfg.share_width_max <= 0:
+            return 0
+        w = self._share_width
+        if tel.shared_occupancy > cfg.share_occ_high:
+            w += 1
+        elif tel.shared_occupancy < cfg.share_occ_low and w > 1:
+            w -= 1
+        w = max(1, min(w, cfg.share_width_max))
+        self._share_width = w
+        return w
 
     # -- prefetch-horizon law -----------------------------------------------------
     def _update_horizon(self, tel: Telemetry) -> int:

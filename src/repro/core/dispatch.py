@@ -101,13 +101,18 @@ class DispatchLoop:
         self.batch_capacity = batch_capacity  # per-bucket batch cap (serving)
         self.clock = clock
         self.batches = 0  # buckets serviced
-        self.dispatches = 0  # device calls / scheduling rounds
+        self.dispatches = 0  # scheduling rounds
+        self.device_dispatches = 0  # device calls issued by the executor
         self.busy = 0.0  # total execute() cost
         self.last_vector: Optional[ControlVector] = None
         self.last_tenant_vectors: Optional[dict[str, ControlVector]] = None
         self.on_round = on_round  # decision-log tap (tests/replay.py)
         self._occupancy = 0.0  # last round's batch fill fraction
         self._occ_by_tenant: dict[str, float] = {}
+        self._shared_occ = 0.0  # last shared-plan round's query fill
+        self._shared_occ_sum = 0.0  # occupancy-weighted shared-call total
+        self._shared_calls = 0  # shared-plan device calls (occupancy known)
+        self._dev_noted = False  # executor reported its own device calls
         self.prefetch = prefetch
         self._stall_frac = 0.0  # last round's stall share of round time
         self._wasted_last = 0  # prefetched fills evicted untouched last round
@@ -118,6 +123,31 @@ class DispatchLoop:
             cache.set_demand_probe(
                 lambda b: q.size if (q := wm.queues.get(b)) else 0
             )
+
+    # -- executor-side sensor ----------------------------------------------------
+    def note_device_dispatches(
+        self, n: int, shared_occupancy: Optional[float] = None
+    ) -> None:
+        """Executor callback: the round just executed issued ``n`` device
+        calls (a shared plan issues fewer than one per bucket or per
+        predicate class).  ``shared_occupancy`` is the query fill of those
+        calls — queries / (chunks * share_width) — and feeds the
+        share_width AIMD law via telemetry.  Executors that never call
+        this get the legacy accounting of one device call per round."""
+        self.device_dispatches += max(0, int(n))
+        self._dev_noted = True
+        if shared_occupancy is not None:
+            self._shared_occ = min(1.0, max(0.0, shared_occupancy))
+            self._shared_occ_sum += self._shared_occ * max(0, int(n))
+            self._shared_calls += max(0, int(n))
+
+    @property
+    def shared_batch_occupancy(self) -> float:
+        """Mean query fill across all shared-plan device calls (0.0 when
+        the executor never reported one)."""
+        if self._shared_calls <= 0:
+            return 0.0
+        return self._shared_occ_sum / self._shared_calls
 
     # -- intake-side sensor -----------------------------------------------------
     def observe_arrival(self, t: float) -> None:
@@ -188,6 +218,9 @@ class DispatchLoop:
                 prefetch_stall_frac=self._stall_frac,
                 prefetch_wasted=self._wasted_last,
                 prefetch_inflight=inflight,
+                # Shared-plan fill is machine-global like the pipeline
+                # signals: one shared executor, every slice sees it.
+                shared_occupancy=self._shared_occ,
             )
             for t, a in agg.items()
         }
@@ -223,6 +256,7 @@ class DispatchLoop:
             return None
 
         stall = 0.0
+        self._dev_noted = False
         if self.prefetch is not None:
             # Between select and execute: harvest due stages, pay residual
             # stall for demanded in-flight buckets (the executor then sees
@@ -248,6 +282,9 @@ class DispatchLoop:
                 self.wm.complete_bucket(d.bucket_id, self.clock)
         self.batches += len(decisions)
         self.dispatches += 1
+        if not self._dev_noted:
+            # Legacy executors issue exactly one device call per round.
+            self.device_dispatches += 1
         self._occupancy = self._measure_occupancy(decisions)
         if self._plane is not None:
             self._measure_tenant_occupancy(decisions)
@@ -297,6 +334,7 @@ class DispatchLoop:
             fuse_k=max((v.fuse_k for v in vecs.values()), default=1),
             spill=any(v.spill for v in vecs.values()),
             horizon=max((v.horizon for v in vecs.values()), default=0),
+            share_width=max((v.share_width for v in vecs.values()), default=0),
         )
         return merged, changed, dict(vecs)
 

@@ -35,6 +35,7 @@ __all__ = [
     "workload_throughput",
     "aged_workload_throughput",
     "per_tenant_latency",
+    "dispatch_stats",
     "PAPER_COST_MODEL",
 ]
 
@@ -148,6 +149,21 @@ def aged_workload_throughput(
             raise ValueError(f"alpha[{b}] must be in [0,1], got {a}")
         out[b] = ut[b] * (1.0 - a) + age[b] * a
     return out
+
+
+def dispatch_stats(loop) -> dict[str, float]:
+    """Device-dispatch rollup for a DispatchLoop — the shared-plan win
+    surface: ``device_dispatches`` counts actual kernel launches (a shared
+    plan issues fewer than one per bucket or per predicate class) and
+    ``shared_batch_occupancy`` the mean query fill of the shared calls."""
+    return {
+        "batches": int(loop.batches),
+        "dispatches": int(loop.dispatches),
+        "device_dispatches": int(getattr(loop, "device_dispatches", 0)),
+        "shared_batch_occupancy": float(
+            getattr(loop, "shared_batch_occupancy", 0.0)
+        ),
+    }
 
 
 def per_tenant_latency(

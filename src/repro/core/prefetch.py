@@ -55,7 +55,9 @@ class PrefetchConfig:
     the serial channel (2 == classic double buffering); ``t_stage``
     overrides the virtual seconds per staged bucket (default: the cost
     model's ``T_b``); ``workers`` sizes the thread pool when a real
-    ``fetch`` is wired in.
+    ``fetch`` is wired in.  ``layout_of`` maps bucket id -> physical file
+    position for the planner's elevator sweep (default: the id itself,
+    i.e. logical order == physical order).
     """
 
     horizon: int = 4
@@ -63,6 +65,7 @@ class PrefetchConfig:
     starvation_deferrals: int = 3
     t_stage: Optional[float] = None
     workers: int = 2
+    layout_of: Optional[Callable[[int], float]] = None
 
 
 @dataclasses.dataclass
@@ -226,6 +229,7 @@ def build_pipeline(
     default_t_stage: Union[float, Callable[[int], float]],
     *,
     fetch: Optional[Callable[[int], object]] = None,
+    layout_of: Optional[Callable[[int], float]] = None,
 ) -> Optional[PrefetchPipeline]:
     """Coerce an engine's ``prefetch=`` config value — ``False`` (off, the
     default everywhere), ``True`` (defaults), or a ``PrefetchConfig`` —
@@ -250,6 +254,9 @@ def build_pipeline(
         ScanPlanConfig(
             horizon=cfg.horizon,
             starvation_deferrals=cfg.starvation_deferrals,
+            # A config-level layout wins; the engine's catalog-derived
+            # layout (caller kwarg) is the default sweep geometry.
+            layout_of=cfg.layout_of or layout_of,
         ),
     )
     t_stage = cfg.t_stage if cfg.t_stage is not None else default_t_stage

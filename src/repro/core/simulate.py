@@ -48,6 +48,8 @@ class SimResult:
     n_batches: int
     indexed_batches: int = 0
     n_dispatches: int = 0  # scheduling rounds (== n_batches unless fused)
+    device_dispatches: int = 0  # device calls (< rounds under shared plans)
+    shared_batch_occupancy: float = 0.0  # mean query fill of shared calls
     # per tenant class: {tenant: {n, p50/p95/mean_response, throughput}}
     per_tenant: dict = dataclasses.field(default_factory=dict)
     # prefetch pipeline rollup (empty without one): staged/fills/refused/
@@ -68,6 +70,8 @@ def _collect(
     total_objects: int,
     indexed_batches: int = 0,
     n_dispatches: int | None = None,
+    device_dispatches: int | None = None,
+    shared_batch_occupancy: float = 0.0,
 ) -> SimResult:
     responses = wm.response_times()
     resp = np.array(sorted(responses.values()), dtype=np.float64)
@@ -92,6 +96,12 @@ def _collect(
         n_batches=n_batches,
         indexed_batches=indexed_batches,
         n_dispatches=n_batches if n_dispatches is None else n_dispatches,
+        device_dispatches=(
+            (n_batches if n_dispatches is None else n_dispatches)
+            if device_dispatches is None
+            else device_dispatches
+        ),
+        shared_batch_occupancy=shared_batch_occupancy,
         per_tenant=per_tenant,
     )
 
@@ -109,6 +119,8 @@ def simulate_batched(
     control: Optional[ControlLoop | TenantControlPlane] = None,
     on_round=None,
     prefetch: bool | PrefetchConfig = False,
+    shared_plan: bool = False,
+    share_width: int = 8,
 ) -> SimResult:
     """Batched policies (LifeRaft any alpha, RR): one bucket batch at a time.
 
@@ -132,6 +144,12 @@ def simulate_batched(
     and rounds pay only the residual stall for demanded in-flight buckets
     (``core/prefetch.py``; H is ControlLoop-sized when
     ``prefetch_horizon_max`` is set).
+    ``shared_plan`` (off by default) models shared query plans: the
+    round's pending queries evaluate in ceil(Q / share_width) masked
+    device calls instead of one per bucket (``share_width`` is the static
+    ceiling; a ControlLoop with ``share_width_max`` set resizes it per
+    round).  Costs and decisions are unchanged — the simulator tracks
+    only the device-dispatch/occupancy accounting.
     """
     queries = sorted(queries, key=lambda q: q.arrival_time)
     wm = WorkloadManager(
@@ -174,6 +192,28 @@ def simulate_batched(
                 cache.access(decision.bucket_id)
             round_cost += step
             total_objects += decision.queue_size
+        if shared_plan:
+            # Shared-plan accounting: the round's distinct pending queries
+            # share ceil(Q / width) masked calls (vs. the legacy one call
+            # per round), and the chunk fill feeds the share_width law.
+            width = max(
+                1, getattr(vector, "share_width", 0) or share_width
+            )
+            qids = {
+                u.query_id
+                for d in decisions
+                for u in (
+                    wm.queue(d.bucket_id).units
+                    + wm.queue(d.bucket_id).spilled_units
+                )
+            }
+            n_chunks = max(1, -(-len(qids) // width))
+            loop.note_device_dispatches(
+                n_chunks,
+                shared_occupancy=len(qids) / (n_chunks * width)
+                if qids
+                else 0.0,
+            )
         return round_cost
 
     loop = DispatchLoop(
@@ -215,9 +255,12 @@ def simulate_batched(
         name = f"{name}+ctl"
     if loop.prefetch is not None:
         name = f"{name}+pf"
+    if shared_plan:
+        name = f"{name}+sp"
     result = _collect(
         name, wm, cache, loop.clock, loop.busy, loop.batches, total_objects,
-        indexed_batches, loop.dispatches,
+        indexed_batches, loop.dispatches, loop.device_dispatches,
+        loop.shared_batch_occupancy,
     )
     if loop.prefetch is not None:
         result.prefetch = prefetch_stats(loop.prefetch, cache)
@@ -272,6 +315,8 @@ def run_policy(
     control: Optional[ControlLoop] = None,
     on_round=None,
     prefetch: bool | PrefetchConfig = False,
+    shared_plan: bool = False,
+    share_width: int = 8,
 ) -> SimResult:
     """Convenience dispatcher used by benchmarks:
     'noshare'|'rr'|'liferaft'|'liferaft-naive'."""
@@ -291,5 +336,6 @@ def run_policy(
     return simulate_batched(
         queries, bucket_of_range, sched, cost, cache_capacity, hybrid,
         bucket_of_keys=bucket_of_keys, fuse_k=fuse_k, control=control,
-        on_round=on_round, prefetch=prefetch,
+        on_round=on_round, prefetch=prefetch, shared_plan=shared_plan,
+        share_width=share_width,
     )

@@ -32,7 +32,7 @@ from ..core.cache import BucketCache
 from ..core.control import ControlLoop, TenantControlPlane
 from ..core.dispatch import DispatchLoop
 from ..core.hybrid import HybridPlanner
-from ..core.metrics import CostModel, per_tenant_latency
+from ..core.metrics import CostModel, dispatch_stats, per_tenant_latency
 from ..core.prefetch import PrefetchConfig, build_pipeline
 from ..core.scheduler import BucketScheduler, LifeRaftScheduler, SchedulerDecision
 from ..core.workload import Query, WorkloadManager
@@ -66,6 +66,8 @@ class CrossMatchEngine:
         fuse_k: int = 1,
         control: Optional[ControlLoop | TenantControlPlane] = None,
         prefetch: bool | PrefetchConfig = False,
+        shared_plan: bool = False,
+        share_width: int = 8,
     ) -> None:
         self.catalog = catalog
         self.cost_model = cost_model or CostModel()
@@ -83,6 +85,14 @@ class CrossMatchEngine:
         self.use_pallas = use_pallas
         self.mag_cut = mag_cut
         self.fuse_k = max(1, int(fuse_k))
+        # Shared query plans: evaluate the whole query batch's predicates
+        # in ONE masked device call (per share_width-sized chunk) instead
+        # of one dispatch per predicate class.  Off by default; the
+        # per-query predicate surface is meta['radius'] / meta['mag_cut'].
+        self.shared_plan = bool(shared_plan)
+        self.share_width = max(1, int(share_width))
+        self._pred_cache: dict[int, tuple[float, float]] = {}
+        self._has_query_predicates = False
         self.results: dict[int, list[MatchResult]] = {}
         self.max_probe_batch = 0  # largest probe batch sent to the device
         # The shared scheduling inner loop; the controller (when given) is
@@ -96,6 +106,9 @@ class CrossMatchEngine:
             prefetch=build_pipeline(
                 prefetch, self.scheduler, self.cache, self.cost_model.T_b,
                 fetch=self.catalog.store.read,
+                # Elevator sweep in *file* order: bucket id is an SFC run,
+                # not a physical address (Partitioner.layout_position).
+                layout_of=self.catalog.partitioner.layout_position,
             ),
         )
 
@@ -121,6 +134,36 @@ class CrossMatchEngine:
         self.wm.submit(query)
         self.loop.observe_arrival(query.arrival_time)
         self.results.setdefault(query.query_id, [])
+        meta = query.meta or {}
+        if "radius" in meta or "mag_cut" in meta:
+            self._has_query_predicates = True
+
+    # -- per-query predicates -----------------------------------------------------
+    def _pred_of(self, query_id: int) -> tuple[float, float]:
+        """(cos threshold, mag cut) for one query: its own
+        meta['radius'] / meta['mag_cut'] when present, the engine-wide
+        defaults otherwise."""
+        pred = self._pred_cache.get(query_id)
+        if pred is None:
+            meta = self.wm.queries[query_id].meta or {}
+            thr = (
+                float(np.cos(float(meta["radius"])))
+                if "radius" in meta
+                else self.cos_thr
+            )
+            pred = (thr, float(meta.get("mag_cut", self.mag_cut)))
+            self._pred_cache[query_id] = pred
+        return pred
+
+    def _pred_rows(self, owners: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Per-probe-row (cos threshold, mag cut) vectors from the rows'
+        owning queries — the host-side gather that turns per-query
+        predicates into the shared kernel's threshold operand."""
+        if owners.size == 0:
+            return np.empty(0, np.float32), np.empty(0, np.float64)
+        uniq, inv = np.unique(owners, return_inverse=True)
+        preds = np.array([self._pred_of(int(qid)) for qid in uniq], np.float64)
+        return preds[inv, 0].astype(np.float32), preds[inv, 1]
 
     # -- per-bucket plumbing ---------------------------------------------------
     def _plan_and_fetch(self, decision: SchedulerDecision):
@@ -165,6 +208,13 @@ class CrossMatchEngine:
         # Servicing evaluates the whole queue — the spilled suffix is paged
         # back in for the pass (T_spill already charged in the cost).
         units = q.units + q.spilled_units
+        if not units:  # zero-query bucket (public execute_shared callers)
+            return (
+                [],
+                np.empty((0, 3), np.float64),
+                np.empty(0, np.int64),
+                np.empty(0, np.int64),
+            )
         probe_pos = np.concatenate(
             [
                 self.wm.queries[u.query_id].payload["positions"][u.object_idx]
@@ -179,15 +229,17 @@ class CrossMatchEngine:
 
     def _route(
         self, bucket_id, units, owners, probe_local, best_idx, best_dot, n_cand,
-        payload,
+        payload, mag_cut_row=None,
     ) -> None:
         matched = n_cand > 0
         # Per-query predicate on the joined tuples (paper: "query specific
         # predicates are applied on the output tuples that succeed").
+        # ``mag_cut_row`` carries each row's owning query's own cut when
+        # queries have heterogeneous predicates.
         mags = np.asarray(payload["mags"])[
             np.clip(best_idx, 0, len(payload["mags"]) - 1)
         ]
-        matched &= mags <= self.mag_cut
+        matched &= mags <= (self.mag_cut if mag_cut_row is None else mag_cut_row)
         global_rows = self.catalog.partitioner.object_slice(bucket_id)
         for u in units:
             sel = (owners == u.query_id) & matched
@@ -211,8 +263,19 @@ class CrossMatchEngine:
         return None if outcome is None else outcome.decisions[0].bucket_id
 
     def _execute(self, decisions, vector) -> float:
-        """DispatchLoop executor: the batched/fused device call + routing.
-        Returns the round's wall-clock cost."""
+        """DispatchLoop executor: route the round to the shared-plan path,
+        the per-predicate-class path (heterogeneous predicates without a
+        shared plan), or the historical batched/fused path.  Returns the
+        round's wall-clock cost."""
+        if self.shared_plan:
+            return self.execute_shared(decisions, vector)
+        if self._has_query_predicates:
+            return self._execute_per_predicate(decisions)
+        return self._execute_batched(decisions)
+
+    def _execute_batched(self, decisions) -> float:
+        """The historical homogeneous-predicate path: one device call per
+        round (single bucket, or the fuse_k segment-masked fused call)."""
         from ..kernels.crossmatch import ops as cm_ops
 
         total_cost = 0.0
@@ -283,6 +346,170 @@ class CrossMatchEngine:
 
         return total_cost
 
+    def _execute_per_predicate(self, decisions) -> float:
+        """Per-predicate-class baseline: queries carry their own radii /
+        mag cuts, so the static-``cos_thr`` kernel needs one device call
+        per (bucket, distinct threshold) pair — the dispatch storm the
+        shared plan collapses.  Kept as the off-path so ``shared_plan``
+        stays a pure performance switch with bit-equal results."""
+        from ..kernels.crossmatch import ops as cm_ops
+
+        total_cost = 0.0
+        n_calls = 0
+        for decision in decisions:
+            b = decision.bucket_id
+            _, payload, cost = self._plan_and_fetch(decision)
+            total_cost += cost
+            units, probe_pos, owners, probe_local = self._gather_probes(b)
+            self.max_probe_batch = max(self.max_probe_batch, len(probe_pos))
+            pos = np.asarray(payload["positions"], dtype=np.float32)
+            probes32 = probe_pos.astype(np.float32)
+            thr_row, mag_row = self._pred_rows(owners)
+            best_idx = np.zeros(len(owners), np.int64)
+            best_dot = np.zeros(len(owners), np.float32)
+            n_cand = np.zeros(len(owners), np.int64)
+            for thr in np.unique(thr_row):
+                sel = thr_row == thr
+                bi, bd, nc = cm_ops.crossmatch(
+                    pos, probes32[sel], float(thr), use_pallas=self.use_pallas
+                )
+                best_idx[sel] = np.asarray(bi)
+                best_dot[sel] = np.asarray(bd)
+                n_cand[sel] = np.asarray(nc)
+                n_calls += 1
+            self._route(
+                b, units, owners, probe_local, best_idx, best_dot, n_cand,
+                payload, mag_cut_row=mag_row,
+            )
+        self.loop.note_device_dispatches(n_calls)
+        return total_cost
+
+    def execute_shared(self, bucket_group, vector=None) -> float:
+        """Shared-plan executor: ONE masked device call (per share_width
+        chunk) for the whole bucket group x query batch.
+
+        ``bucket_group`` is the round's SchedulerDecisions (bare bucket ids
+        are accepted and looked up).  All pending queries' predicates are
+        gathered into per-probe-row threshold/mag-cut vectors and the join
+        runs through ``crossmatch_shared`` — the (queries x objects) mask —
+        so k buckets and Q predicate classes cost ceil(Q / share_width)
+        dispatches instead of k*Q.  The hybrid planner's group plan is the
+        third break-even axis: members it sends down the indexed path keep
+        private per-predicate calls (tiny batches don't pay the shared
+        scan), the scan members share the masked kernel.
+        """
+        from ..kernels.crossmatch import ops as cm_ops
+
+        decisions = [
+            d
+            if hasattr(d, "bucket_id")
+            else SchedulerDecision(
+                bucket_id=int(d),
+                score=0.0,
+                in_cache=self.cache.contains(int(d)),
+                queue_size=self.wm.queue(int(d)).size,
+            )
+            for d in bucket_group
+        ]
+        width = getattr(vector, "share_width", 0) or self.share_width
+        total_cost = 0.0
+        n_calls = 0
+
+        # Group plan (third axis): members that still prefer indexed
+        # probes peel off to their own calls; the rest share one plan.
+        if self.hybrid is not None and hasattr(self.hybrid, "plan_group"):
+            plans = self.hybrid.plan_group(
+                [
+                    (d.queue_size, self.cache.contains(d.bucket_id))
+                    for d in decisions
+                ]
+            )
+        else:
+            plans = [None] * len(decisions)
+
+        shared, indexed = [], []
+        for decision, plan in zip(decisions, plans):
+            if plan is not None and plan.strategy == "indexed":
+                indexed.append(decision)
+            else:
+                shared.append(decision)
+        if indexed:
+            total_cost += self._execute_per_predicate(indexed)
+
+        if not shared:
+            return total_cost
+
+        per_bucket = []
+        bucket_parts, probe_parts, bseg, pseg = [], [], [], []
+        row_off = 0
+        for s, decision in enumerate(shared):
+            b = decision.bucket_id
+            _, payload, cost = self._plan_and_fetch(decision)
+            total_cost += cost
+            units, probe_pos, owners, probe_local = self._gather_probes(b)
+            pos = np.asarray(payload["positions"], dtype=np.float32)
+            bucket_parts.append(pos)
+            probe_parts.append(probe_pos.astype(np.float32))
+            bseg.append(np.full(len(pos), s, np.int32))
+            pseg.append(np.full(len(probe_pos), s, np.int32))
+            per_bucket.append(
+                (b, payload, units, owners, probe_local, row_off,
+                 len(probe_pos))
+            )
+            row_off += len(pos)
+        bucket_cat = np.concatenate(bucket_parts)
+        probes_cat = np.concatenate(probe_parts)
+        bseg_cat = np.concatenate(bseg)
+        pseg_cat = np.concatenate(pseg)
+        owners_cat = np.concatenate([pb[3] for pb in per_bucket])
+        self.max_probe_batch = max(self.max_probe_batch, len(probes_cat))
+        thr_row, mag_row = self._pred_rows(owners_cat)
+
+        # Chunk the query batch by share_width (the AIMD-bounded compile
+        # ceiling): each chunk's probe rows go through one shared call
+        # against the same concatenated bucket payload, and outputs are
+        # scattered back into full-length arrays so routing below is
+        # order-identical to the fused path.
+        qids = list(dict.fromkeys(owners_cat.tolist()))  # first-appearance
+        best_idx = np.zeros(len(owners_cat), np.int64)
+        best_dot = np.zeros(len(owners_cat), np.float32)
+        n_cand = np.zeros(len(owners_cat), np.int64)
+        chunks = [qids[i : i + width] for i in range(0, len(qids), width)] or [[]]
+        for chunk in chunks:
+            rows = np.isin(owners_cat, chunk)
+            if not rows.any():
+                continue
+            bi, bd, nc = cm_ops.crossmatch_shared(
+                bucket_cat,
+                probes_cat[rows],
+                bseg_cat,
+                pseg_cat[rows],
+                thr_row[rows],
+                use_pallas=self.use_pallas,
+            )
+            best_idx[rows] = np.asarray(bi)
+            best_dot[rows] = np.asarray(bd)
+            n_cand[rows] = np.asarray(nc)
+            n_calls += 1
+        occupancy = (
+            len(qids) / (len(chunks) * width) if qids and chunks else 0.0
+        )
+        self.loop.note_device_dispatches(n_calls, shared_occupancy=occupancy)
+
+        p_off = 0
+        for b, payload, units, owners, probe_local, row_off, n_p in per_bucket:
+            sl = slice(p_off, p_off + n_p)
+            p_off += n_p
+            local_idx = np.clip(
+                best_idx[sl] - row_off, 0, len(payload["mags"]) - 1
+            )
+            self._route(
+                b, units, owners, probe_local,
+                local_idx, best_dot[sl], n_cand[sl], payload,
+                mag_cut_row=mag_row[sl],
+            )
+        return total_cost
+
     # -- drive a whole trace -------------------------------------------------------
     def run(self, queries: Sequence[Query]) -> dict[int, list[MatchResult]]:
         """Arrival-ordered replay: admit, then drain between arrivals."""
@@ -304,10 +531,13 @@ class CrossMatchEngine:
     def summary(self) -> dict:
         rt = self.wm.response_times()
         tenants = {q.tenant for q in self.wm.queries.values()}
+        dstats = dispatch_stats(self.loop)
         return {
             "n_queries": len(rt),
             "n_batches": self.batches,
             "n_dispatches": self.dispatches,
+            "device_dispatches": dstats["device_dispatches"],
+            "shared_batch_occupancy": dstats["shared_batch_occupancy"],
             "mean_response": float(np.mean(list(rt.values()))) if rt else 0.0,
             "cache_hit_rate": self.cache.stats.hit_rate,
             "makespan": self.sim_clock,

@@ -22,7 +22,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["crossmatch_pallas", "crossmatch_fused_pallas", "COORD_PAD", "PAD_SEG"]
+__all__ = [
+    "crossmatch_pallas",
+    "crossmatch_fused_pallas",
+    "crossmatch_shared_pallas",
+    "COORD_PAD",
+    "PAD_SEG",
+]
 
 COORD_PAD = 8  # zero-padded coordinate dimension (MXU K alignment)
 _NEG = -2.0  # dots lie in [-1, 1]
@@ -154,6 +160,88 @@ def _fused_kernel(
 
     overlap = (jnp.min(bs) <= jnp.max(ps)) & (jnp.max(bs) >= jnp.min(ps))
     pl.when(overlap)(_body)
+
+
+def _shared_kernel(
+    bucket_ref, probe_ref, bseg_ref, pseg_ref, thr_ref, idx_ref, dot_ref, cnt_ref,
+    *, bn
+):
+    """Shared-plan tile: the fused segment mask plus per-probe thresholds.
+
+    The query axis is fused into the kernel: each probe row carries its own
+    query's cos threshold in ``thr_ref``, so a batch of queries with
+    heterogeneous predicates — which the static-``cos_thr`` kernels would
+    split into one dispatch (and one compile) per predicate class — runs as
+    ONE masked device call.  The (queries x objects) predicate mask is the
+    segment mask composed with the per-row threshold compare inside
+    ``_accumulate``.  Same block-diagonal tile skip as the fused kernel.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        dot_ref[...] = jnp.full_like(dot_ref, jnp.float32(_NEG))
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    ps = pseg_ref[...]  # (bm,) f32 segment ids, ascending
+    bs = bseg_ref[...]  # (bn,) f32 segment ids, ascending
+
+    def _body():
+        p = probe_ref[...]
+        b = bucket_ref[...]
+        dots = jax.lax.dot_general(
+            p, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bm, bn)
+        same = ps[:, None] == bs[None, :]
+        dots = jnp.where(same, dots, jnp.float32(_NEG))
+        # Per-row thresholds broadcast against the (bm, bn) dots tile.
+        _accumulate(dots, j, bn, thr_ref[...][:, None], idx_ref, dot_ref, cnt_ref)
+
+    overlap = (jnp.min(bs) <= jnp.max(ps)) & (jnp.max(bs) >= jnp.min(ps))
+    pl.when(overlap)(_body)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def crossmatch_shared_pallas(
+    bucket: jnp.ndarray,  # (N, COORD_PAD) f32, N % bn == 0, seg-sorted
+    probes: jnp.ndarray,  # (M, COORD_PAD) f32, M % bm == 0, seg-sorted
+    bucket_seg: jnp.ndarray,  # (N,) f32 segment id per bucket row
+    probe_seg: jnp.ndarray,  # (M,) f32 segment id per probe row
+    probe_thr: jnp.ndarray,  # (M,) f32 per-probe cos threshold (traced!)
+    bm: int = 128,
+    bn: int = 512,
+    interpret: bool = True,
+):
+    m, kp = probes.shape
+    n, kb = bucket.shape
+    assert kp == COORD_PAD and kb == COORD_PAD, (kp, kb)
+    assert m % bm == 0 and n % bn == 0, (m, bm, n, bn)
+    grid = (m // bm, n // bn)
+    kern = functools.partial(_shared_kernel, bn=bn)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, COORD_PAD), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, COORD_PAD), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.int32),  # best_idx (concat rows)
+            jax.ShapeDtypeStruct((m,), jnp.float32),  # best_dot
+            jax.ShapeDtypeStruct((m,), jnp.int32),  # n_cand
+        ],
+        interpret=interpret,
+    )(bucket, probes, bucket_seg, probe_seg, probe_thr)
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("cos_thr", "bm", "bn", "interpret"))

@@ -32,10 +32,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import COORD_PAD, PAD_SEG, crossmatch_fused_pallas, crossmatch_pallas
-from .ref import crossmatch_fused_ref, crossmatch_ref
+from .kernel import (
+    COORD_PAD,
+    PAD_SEG,
+    crossmatch_fused_pallas,
+    crossmatch_pallas,
+    crossmatch_shared_pallas,
+)
+from .ref import crossmatch_fused_ref, crossmatch_ref, crossmatch_shared_ref
 
-__all__ = ["crossmatch", "crossmatch_fused", "jit_cache_size"]
+__all__ = ["crossmatch", "crossmatch_fused", "crossmatch_shared", "jit_cache_size"]
+
+_PAD_THR = 2.0  # threshold for padded probe rows: above any dot, passes never
 
 _MARKER_COL = 3  # first zero-padded coordinate column; see module docstring
 _MIN_SHAPE = 8  # floor for power-of-two shape buckets
@@ -137,9 +145,14 @@ def crossmatch(
 
 
 def jit_cache_size() -> int:
-    """Number of shapes the single-bucket core has compiled (benchmarks)."""
+    """Total shapes compiled across the single-bucket, fused, and
+    shared-plan cores (benchmarks gate this staying O(log max batch))."""
     try:
-        return int(_crossmatch_jit._cache_size())
+        return int(
+            _crossmatch_jit._cache_size()
+            + _crossmatch_fused_jit._cache_size()
+            + _crossmatch_shared_jit._cache_size()
+        )
     except AttributeError:  # very old jax
         return -1
 
@@ -171,6 +184,80 @@ def _crossmatch_fused_jit(
         bm=bm, bn=bn, interpret=interpret,
     )
     return idx[:m], dot[:m], cnt[:m]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "bm", "bn", "interpret"))
+def _crossmatch_shared_jit(
+    bucket8, probes8, bucket_seg, probe_seg, probe_thr, use_pallas, bm, bn, interpret
+):
+    m = probes8.shape[0]
+    if not use_pallas:
+        return crossmatch_shared_ref(
+            bucket8, probes8, bucket_seg, probe_seg, probe_thr
+        )
+    n_in = bucket8.shape[0]
+    bucket_p = _pad_rows(bucket8, bn)
+    probes_p = _pad_rows(probes8, bm)
+    pad_b = bucket_p.shape[0] - n_in
+    if pad_b:
+        bucket_seg = jnp.concatenate(
+            [bucket_seg, jnp.full((pad_b,), PAD_SEG, jnp.float32)]
+        )
+    pad_p = probes_p.shape[0] - m
+    if pad_p:
+        probe_seg = jnp.concatenate(
+            [probe_seg, jnp.full((pad_p,), PAD_SEG, jnp.float32)]
+        )
+        probe_thr = jnp.concatenate(
+            [probe_thr, jnp.full((pad_p,), _PAD_THR, jnp.float32)]
+        )
+    idx, dot, cnt = crossmatch_shared_pallas(
+        bucket_p, probes_p, bucket_seg, probe_seg, probe_thr,
+        bm=bm, bn=bn, interpret=interpret,
+    )
+    return idx[:m], dot[:m], cnt[:m]
+
+
+def crossmatch_shared(
+    bucket,
+    probes,
+    bucket_seg,
+    probe_seg,
+    probe_thr,
+    use_pallas: bool = False,
+    bm: int = 128,
+    bn: int = 512,
+    interpret: bool = True,
+):
+    """Shared-plan cross-match: the query axis fused into ONE device call.
+
+    Like ``crossmatch_fused``, but the cos threshold is a *traced* per-probe
+    array (``probe_thr[m]`` = probe m's owning query's cos(radius)) instead
+    of a static scalar.  A batch of queries with K distinct match radii
+    therefore costs one dispatch and at most one compile per pow2 shape
+    pair — the static-threshold paths would pay K dispatches and K compile
+    cache entries.  Thresholds must lie in (-2, 1]; real cosines do, and
+    padded probe rows get ``_PAD_THR`` (+2, passes nothing).
+
+    Returns (best_idx, best_dot, n_cand) of length len(probes); best_idx
+    indexes the concatenated bucket array.
+    """
+    bucket8, probes8, n_true, m_true = _host_prepare(bucket, probes)
+    # Segment mask fences padded/real rows, exactly as in the fused path.
+    bucket8[:, _MARKER_COL] = 0.0
+    probes8[:, _MARKER_COL] = 0.0
+    bseg = np.full(bucket8.shape[0], PAD_SEG, np.float32)
+    bseg[:n_true] = np.asarray(bucket_seg, np.float32)
+    pseg = np.full(probes8.shape[0], PAD_SEG, np.float32)
+    pseg[:m_true] = np.asarray(probe_seg, np.float32)
+    thr = np.full(probes8.shape[0], _PAD_THR, np.float32)
+    thr[:m_true] = np.asarray(probe_thr, np.float32)
+    idx, dot, cnt = _crossmatch_shared_jit(
+        bucket8, probes8, jnp.asarray(bseg), jnp.asarray(pseg), jnp.asarray(thr),
+        use_pallas, bm, bn, interpret,
+    )
+    idx = jnp.minimum(idx[:m_true], max(n_true - 1, 0))
+    return idx, dot[:m_true], cnt[:m_true]
 
 
 def crossmatch_fused(

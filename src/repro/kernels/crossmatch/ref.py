@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["crossmatch_ref", "crossmatch_fused_ref"]
+__all__ = ["crossmatch_ref", "crossmatch_fused_ref", "crossmatch_shared_ref"]
 
 
 def crossmatch_ref(bucket: jnp.ndarray, probes: jnp.ndarray, cos_thr: float):
@@ -41,4 +41,29 @@ def crossmatch_fused_ref(
     best_idx = jnp.argmax(dots, axis=1).astype(jnp.int32)
     best_dot = jnp.max(dots, axis=1)
     n_cand = jnp.sum(dots >= cos_thr, axis=1).astype(jnp.int32)
+    return best_idx, best_dot, n_cand
+
+
+def crossmatch_shared_ref(
+    bucket: jnp.ndarray,
+    probes: jnp.ndarray,
+    bucket_seg: jnp.ndarray,
+    probe_seg: jnp.ndarray,
+    probe_thr: jnp.ndarray,
+):
+    """Shared-plan oracle: the fused segment mask *plus* a per-probe-row
+    threshold vector, realizing the (queries x objects) predicate mask.
+
+    Each probe row belongs to one query; ``probe_thr[m]`` is that query's
+    own cos(match radius), so heterogeneous per-query predicates evaluate
+    in the same masked pass instead of one device dispatch per predicate
+    class.  Thresholds must lie in (-2, 1] (real cosines do); masked and
+    padded pairs sit at dot -2 and can never pass one.
+    """
+    dots = jnp.dot(probes, bucket.T)  # (M, N)
+    same = probe_seg[:, None] == bucket_seg[None, :]
+    dots = jnp.where(same, dots, jnp.float32(-2.0))
+    best_idx = jnp.argmax(dots, axis=1).astype(jnp.int32)
+    best_dot = jnp.max(dots, axis=1)
+    n_cand = jnp.sum(dots >= probe_thr[:, None], axis=1).astype(jnp.int32)
     return best_idx, best_dot, n_cand

@@ -47,7 +47,7 @@ from ..core.control import (
     TenantPolicy,
 )
 from ..core.dispatch import DispatchLoop
-from ..core.metrics import CostModel, per_tenant_latency
+from ..core.metrics import CostModel, dispatch_stats, per_tenant_latency
 from ..core.prefetch import PrefetchConfig, build_pipeline, prefetch_stats
 from ..core.scheduler import LifeRaftScheduler, RoundRobinScheduler
 from ..core.spillq import SpillBookkeepingMixin, SpillQueue
@@ -95,6 +95,17 @@ class ServeConfig:
     per_token_cost: float = 2e-4  # T_m seconds per request-token (marginal)
     hybrid_threshold: int = 2  # batches below this use the gathered path
     fuse_k: int = 1  # adapters serviced per dispatch (grouped-matmul fusion)
+    # -- shared query plans ----------------------------------------------------
+    # Group the round's adapter batches into ONE masked decode call per
+    # share_width-sized chunk (grouped matmul over the adapter axis)
+    # instead of one device call per adapter.  In shared mode
+    # ``decode_batch_fn`` is called as ``fn(group, quantum)`` with
+    # ``group = [(adapter_id, batch), ...]``.  Cost accounting per
+    # decision is unchanged, so decisions and completions are identical
+    # with the switch off or on.
+    shared_plan: bool = False
+    share_width: int = 4  # adapters per shared decode call (static ceiling)
+    share_width_max: int = 0  # >0 with adaptive: ControlLoop sizes the width
     # -- closed-loop control plane (core/control.py) --------------------------
     adaptive: bool = False  # retune alpha/fuse_k/spill every round
     fuse_k_max: int = 8
@@ -357,6 +368,10 @@ class LifeRaftEngine:
                     prefetch_horizon_max=(
                         config.prefetch_horizon_max if config.prefetch else 0
                     ),
+                    share_width_init=max(1, config.share_width),
+                    share_width_max=(
+                        config.share_width_max if config.shared_plan else 0
+                    ),
                 )
             )
         self.control = control
@@ -409,49 +424,92 @@ class LifeRaftEngine:
         self.loop.observe_arrival(req.arrival_time)
 
     # ------------------------------------------------------------- execution
+    def _prepare_decision(self, d) -> tuple[int, list[Request], float]:
+        """Per-decision accounting shared by both executor paths: take the
+        batch, charge adapter load + §6 read-back + quantum decode time,
+        and advance token state.  Returns (adapter, batch, step_time)."""
+        adapter = d.bucket_id
+        batch = self.workload.take(adapter, self.cfg.max_batch)
+        self._inflight[adapter] = batch
+        t_load = 0.0
+        if not self.cache.contains(adapter):
+            t_load = self.adapters[adapter].nbytes / self.cfg.hbm_bw
+        if self.workload.is_spilled(adapter):
+            # §6 host read-back surcharge, pro-rated by the spilled
+            # byte fraction (== T_spill for a fully spilled queue).
+            t_load += self.cost.T_spill * self.workload.spilled_fraction(
+                adapter
+            )
+        use_indexed = (
+            len(batch) < self.cfg.hybrid_threshold
+            and not self.cache.contains(adapter)
+        )
+        if use_indexed:
+            # Gathered multi-adapter path: no residency established, but
+            # hit_rate must see the miss (symmetric accounting, same as
+            # CrossMatchEngine._plan_and_fetch).
+            self.indexed_batches += 1
+            self.cache.note_bypass_miss()
+            t_load = t_load * 0.25  # stream only the rows touched
+        else:
+            self.cache.access(adapter)
+
+        quantum = self.cfg.decode_quantum
+        # Load + quantum decode steps for the batch.
+        step_time = t_load + quantum * self.cfg.per_token_cost * max(
+            len(batch), 1
+        )
+        for r in batch:
+            r.tokens_done += quantum
+            self.tokens_served += quantum
+        return adapter, batch, step_time
+
     def _execute(self, decisions, vector) -> float:
         """DispatchLoop executor: load + quantum decode for each selected
-        adapter's batch (one grouped device call when fused)."""
+        adapter's batch — one device call per adapter, or one masked
+        grouped call per share_width chunk under ``shared_plan``."""
+        if self.cfg.shared_plan:
+            return self.execute_shared(decisions, vector)
         step_time = 0.0
         self._inflight = {}
         for d in decisions:
-            adapter = d.bucket_id
-            batch = self.workload.take(adapter, self.cfg.max_batch)
-            self._inflight[adapter] = batch
-            t_load = 0.0
-            if not self.cache.contains(adapter):
-                t_load = self.adapters[adapter].nbytes / self.cfg.hbm_bw
-            if self.workload.is_spilled(adapter):
-                # §6 host read-back surcharge, pro-rated by the spilled
-                # byte fraction (== T_spill for a fully spilled queue).
-                t_load += self.cost.T_spill * self.workload.spilled_fraction(
-                    adapter
-                )
-            use_indexed = (
-                len(batch) < self.cfg.hybrid_threshold
-                and not self.cache.contains(adapter)
-            )
-            if use_indexed:
-                # Gathered multi-adapter path: no residency established, but
-                # hit_rate must see the miss (symmetric accounting, same as
-                # CrossMatchEngine._plan_and_fetch).
-                self.indexed_batches += 1
-                self.cache.note_bypass_miss()
-                t_load = t_load * 0.25  # stream only the rows touched
-            else:
-                self.cache.access(adapter)
-
-            quantum = self.cfg.decode_quantum
+            adapter, batch, t = self._prepare_decision(d)
+            step_time += t
             if self.decode_batch_fn is not None:
-                self.decode_batch_fn(adapter, batch, quantum)
+                self.decode_batch_fn(adapter, batch, self.cfg.decode_quantum)
+        self.loop.note_device_dispatches(len(decisions))
+        return step_time
 
-            # Load + quantum decode steps for the batch.
-            step_time += t_load + quantum * self.cfg.per_token_cost * max(
-                len(batch), 1
-            )
-            for r in batch:
-                r.tokens_done += quantum
-                self.tokens_served += quantum
+    def execute_shared(self, decisions, vector=None) -> float:
+        """Shared-plan executor: the round's adapter batches decode in
+        ceil(k / share_width) masked grouped calls instead of k private
+        ones.  Per-decision cost accounting is identical to the off path
+        (the virtual clock and every completion time are unchanged); only
+        the device-call grouping — and the real ``decode_batch_fn``
+        invocation shape, ``fn([(adapter, batch), ...], quantum)`` —
+        differs."""
+        width = max(
+            1, getattr(vector, "share_width", 0) or self.cfg.share_width
+        )
+        step_time = 0.0
+        self._inflight = {}
+        prepared: list[tuple[int, list[Request]]] = []
+        for d in decisions:
+            adapter, batch, t = self._prepare_decision(d)
+            step_time += t
+            prepared.append((adapter, batch))
+        chunks = [
+            prepared[i : i + width] for i in range(0, len(prepared), width)
+        ]
+        for group in chunks:
+            if self.decode_batch_fn is not None:
+                self.decode_batch_fn(group, self.cfg.decode_quantum)
+        occupancy = (
+            len(prepared) / (len(chunks) * width) if prepared else 0.0
+        )
+        self.loop.note_device_dispatches(
+            len(chunks), shared_occupancy=occupancy
+        )
         return step_time
 
     def _complete(self, decisions, now: float) -> None:
@@ -502,6 +560,7 @@ class LifeRaftEngine:
         self.loop.busy += step_time
         self.loop.batches += 1
         self.loop.dispatches += 1
+        self.loop.device_dispatches += 1
         if req.done and req.finish_time is None:
             req.finish_time = self.clock
             self.completed.append(req)
@@ -554,6 +613,10 @@ class LifeRaftEngine:
             "p95_response": float(np.percentile(resp, 95)) if resp else 0.0,
             "cache_hit_rate": self.cache.stats.hit_rate,
             "batches": self.batches,
+            "device_dispatches": dispatch_stats(self.loop)["device_dispatches"],
+            "shared_batch_occupancy": dispatch_stats(self.loop)[
+                "shared_batch_occupancy"
+            ],
             "indexed_batches": self.indexed_batches,
             "spilled": self.workload.spilled_buckets(),
             "per_tenant": per_tenant,

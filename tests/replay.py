@@ -71,6 +71,13 @@ class TraceRecorder:
         stall = float(getattr(outcome, "stall", 0.0))
         if stall:
             entry["stall"] = stall
+        # Shared-plan width: same conditional-emit discipline as ``stall``
+        # — goldens recorded before shared plans existed (share_width == 0
+        # on every round) replay byte-identically, while shared-plan-on
+        # goldens pin the AIMD width trajectory.
+        share_width = int(getattr(outcome.vector, "share_width", 0))
+        if share_width:
+            entry["share_width"] = share_width
         self.entries.append(entry)
 
 
@@ -93,7 +100,10 @@ def diff_traces(expect: list[dict], got: list[dict]) -> list[str]:
     if len(expect) != len(got):
         out.append(f"length: expect {len(expect)} rounds, got {len(got)}")
     for i, (e, g) in enumerate(zip(expect, got)):
-        for field in ("decisions", "cost", "vector", "spill_changed", "stall"):
+        for field in (
+            "decisions", "cost", "vector", "spill_changed", "stall",
+            "share_width",
+        ):
             if e.get(field) != g.get(field):
                 out.append(
                     f"round {i} {field}:\n  expect {_fmt(e)}\n  got    {_fmt(g)}"
@@ -275,6 +285,23 @@ def sim_scenario(name: str) -> list[dict]:
             _identity_range, cost, alpha=0.5, cache_capacity=8,
             normalized=True, control=ctl, on_round=rec,
         )
+    elif name == "sim_sharedplan":
+        # Shared query plans ON (recorded at feature introduction): the
+        # executor reports per-round shared-batch occupancy, the AIMD
+        # share_width law widens under saturation and narrows under
+        # padding, and every round's applied width is pinned via the
+        # conditional ``share_width`` trace key.
+        ctl = ControlLoop(ControlConfig(
+            alpha_init=0.5, alpha_step=0.2, halflife_s=3.0,
+            rate_knee=6.0, depth_knee=500.0, fuse_k_max=4,
+            share_width_init=2, share_width_max=8,
+        ))
+        run_policy(
+            "liferaft", sim_trace(43, n=200, buckets=50, gap=0.02),
+            _identity_range, CostModel(T_b=0.8, T_m=2e-4), alpha=0.5,
+            cache_capacity=8, normalized=True, control=ctl, on_round=rec,
+            shared_plan=True, share_width=2,
+        )
     else:
         raise ValueError(name)
     return rec.entries
@@ -349,8 +376,6 @@ def crossmatch_scenario(name: str = "crossmatch_fused") -> list[dict]:
     engine's execute/complete plumbing stays decision-neutral)."""
     from repro.crossmatch import CrossMatchEngine, TraceConfig, make_catalog, make_trace
 
-    if name != "crossmatch_fused":
-        raise ValueError(name)
     catalog = make_catalog(
         n_objects=2_000, objects_per_bucket=100, htm_level=6, seed=17
     )
@@ -358,7 +383,25 @@ def crossmatch_scenario(name: str = "crossmatch_fused") -> list[dict]:
         catalog,
         TraceConfig(n_queries=14, arrival_rate=2.0, objects_median=40, seed=19),
     )
-    eng = CrossMatchEngine(catalog, match_radius_rad=4e-3, fuse_k=3)
+    if name == "crossmatch_fused":
+        eng = CrossMatchEngine(catalog, match_radius_rad=4e-3, fuse_k=3)
+    elif name == "crossmatch_sharedplan":
+        # Shared-plan ON with heterogeneous per-query predicates: each
+        # query carries its own radius + magnitude cut, so the off-path
+        # would dispatch one kernel per predicate class while the shared
+        # path folds them into width-2 masked batches.  The decision log
+        # pins that the shared executor stays decision-neutral (same cost
+        # model) while its device-dispatch accounting differs.
+        rng = np.random.default_rng(5)
+        for q in trace:
+            q.meta["radius"] = float(rng.choice([2e-3, 4e-3, 8e-3]))
+            q.meta["mag_cut"] = float(rng.choice([23.0, 24.0, 25.0]))
+        eng = CrossMatchEngine(
+            catalog, match_radius_rad=4e-3, fuse_k=2,
+            shared_plan=True, share_width=2,
+        )
+    else:
+        raise ValueError(name)
     rec = TraceRecorder()
     eng.loop.on_round = rec
     eng.run(trace)
@@ -371,11 +414,13 @@ SCENARIOS = {
     "sim_two_tenant": lambda: sim_scenario("sim_two_tenant"),
     "sim_spill_paged": lambda: sim_scenario("sim_spill_paged"),
     "sim_prefetch": lambda: sim_scenario("sim_prefetch"),
+    "sim_sharedplan": lambda: sim_scenario("sim_sharedplan"),
     "serving_static": lambda: serving_scenario("serving_static"),
     "serving_adaptive": lambda: serving_scenario("serving_adaptive"),
     "serving_spill_paged": lambda: serving_scenario("serving_spill_paged"),
     "serving_prefetch": lambda: serving_scenario("serving_prefetch"),
     "crossmatch_fused": lambda: crossmatch_scenario(),
+    "crossmatch_sharedplan": lambda: crossmatch_scenario("crossmatch_sharedplan"),
 }
 
 # Scenarios whose goldens predate the multi-tenant refactor: bit-identity

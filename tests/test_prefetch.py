@@ -476,9 +476,13 @@ class TestPricedSpillVictims:
                 qid += 1
         return wm
 
-    def test_default_walk_is_youngest_first_unchanged(self):
+    def test_unpriced_walk_is_youngest_first_unchanged(self):
+        # price_spill_victims=False opts back into the legacy walk
+        # (pre-PR-6 default; see the golden waiver in docs/adaptive.md).
         wm = self._wm()
-        cfg = ControlConfig(spill_budget_bytes=215.0)
+        cfg = ControlConfig(
+            spill_budget_bytes=215.0, price_spill_victims=False
+        )
         changed = apply_spill(
             wm, ControlVector(0.5, 1, True), cfg,
             cost=CostModel(T_spill=0.5),
