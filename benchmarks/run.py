@@ -16,6 +16,7 @@ def main() -> None:
         bench_adaptive,
         bench_prefetch,
         bench_scheduler,
+        bench_shard,
         bench_sharedplan,
         fig2_hybrid_join,
         fig5_bucket_reuse,
@@ -38,6 +39,7 @@ def main() -> None:
         ("Adaptive control plane: closed loop vs best static alpha", bench_adaptive.main),
         ("Prefetch: scan-horizon staging vs reactive LRU", bench_prefetch.main),
         ("Shared plans: masked multi-query kernel vs per-predicate", bench_sharedplan.main),
+        ("Sharding: multi-shard tier + work stealing vs one loop", bench_shard.main),
         ("Serving: multi-tenant LifeRaft engine", serving_bench.main),
         ("Kernels: micro-benchmarks", kernel_bench.main),
         ("Fault tolerance: goodput under failures", ft_bench.main),

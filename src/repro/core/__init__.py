@@ -18,6 +18,10 @@ Public surface:
   * ``ScanPlanner``/``PrefetchPipeline``: the scan-horizon prefetch
     subsystem — commit the scheduler's next-H buckets in elevator-sweep
     order and stage their I/O ahead of compute (``scanplan``/``prefetch``)
+  * ``ShardMap``/``ShardedDispatch``: the multi-shard execution tier —
+    SFC-range bucket partitioning, shard-local dispatch loops, work
+    stealing, and the ``ShardControlPlane`` global byte arbiter
+    (``shard``)
   * ``simulate``: the event-driven harness behind Figs. 7/8
 """
 from .bucket import BucketSpec, BucketStore, Partitioner
@@ -36,11 +40,14 @@ from .control import (
     ControlConfig,
     ControlLoop,
     ControlVector,
+    ShardControlPlane,
+    ShardGrant,
     Telemetry,
     TenantControlPlane,
     TenantPolicy,
     apply_spill,
     unspill_price,
+    waterfill,
 )
 from .dispatch import DispatchLoop, DispatchOutcome
 from .prefetch import PrefetchConfig, PrefetchPipeline, build_pipeline
@@ -52,7 +59,20 @@ from .scheduler import (
     RoundRobinScheduler,
     SchedulerDecision,
 )
-from .simulate import SimResult, run_policy, simulate_batched, simulate_noshare
+from .shard import (
+    ShardMap,
+    ShardRuntime,
+    ShardedDispatch,
+    StealConfig,
+    StealEvent,
+)
+from .simulate import (
+    SimResult,
+    run_policy,
+    simulate_batched,
+    simulate_noshare,
+    simulate_sharded,
+)
 from .spillq import SpillQueue
 from .workload import Query, WorkloadManager, WorkloadQueue, WorkUnit
 from . import sfc
@@ -81,10 +101,13 @@ __all__ = [
     "ControlLoop",
     "ControlVector",
     "Telemetry",
+    "ShardControlPlane",
+    "ShardGrant",
     "TenantControlPlane",
     "TenantPolicy",
     "apply_spill",
     "unspill_price",
+    "waterfill",
     "SpillQueue",
     "DispatchLoop",
     "DispatchOutcome",
@@ -98,10 +121,16 @@ __all__ = [
     "OrderedScheduler",
     "RoundRobinScheduler",
     "SchedulerDecision",
+    "ShardMap",
+    "ShardRuntime",
+    "ShardedDispatch",
+    "StealConfig",
+    "StealEvent",
     "SimResult",
     "run_policy",
     "simulate_batched",
     "simulate_noshare",
+    "simulate_sharded",
     "Query",
     "WorkloadManager",
     "WorkloadQueue",

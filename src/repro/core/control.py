@@ -58,8 +58,11 @@ __all__ = [
     "ControlLoop",
     "TenantPolicy",
     "TenantControlPlane",
+    "ShardGrant",
+    "ShardControlPlane",
     "apply_spill",
     "unspill_price",
+    "waterfill",
 ]
 
 
@@ -305,7 +308,7 @@ class ControlLoop:
         return self._spilling
 
 
-def unspill_price(q, cost) -> float:
+def unspill_price(q, cost, now: Optional[float] = None) -> float:
     """The §6 wait-cost-per-byte of leaving queue ``q`` spilled — the
     arbiter's unspill-grant priority.
 
@@ -314,13 +317,28 @@ def unspill_price(q, cost) -> float:
     one byte back in therefore saves ``T_spill / nbytes`` seconds of
     read-back surcharge per future service.  Small queues clear their
     whole surcharge with few bytes, so they page in first — maximum
-    surcharge relief per granted byte.  Returns 0.0 (unpriced — walk
-    falls back to oldest-first) without a cost model or with
-    ``T_spill == 0``.
+    surcharge relief per granted byte.
+
+    With ``now`` the price is *deadline-aware*: the base rate is scaled by
+    ``1 + age_ms / age_scale_ms``, the same normalization the Eq. 2 age
+    term uses, so a spilled queue approaching the §6 starvation bound
+    (age ~ ``age_scale_ms``) outbids a cheap young one for the grant —
+    and, symmetrically, costs more to evict in the priced victim walk.
+    ``now=None`` is the ageless historical price.
+
+    Returns 0.0 (unpriced — walk falls back to oldest-first, which
+    already favors the old) without a cost model or with ``T_spill == 0``.
     """
     if cost is None or getattr(cost, "T_spill", 0.0) <= 0.0:
         return 0.0
-    return cost.T_spill / q.nbytes if q.nbytes else 0.0
+    base = cost.T_spill / q.nbytes if q.nbytes else 0.0
+    if now is None:
+        return base
+    age_scale = getattr(cost, "age_scale_ms", 0.0)
+    if age_scale <= 0.0:
+        return base
+    age_ms = max(0.0, (now - q.oldest_arrival) * 1e3)
+    return base * (1.0 + age_ms / age_scale)
 
 
 def apply_spill(
@@ -331,6 +349,7 @@ def apply_spill(
     budget_bytes: Optional[float] = None,
     only: Optional[Callable[[int], bool]] = None,
     cost=None,
+    now: Optional[float] = None,
 ) -> list[int]:
     """Enforce the §6 overflow budget on a workload manager.
 
@@ -350,7 +369,8 @@ def apply_spill(
     so the paged-in bytes can never re-exceed the budget
     (``config.wholesale_unspill`` restores the legacy whole-queue walk).
     ``only`` restricts the walk to one tenant's buckets (per-tenant
-    enforcement under the shared loop).
+    enforcement under the shared loop).  ``now`` (the dispatch clock)
+    makes both priced walks deadline-aware — see ``unspill_price``.
 
     Legacy object mode (``spill_budget_objects``): whole-queue spill on
     the object-count proxy, bit-for-bit the historical behavior.
@@ -361,7 +381,7 @@ def apply_spill(
         return []
     if budget_bytes is not None or config.spill_budget_bytes is not None:
         budget = budget_bytes if budget_bytes is not None else config.spill_budget_bytes
-        return _apply_spill_bytes(wm, vector, config, budget, only, cost)
+        return _apply_spill_bytes(wm, vector, config, budget, only, cost, now)
     budget = config.spill_budget_objects
     if budget is None:
         return []
@@ -397,7 +417,7 @@ def apply_spill(
 
 def _apply_spill_bytes(
     wm, vector: ControlVector, config: ControlConfig, budget: float, only,
-    cost=None,
+    cost=None, now: Optional[float] = None,
 ) -> list[int]:
     """Byte-accurate partial-spill enforcement (see apply_spill)."""
     changed: list[int] = []
@@ -425,7 +445,7 @@ def _apply_spill_bytes(
             # buy throughput with starvation.
             victims.sort(
                 key=lambda q: (
-                    unspill_price(q, cost), -q.oldest_arrival, -q.bucket_id
+                    unspill_price(q, cost, now), -q.oldest_arrival, -q.bucket_id
                 )
             )
             oldest = min(victims, key=lambda q: (q.oldest_arrival, q.bucket_id))
@@ -470,7 +490,9 @@ def _apply_spill_bytes(
         # low-water headroom, oldest units first, so no single grant —
         # and no round — can push residency back over the budget.
         spilled.sort(
-            key=lambda q: (-unspill_price(q, cost), q.oldest_arrival, q.bucket_id)
+            key=lambda q: (
+                -unspill_price(q, cost, now), q.oldest_arrival, q.bucket_id
+            )
         )
         headroom = low - resident_total
         for q in spilled:
@@ -483,6 +505,55 @@ def _apply_spill_bytes(
                 changed.append(q.bucket_id)
                 headroom -= q.resident_bytes - before
     return changed
+
+
+def waterfill(
+    demand: Mapping, weights: Mapping, budget: float
+) -> dict:
+    """Weighted waterfill of a byte budget over demands — the one arbiter
+    both arbitration axes share (tenants within a host, shards across the
+    tier).
+
+    Parties demanding less than their weighted share are granted their
+    demand; the freed headroom is re-shared (by weight) among the
+    still-unsatisfied parties until none remain, and any final slack is
+    distributed (by weight) on top of every grant so the grants always
+    sum to *exactly* the budget.  The slack matters: it is the headroom
+    that lets a previously spilling party's low-water disengage test
+    (``pending <= grant * low_water``) pass once global pressure subsides
+    — a grant capped at demand can never satisfy it.  Invariants:
+    sum(grants) == budget (work-conserving), every grant >= its party's
+    satisfied demand.  Missing weights default to 1.0.
+    """
+    remaining = float(budget)
+    active = set(demand)
+    grants: dict = {}
+    while active:
+        wsum = sum(weights.get(t, 1.0) for t in active)
+        if wsum <= 0.0:  # degenerate zero weights: equal shares
+            share = {t: remaining / len(active) for t in active}
+        else:
+            share = {
+                t: remaining * weights.get(t, 1.0) / wsum for t in active
+            }
+        satisfied = [t for t in active if demand[t] <= share[t]]
+        if not satisfied:
+            grants.update(share)  # everyone over-demands: cap at share
+            remaining = 0.0
+            break
+        for t in satisfied:
+            grants[t] = demand[t]
+            remaining -= demand[t]
+            active.discard(t)
+    if remaining > 0.0 and grants:
+        wsum = sum(weights.get(t, 1.0) for t in grants)
+        for t in grants:
+            grants[t] += (
+                remaining * weights.get(t, 1.0) / wsum
+                if wsum > 0.0
+                else remaining / len(grants)
+            )
+    return grants
 
 
 # --------------------------------------------------------------------------
@@ -620,44 +691,123 @@ class TenantControlPlane:
 
     # -- the arbiter -------------------------------------------------------------
     def _waterfill(self, demand: Mapping[str, float]) -> dict[str, float]:
-        """Weighted waterfill of the global byte budget.
+        """Weighted waterfill of the global byte budget over tenant
+        demands — the module-level :func:`waterfill` with this plane's
+        policy weights (the same arbiter ``ShardControlPlane`` runs over
+        shards)."""
+        return waterfill(
+            demand,
+            {t: p.weight for t, p in self.policies.items()},
+            float(self.global_budget_bytes or 0.0),
+        )
 
-        Tenants demanding less than their weighted share are granted their
-        demand; the freed headroom is re-shared (by weight) among the
-        still-unsatisfied tenants until none remain, and any final slack
-        is distributed (by weight) on top of every grant so the grants
-        always sum to *exactly* the budget.  The slack matters: it is the
-        headroom that lets a previously spilling tenant's low-water
-        disengage test (`pending <= grant * low_water`) pass once global
-        pressure subsides — a grant capped at demand can never satisfy it.
-        Invariant: sum(grants) == global budget (work-conserving), every
-        grant >= its tenant's satisfied demand."""
-        remaining = float(self.global_budget_bytes or 0.0)
-        active = set(self.policies)
-        grants: dict[str, float] = {}
-        while active:
-            wsum = sum(self.policies[t].weight for t in active)
-            if wsum <= 0.0:  # degenerate zero weights: equal shares
-                share = {t: remaining / len(active) for t in active}
-            else:
-                share = {
-                    t: remaining * self.policies[t].weight / wsum for t in active
-                }
-            satisfied = [t for t in active if demand[t] <= share[t]]
-            if not satisfied:
-                grants.update(share)  # everyone over-demands: cap at share
-                remaining = 0.0
-                break
-            for t in satisfied:
-                grants[t] = demand[t]
-                remaining -= demand[t]
-                active.discard(t)
-        if remaining > 0.0 and grants:
-            wsum = sum(self.policies[t].weight for t in grants)
-            for t in grants:
-                grants[t] += (
-                    remaining * self.policies[t].weight / wsum
-                    if wsum > 0.0
-                    else remaining / len(grants)
-                )
+
+# --------------------------------------------------------------------------
+# Cross-shard control tier
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShardGrant:
+    """One shard's per-round byte grants from the global tier.
+
+    ``spill_bytes`` overrides the shard-local §6 budget for this round
+    (None: no global spill budget — the shard's own config governs);
+    ``engaged`` is the tier's hysteresis bit for the shard (the local
+    spill law is bypassed exactly as the tenant plane bypasses the
+    per-loop law).  ``prefetch_bytes`` caps the bytes the shard's
+    prefetch pipeline may commit to its staging channel this round
+    (None: uncapped).
+    """
+
+    spill_bytes: Optional[float] = None
+    engaged: bool = False
+    prefetch_bytes: Optional[float] = None
+
+
+class ShardControlPlane:
+    """The global control tier over shard-local dispatch loops.
+
+    Shards are an *outer* arbitration axis: exactly as the
+    ``TenantControlPlane`` waterfills the §6 byte budget across tenant
+    classes within one loop, this plane waterfills the global spill and
+    prefetch byte budgets across shards, from per-shard ``Telemetry``
+    slices.  Demand on both axes is the shard's *pending* probe bytes —
+    what it needs to hold everything resident, and the best available
+    proxy for how much staging its queues can absorb (a shard with no
+    pending work needs neither residency nor lookahead).  Per-shard
+    hysteresis mirrors the tenant plane's: residency above the grant
+    engages spill; pending at or below the grant's low-water mark
+    disengages it.
+
+    The shard tier (``core/shard.py``) consumes grants by overriding each
+    shard loop's spill budget/engagement for the round and capping its
+    pipeline's staging bytes; with both budgets ``None`` the plane is
+    inert and every shard runs its local laws untouched.
+    """
+
+    def __init__(
+        self,
+        n_shards: int,
+        spill_budget_bytes: Optional[float] = None,
+        prefetch_budget_bytes: Optional[float] = None,
+        weights: Optional[Mapping[int, float]] = None,
+        spill_low_water: float = 0.8,
+    ) -> None:
+        if n_shards < 1:
+            raise ValueError(f"need at least one shard, got {n_shards}")
+        self.n_shards = int(n_shards)
+        self.spill_budget_bytes = spill_budget_bytes
+        self.prefetch_budget_bytes = prefetch_budget_bytes
+        self.weights = {
+            s: (weights.get(s, 1.0) if weights else 1.0)
+            for s in range(self.n_shards)
+        }
+        self.spill_low_water = float(spill_low_water)
+        self._engaged: dict[int, bool] = {s: False for s in self.weights}
+        self.granted_spill: dict[int, float] = {}
+        self.granted_prefetch: dict[int, float] = {}
+        self.rounds = 0
+        self.last: dict[int, ShardGrant] = {}
+
+    def update(self, tels: Mapping[int, Telemetry]) -> dict[int, ShardGrant]:
+        """One global round: waterfill both budgets over the shards'
+        telemetry slices and return a grant per shard."""
+        pending = {
+            s: (tels[s].pending_bytes if s in tels else 0.0)
+            for s in self.weights
+        }
+        resident = {
+            s: (tels[s].resident_bytes if s in tels else 0.0)
+            for s in self.weights
+        }
+        grants: dict[int, ShardGrant] = {}
+        if self.spill_budget_bytes is not None:
+            self.granted_spill = waterfill(
+                pending, self.weights, self.spill_budget_bytes
+            )
+        if self.prefetch_budget_bytes is not None:
+            self.granted_prefetch = waterfill(
+                pending, self.weights, self.prefetch_budget_bytes
+            )
+        for s in self.weights:
+            spill_grant = (
+                self.granted_spill.get(s, 0.0)
+                if self.spill_budget_bytes is not None
+                else None
+            )
+            if spill_grant is not None:
+                if resident[s] > spill_grant:
+                    self._engaged[s] = True
+                elif pending[s] <= spill_grant * self.spill_low_water:
+                    self._engaged[s] = False
+            grants[s] = ShardGrant(
+                spill_bytes=spill_grant,
+                engaged=self._engaged[s],
+                prefetch_bytes=(
+                    self.granted_prefetch.get(s, 0.0)
+                    if self.prefetch_budget_bytes is not None
+                    else None
+                ),
+            )
+        self.rounds += 1
+        self.last = grants
         return grants

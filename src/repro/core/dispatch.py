@@ -42,6 +42,7 @@ from typing import Callable, Mapping, Optional, Sequence, Union
 from .control import (
     ControlLoop,
     ControlVector,
+    ShardGrant,
     Telemetry,
     TenantControlPlane,
     apply_spill,
@@ -114,6 +115,11 @@ class DispatchLoop:
         self._shared_calls = 0  # shared-plan device calls (occupancy known)
         self._dev_noted = False  # executor reported its own device calls
         self.prefetch = prefetch
+        # Set by the shard tier (core/shard.py) before a round: the global
+        # ShardControlPlane's byte grant for this shard.  None (the
+        # default, and the whole story for unsharded loops) leaves the
+        # local spill law untouched — the off-path is bit-identical.
+        self.shard_grant: Optional[ShardGrant] = None
         self._stall_frac = 0.0  # last round's stall share of round time
         self._wasted_last = 0  # prefetched fills evicted untouched last round
         self._wasted_base = 0
@@ -234,9 +240,20 @@ class DispatchLoop:
             vector = self.control.update(self.telemetry())
             if hasattr(self.scheduler, "alpha"):
                 self.scheduler.alpha = vector.alpha
+            grant = self.shard_grant
+            if grant is not None and grant.spill_bytes is not None:
+                # Global tier overrides the local law: the shard spills
+                # against its cross-shard byte grant, engagement decided
+                # by the tier's hysteresis (exactly how the tenant plane
+                # overrides per-loop spill bits with arbiter grants).
+                vector = dataclasses.replace(vector, spill=grant.engaged)
             spill_changed = apply_spill(
                 self.wm, vector, self.control.cfg,
+                budget_bytes=(
+                    grant.spill_bytes if grant is not None else None
+                ),
                 cost=getattr(self.scheduler, "cost_model", None),
+                now=self.clock,
             )
         else:
             vector = ControlVector(
@@ -325,6 +342,7 @@ class DispatchLoop:
                 budget_bytes=grant,
                 only=lambda b, _t=t: self.tenant_of(b) == _t,
                 cost=cost,
+                now=self.clock,
             )
         merged = ControlVector(
             # alpha is informational here — scoring used per-bucket tenant

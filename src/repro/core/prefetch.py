@@ -73,6 +73,7 @@ class _Stage:
     bucket_id: int
     eta: float  # virtual completion time on the serial staging channel
     future: Optional[Future] = None  # real payload read (engines only)
+    t_stage: float = 0.0  # service time — the channel interval is [eta - t, eta]
 
     def payload(self) -> object:
         return self.future.result() if self.future is not None else None
@@ -103,6 +104,12 @@ class PrefetchPipeline:
         self._inflight: dict[int, _Stage] = {}
         self._io_free = 0.0  # virtual time the staging channel frees up
         self.last_horizon: tuple[int, ...] = ()
+        # Per-round staging byte cap from the cross-shard arbiter (None:
+        # uncapped — the default, and the whole story off the shard tier).
+        # Needs ``nbytes_of`` to price a stage; without one the cap is
+        # ignored rather than guessed.
+        self.grant_bytes: Optional[float] = None
+        self.nbytes_of: Optional[Callable[[int], float]] = None
         # -- telemetry ----------------------------------------------------------
         self.stall_s = 0.0  # cumulative residual stall paid on demand
         self.last_stall = 0.0
@@ -110,6 +117,8 @@ class PrefetchPipeline:
         self.fills = 0  # stages landed in the cache
         self.refused = 0  # fills the cache refused (no evictable slot)
         self.demand_waits = 0  # rounds that hit an in-flight stage
+        self.canceled = 0  # in-flight stages abandoned (demand disappeared)
+        self.reclaimed_s = 0.0  # channel seconds returned by cancels
 
     # -- the per-round stage (DispatchLoop: between select and execute) ---------
     def stage(
@@ -147,6 +156,8 @@ class PrefetchPipeline:
         plan = [b for b in plan if b not in demanded]
         self.last_horizon = tuple(plan)
         can_admit = getattr(self.cache, "can_admit_prefetch", None)
+        grant = self.grant_bytes if self.nbytes_of is not None else None
+        issued_bytes = 0.0
         for b in plan:
             if len(self._inflight) >= self.depth:
                 break
@@ -154,13 +165,48 @@ class PrefetchPipeline:
                 continue
             if can_admit is not None and not can_admit():
                 break  # a refused fill would waste the serial channel
-            eta = max(self._io_free, now) + self._t_stage(b)
+            if grant is not None:
+                nb = float(self.nbytes_of(b))
+                if issued_bytes + nb > grant:
+                    break  # arbiter grant exhausted for this round
+                issued_bytes += nb
+            t = self._t_stage(b)
+            eta = max(self._io_free, now) + t
             fut = self._submit(b)
-            self._inflight[b] = _Stage(b, eta, fut)
+            self._inflight[b] = _Stage(b, eta, fut, t)
             self._io_free = eta
             self.staged += 1
         self.cache.protect(list(plan) + list(self._inflight))
         return stall
+
+    def cancel(self, bucket_id: int, now: float) -> float:
+        """Abandon an in-flight stage whose demand disappeared (a stolen
+        bucket's pending units left this shard — the fill would land in a
+        dead slot).  Charges only the channel time already *spent*: the
+        residual service (the part of ``[eta - t_stage, eta]`` after
+        ``now``, capped at the full service time if the stage had not yet
+        reached the channel head) is reclaimed — every later stage's eta,
+        and the channel's free time, shift earlier by it.  Returns the
+        reclaimed seconds (0.0 when the bucket is not in flight or its
+        I/O already completed)."""
+        st = self._inflight.pop(bucket_id, None)
+        if st is None or st.eta <= now:
+            if st is not None:
+                # I/O already done: land it anyway — paid in full, and a
+                # resident fill is still a fill (the thief may never come,
+                # or the bucket may return).
+                self._land(st)
+            return 0.0
+        reclaimed = min(st.t_stage, st.eta - now)
+        if st.future is not None:
+            st.future.cancel()
+        for other in self._inflight.values():
+            if other.eta > st.eta:
+                other.eta -= reclaimed
+        self._io_free = max(now, self._io_free - reclaimed)
+        self.canceled += 1
+        self.reclaimed_s += reclaimed
+        return reclaimed
 
     def note_serviced(self, decisions: Sequence) -> None:
         """Forward serviced buckets to the planner (sweep head advance +
@@ -216,6 +262,7 @@ def prefetch_stats(pipe: "PrefetchPipeline", cache) -> dict:
         "refused": pipe.refused,
         "demand_waits": pipe.demand_waits,
         "stall_s": pipe.stall_s,
+        "canceled": pipe.canceled,
         "prefetch_hits": cache.stats.prefetch_hits,
         "demand_hits": cache.stats.demand_hits,
         "prefetch_unused": cache.stats.prefetch_unused,

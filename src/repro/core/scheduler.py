@@ -209,6 +209,15 @@ class LifeRaftScheduler:
     def mark_dirty(self, bucket_id: int) -> None:
         self._dirty.add(bucket_id)
 
+    def forget(self, bucket_id: int) -> None:
+        """Drop a bucket from the incremental index *now* (shard work
+        stealing: the bucket's queue left this manager wholesale via
+        ``migrate_out``).  The queue-change notification already marks it
+        dirty; this releases the live entry eagerly so a steal decision
+        taken before the next flush cannot see the departed bucket."""
+        self._entries.pop(bucket_id, None)
+        self._dirty.add(bucket_id)
+
     def rebuild(self) -> None:
         """Drop the incremental index; it re-seeds on the next select()."""
         self._unbind()

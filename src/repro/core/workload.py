@@ -230,9 +230,26 @@ class WorkloadManager(SpillBookkeepingMixin):
         return per_bucket
 
     # -- intake -------------------------------------------------------------
+    def decompose(self, query: Query) -> dict[int, list[int]]:
+        """Public face of the Query Pre-Processor: bucket -> object indices.
+
+        Shard routers decompose once centrally and hand each shard only its
+        owned slice via ``submit_decomposed`` — the object indices always
+        refer to the *original* query arrays, so a sharded engine's probe
+        gather stays valid without renumbering."""
+        return self._decompose(query)
+
     def submit(self, query: Query) -> list[WorkUnit]:
         """Pre-process a query into work units and enqueue them."""
-        per_bucket = self._decompose(query)
+        return self.submit_decomposed(query, self._decompose(query))
+
+    def submit_decomposed(
+        self, query: Query, per_bucket: dict[int, list[int]]
+    ) -> list[WorkUnit]:
+        """Enqueue an already-decomposed query (possibly a shard-local
+        subset of its buckets).  An empty ``per_bucket`` completes the
+        query immediately — for a sharded run that means "this shard owns
+        none of it" and the router must not have routed it here."""
         units = []
         self.queries[query.query_id] = query
         self.outstanding[query.query_id] = set(per_bucket)
@@ -251,6 +268,57 @@ class WorkloadManager(SpillBookkeepingMixin):
         if not per_bucket:  # degenerate empty query completes immediately
             self.completed[query.query_id] = query.arrival_time
             del self.outstanding[query.query_id]
+        return units
+
+    # -- shard migration (work stealing) --------------------------------------
+    def migrate_out(self, bucket_id: int) -> list[WorkUnit]:
+        """Remove a bucket's entire pending queue *without* completing it.
+
+        The inverse of ``submit_decomposed`` for one bucket: every affected
+        query's outstanding set drops the bucket here, and the thief's
+        ``migrate_in`` re-adds it there — completion bookkeeping moves with
+        the units instead of firing.  Queries whose local outstanding set
+        empties are forgotten locally (their join lives in the shard tier,
+        never in ``completed``).  Returns the drained units in arrival
+        order (resident prefix then spilled suffix)."""
+        q = self.queues.pop(bucket_id, None)
+        if q is None:
+            return []
+        self._spilled.discard(bucket_id)
+        units = q.drain()
+        for unit in units:
+            pending = self.outstanding.get(unit.query_id)
+            if pending is None:
+                continue
+            pending.discard(bucket_id)
+            if not pending:
+                del self.outstanding[unit.query_id]
+        if units:
+            self._notify(bucket_id)
+        return units
+
+    def migrate_in(
+        self, units: Iterable[WorkUnit], queries: dict[int, Query]
+    ) -> list[WorkUnit]:
+        """Accept work units stolen from another manager.
+
+        ``queries`` maps query_id -> parent Query for any unit whose parent
+        this manager has not seen (the thief needs the original payload
+        arrays for its probe gather).  Units land *resident* — the thief
+        pays their bytes against its own §6 budget on its next enforcement
+        round — and keep their original arrival times, so the age term
+        A(i) is preserved across the migration."""
+        units = list(units)
+        touched: set[int] = set()
+        for unit in units:
+            src = queries.get(unit.query_id)
+            if src is not None:
+                self.queries.setdefault(unit.query_id, src)
+            self.outstanding.setdefault(unit.query_id, set()).add(unit.bucket_id)
+            self.queue(unit.bucket_id).push(unit)
+            touched.add(unit.bucket_id)
+        for b in touched:
+            self._notify(b)
         return units
 
     # -- scheduling support ---------------------------------------------------

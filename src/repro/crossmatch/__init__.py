@@ -1,6 +1,6 @@
 """Faithful application: SkyQuery-style astronomy cross-match."""
 from .catalog import SkyCatalog, make_catalog
-from .engine import CrossMatchEngine, MatchResult
+from .engine import CrossMatchEngine, MatchResult, ShardedCrossMatch
 from .trace import TraceConfig, cone_sample, make_trace, workload_stats
 
 __all__ = [
@@ -8,6 +8,7 @@ __all__ = [
     "make_catalog",
     "CrossMatchEngine",
     "MatchResult",
+    "ShardedCrossMatch",
     "TraceConfig",
     "cone_sample",
     "make_trace",

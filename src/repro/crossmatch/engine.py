@@ -24,6 +24,7 @@ tuples before results are routed back to their parent queries.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Optional, Sequence
 
 import numpy as np
@@ -35,10 +36,11 @@ from ..core.hybrid import HybridPlanner
 from ..core.metrics import CostModel, dispatch_stats, per_tenant_latency
 from ..core.prefetch import PrefetchConfig, build_pipeline
 from ..core.scheduler import BucketScheduler, LifeRaftScheduler, SchedulerDecision
+from ..core.shard import ShardMap, StealConfig, StealEvent
 from ..core.workload import Query, WorkloadManager
 from .catalog import SkyCatalog
 
-__all__ = ["MatchResult", "CrossMatchEngine"]
+__all__ = ["MatchResult", "CrossMatchEngine", "ShardedCrossMatch"]
 
 
 @dataclasses.dataclass
@@ -132,6 +134,15 @@ class CrossMatchEngine:
     # -- intake ----------------------------------------------------------------
     def submit(self, query: Query) -> None:
         self.wm.submit(query)
+        self._note_submitted(query)
+
+    def submit_decomposed(self, query: Query, per_bucket) -> None:
+        """Shard-router intake: the coordinator decomposed the query once
+        centrally; this engine receives only its shard's bucket slice."""
+        self.wm.submit_decomposed(query, per_bucket)
+        self._note_submitted(query)
+
+    def _note_submitted(self, query: Query) -> None:
         self.loop.observe_arrival(query.arrival_time)
         self.results.setdefault(query.query_id, [])
         meta = query.meta or {}
@@ -546,4 +557,224 @@ class CrossMatchEngine:
             )
             if len(tenants) > 1
             else {},
+        }
+
+
+class ShardedCrossMatch:
+    """Multi-shard cross-match: S shard-local engines over one catalog.
+
+    Buckets are partitioned by SFC range (bucket ids are the
+    Partitioner's SFC-run order) weighted by bucket bytes.  Each query
+    is decomposed ONCE centrally and its per-bucket slices routed to the
+    owning shards — object indices stay valid against the original query
+    arrays, so ``_gather_probes`` on any shard reads the same positions
+    the single-engine path would.  A query may span shards; its result
+    set is the union of per-shard matches (buckets are disjoint across
+    shards, so the union cannot double-count).
+
+    Transport is threaded: each shard's :class:`DispatchLoop` drains on
+    its own thread under a per-shard lock.  With ``steal`` set, a thread
+    that runs dry at the low-water mark steals the byte-heaviest
+    victim's highest-utility unstarted bucket under both shard locks
+    (acquired in ascending id order — no deadlock), migrating pending
+    units and canceling the victim's in-flight prefetch stage for the
+    residual channel time only.  The stolen payload is cache-cold on the
+    thief: its next service pays the full read.
+    """
+
+    def __init__(
+        self,
+        catalog: SkyCatalog,
+        n_shards: int = 2,
+        *,
+        shard_map: Optional[ShardMap] = None,
+        steal: Optional[StealConfig] = None,
+        scheduler_factory=None,
+        cost_model: Optional[CostModel] = None,
+        cache_capacity: int = 20,
+        control_factory=None,
+        **engine_kwargs,
+    ) -> None:
+        self.catalog = catalog
+        self.n_shards = max(1, int(n_shards))
+        self.cost_model = cost_model or CostModel()
+        self.shard_map = shard_map or ShardMap.from_partitioner(
+            catalog.partitioner, self.n_shards
+        )
+        self.steal = steal
+        self.steals: list[StealEvent] = []
+        # Aggregate cache bytes stay equal to a single-engine run with the
+        # same ``cache_capacity`` — each shard gets its slice.
+        per_cap = max(1, cache_capacity // self.n_shards)
+        self.engines = [
+            CrossMatchEngine(
+                catalog,
+                scheduler=scheduler_factory() if scheduler_factory else None,
+                cost_model=self.cost_model,
+                cache_capacity=per_cap,
+                control=control_factory() if control_factory else None,
+                **engine_kwargs,
+            )
+            for _ in range(self.n_shards)
+        ]
+        # Router: decompose once, centrally; never services anything.
+        self.router = WorkloadManager(
+            catalog.partitioner.buckets_for_range,
+            probe_bytes=self.cost_model.probe_bytes,
+            min_unit_bytes=self.cost_model.min_unit_bytes,
+        )
+        self._locks = [threading.Lock() for _ in range(self.n_shards)]
+        self._steal_lock = threading.Lock()
+
+    # -- intake ----------------------------------------------------------------
+    def submit(self, query: Query) -> None:
+        per_bucket = self.router.decompose(query)
+        slices: dict[int, dict[int, object]] = {}
+        for b, idx in per_bucket.items():
+            slices.setdefault(self.shard_map.shard_of(b), {})[b] = idx
+        if not slices:
+            # No matching buckets: shard 0 records the empty completion.
+            self.engines[0].submit_decomposed(query, {})
+            return
+        for sid, sl in slices.items():
+            self.engines[sid].submit_decomposed(query, sl)
+
+    # -- threaded drain --------------------------------------------------------
+    def run(self, queries: Sequence[Query]) -> dict[int, list[MatchResult]]:
+        """Admit the whole trace, drain every shard on its own thread,
+        merge per-shard result lists per query."""
+        for q in sorted(queries, key=lambda q: q.arrival_time):
+            for eng in self.engines:
+                eng.sim_clock = max(eng.sim_clock, q.arrival_time)
+            self.submit(q)
+        threads = [
+            threading.Thread(target=self._drain, args=(sid,), daemon=True)
+            for sid in range(self.n_shards)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for eng in self.engines:
+            eng.close()
+        return self.collect_results()
+
+    def _drain(self, sid: int) -> None:
+        eng = self.engines[sid]
+        while True:
+            with self._locks[sid]:
+                serviced = eng.step()
+            if serviced is not None:
+                continue
+            if self.steal is not None and self._try_steal(sid):
+                continue
+            return
+
+    def _try_steal(self, thief_id: int) -> bool:
+        """One steal attempt by an idle shard.  Victim choice happens
+        under the steal lock (serialized decisions); the migration itself
+        holds both shard locks so neither loop can be mid-round."""
+        cfg = self.steal
+        with self._steal_lock:
+            thief = self.engines[thief_id]
+            if thief.wm.pending_bytes() > cfg.low_water_bytes:
+                return False
+            victims = [
+                s
+                for s in range(self.n_shards)
+                if s != thief_id
+                and len(self.engines[s].wm.nonempty_queues())
+                >= cfg.min_victim_queues
+            ]
+            if not victims:
+                return False
+            vid = max(
+                victims,
+                key=lambda s: (self.engines[s].wm.pending_bytes(), -s),
+            )
+            victim = self.engines[vid]
+            lo, hi = sorted((thief_id, vid))
+            with self._locks[lo], self._locks[hi]:
+                bucket_id = self._victim_top_bucket(victim)
+                if bucket_id is None:
+                    return False
+                units = victim.wm.migrate_out(bucket_id)
+                if not units:
+                    return False
+                if hasattr(victim.scheduler, "forget"):
+                    victim.scheduler.forget(bucket_id)
+                reclaimed = 0.0
+                if victim.loop.prefetch is not None:
+                    reclaimed = victim.loop.prefetch.cancel(
+                        bucket_id, victim.loop.clock
+                    )
+                qids = {u.query_id for u in units}
+                qmap = {
+                    q: victim.wm.queries[q]
+                    for q in qids
+                    if q in victim.wm.queries
+                }
+                thief.wm.migrate_in(units, qmap)
+                self.shard_map.reassign(bucket_id, thief_id)
+                thief.sim_clock = max(
+                    thief.sim_clock, max(u.arrival_time for u in units)
+                )
+                for q in qmap.values():
+                    thief.results.setdefault(q.query_id, [])
+                    meta = q.meta or {}
+                    if "radius" in meta or "mag_cut" in meta:
+                        thief._has_query_predicates = True
+                self.steals.append(
+                    StealEvent(
+                        bucket_id=bucket_id,
+                        victim=vid,
+                        thief=thief_id,
+                        n_units=len(units),
+                        nbytes=float(sum(u.nbytes for u in units)),
+                        reclaimed_stage_s=reclaimed,
+                        clock=thief.sim_clock,
+                    )
+                )
+                return True
+
+    @staticmethod
+    def _victim_top_bucket(victim: CrossMatchEngine) -> Optional[int]:
+        peek = getattr(victim.scheduler, "peek_topk", None)
+        if peek is not None:
+            top = peek(victim.wm, victim.cache, victim.loop.clock, 1)
+            return top[0].bucket_id if top else None
+        queues = victim.wm.nonempty_queues()
+        if not queues:
+            return None
+        return max(queues, key=lambda q: (q.nbytes, -q.bucket_id)).bucket_id
+
+    # -- results / metrics -----------------------------------------------------
+    def collect_results(self) -> dict[int, list[MatchResult]]:
+        merged: dict[int, list[MatchResult]] = {}
+        for eng in self.engines:
+            for qid, lst in eng.results.items():
+                merged.setdefault(qid, []).extend(lst)
+        return merged
+
+    def response_times(self) -> dict[int, float]:
+        """Per-query latency: the slowest shard's completion (the join)."""
+        out: dict[int, float] = {}
+        for eng in self.engines:
+            for qid, t in eng.wm.response_times().items():
+                out[qid] = max(out.get(qid, 0.0), t)
+        return out
+
+    def summary(self) -> dict:
+        rt = self.response_times()
+        hits = sum(eng.cache.stats.hits for eng in self.engines)
+        accesses = sum(eng.cache.stats.accesses for eng in self.engines)
+        return {
+            "n_queries": len(rt),
+            "n_shards": self.n_shards,
+            "n_batches": sum(eng.batches for eng in self.engines),
+            "n_dispatches": sum(eng.dispatches for eng in self.engines),
+            "mean_response": float(np.mean(list(rt.values()))) if rt else 0.0,
+            "cache_hit_rate": hits / accesses if accesses else 0.0,
+            "makespan": max(eng.sim_clock for eng in self.engines),
+            "steals": len(self.steals),
         }

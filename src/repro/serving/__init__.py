@@ -1,5 +1,13 @@
-from .engine import AdapterSpec, AdapterWorkload, LifeRaftEngine, Request, ServeConfig
+from .engine import (
+    AdapterSpec,
+    AdapterWorkload,
+    LifeRaftEngine,
+    Request,
+    ServeConfig,
+    ShardedServingEngine,
+)
 from .kvcache import PagePool, SequenceAllocation
 
 __all__ = ["AdapterSpec", "AdapterWorkload", "LifeRaftEngine", "Request",
-           "ServeConfig", "PagePool", "SequenceAllocation"]
+           "ServeConfig", "ShardedServingEngine", "PagePool",
+           "SequenceAllocation"]

@@ -50,6 +50,7 @@ from ..core.dispatch import DispatchLoop
 from ..core.metrics import CostModel, dispatch_stats, per_tenant_latency
 from ..core.prefetch import PrefetchConfig, build_pipeline, prefetch_stats
 from ..core.scheduler import LifeRaftScheduler, RoundRobinScheduler
+from ..core.shard import ShardMap, StealConfig, StealEvent
 from ..core.spillq import SpillBookkeepingMixin, SpillQueue
 from ..core.workload import DEFAULT_TENANT
 
@@ -59,6 +60,7 @@ __all__ = [
     "ServeConfig",
     "AdapterWorkload",
     "LifeRaftEngine",
+    "ShardedServingEngine",
 ]
 
 
@@ -264,6 +266,33 @@ class AdapterWorkload(SpillBookkeepingMixin):
         if not q.spilled_requests:
             self._spilled.discard(adapter_id)
         self._notify(adapter_id)
+
+    # -- shard migration (work stealing) ---------------------------------------
+    def migrate_out(self, adapter_id: int) -> list[Request]:
+        """Drain one adapter's whole pending queue (resident prefix first,
+        then the spilled tail) for migration to another shard.  The queue
+        object is dropped — ``queue()`` recreates it lazily if the
+        adapter's future arrivals ever route back here."""
+        q = self.queues.pop(adapter_id, None)
+        if q is None:
+            return []
+        self._spilled.discard(adapter_id)
+        reqs = q.drain()
+        if reqs:
+            self._notify(adapter_id)
+        return reqs
+
+    def migrate_in(self, requests: list[Request]) -> list[Request]:
+        """Land migrated requests: resident, original arrival times (the
+        §6 spill state does not migrate — the thief's own control loop
+        re-spills under its budget if it must)."""
+        touched: set[int] = set()
+        for r in requests:
+            self.queue(r.adapter_id).push(r)
+            touched.add(r.adapter_id)
+        for a in touched:
+            self._notify(a)
+        return requests
 
     # -- scheduler-facing protocol ---------------------------------------------
     def nonempty_queues(self) -> list[_AdapterQueue]:
@@ -625,4 +654,178 @@ class LifeRaftEngine:
                 if self.loop.prefetch is not None
                 else {}
             ),
+        }
+
+
+class ShardedServingEngine:
+    """Multi-shard serving: S :class:`LifeRaftEngine` replicas, adapters
+    partitioned by weight bytes.
+
+    Here the shard key is the adapter id (serving's bucket): each
+    adapter's whole request queue lives on exactly one shard, so no
+    request ever needs a cross-shard join — routing is a lookup and
+    stealing migrates an adapter's entire pending queue.  Every replica
+    holds the full adapter spec table (identical ``T_b``); only the HBM
+    ``adapter_slots`` are split so aggregate cache stays equal to the
+    single-engine baseline.
+
+    The drive is virtual lockstep (the simulator's transport): the
+    least-clock shard with work steps next, idle shards at the steal
+    low-water mark take the byte-heaviest victim's top adapter —
+    scheduler state forgotten on the victim, in-flight weight stage
+    canceled for the residual channel time, requests landing resident
+    with original arrivals and the thief's clock advanced to the newest
+    one (no time travel, no free cache warmth).
+    """
+
+    def __init__(
+        self,
+        adapters: list[AdapterSpec],
+        config: ServeConfig = ServeConfig(),
+        n_shards: int = 2,
+        *,
+        shard_map: Optional[ShardMap] = None,
+        steal: Optional[StealConfig] = None,
+        decode_batch_fn: Optional[Callable] = None,
+    ) -> None:
+        self.n_shards = max(1, int(n_shards))
+        self.shard_map = shard_map or ShardMap.from_bucket_bytes(
+            {a.adapter_id: float(a.nbytes) for a in adapters}, self.n_shards
+        )
+        self.steal = steal
+        self.steals: list[StealEvent] = []
+        per_cfg = dataclasses.replace(
+            config, adapter_slots=max(1, config.adapter_slots // self.n_shards)
+        )
+        self.engines = [
+            LifeRaftEngine(adapters, per_cfg, decode_batch_fn=decode_batch_fn)
+            for _ in range(self.n_shards)
+        ]
+
+    # -- routing ---------------------------------------------------------------
+    def _owner(self, req: Request) -> LifeRaftEngine:
+        return self.engines[self.shard_map.shard_of(req.adapter_id)]
+
+    def submit(self, req: Request) -> None:
+        self._owner(req).submit(req)
+
+    # -- work stealing ---------------------------------------------------------
+    def _maybe_steal(self) -> None:
+        cfg = self.steal
+        if cfg is None or self.n_shards < 2:
+            return
+        for sid, thief in enumerate(self.engines):
+            if thief.workload.pending_bytes() > cfg.low_water_bytes:
+                continue
+            victims = [
+                (vid, v)
+                for vid, v in enumerate(self.engines)
+                if vid != sid
+                and len(v.workload.nonempty_queues()) >= cfg.min_victim_queues
+            ]
+            if not victims:
+                continue
+            vid, victim = max(
+                victims, key=lambda t: (t[1].workload.pending_bytes(), -t[0])
+            )
+            peek = getattr(victim.scheduler, "peek_topk", None)
+            if peek is not None:
+                top = peek(victim.workload, victim.cache, victim.clock, 1)
+                adapter = top[0].bucket_id if top else None
+            else:
+                queues = victim.workload.nonempty_queues()
+                adapter = (
+                    max(
+                        queues, key=lambda q: (q.nbytes, -q.bucket_id)
+                    ).bucket_id
+                    if queues
+                    else None
+                )
+            if adapter is None:
+                continue
+            reqs = victim.workload.migrate_out(adapter)
+            if not reqs:
+                continue
+            if hasattr(victim.scheduler, "forget"):
+                victim.scheduler.forget(adapter)
+            reclaimed = 0.0
+            if victim.loop.prefetch is not None:
+                reclaimed = victim.loop.prefetch.cancel(adapter, victim.clock)
+            thief.workload.migrate_in(reqs)
+            self.shard_map.reassign(adapter, sid)
+            newest = max(r.arrival_time for r in reqs)
+            thief.clock = max(thief.clock, newest)
+            thief.loop.observe_arrival(newest)
+            self.steals.append(
+                StealEvent(
+                    bucket_id=adapter,
+                    victim=vid,
+                    thief=sid,
+                    n_units=len(reqs),
+                    nbytes=float(
+                        sum(
+                            max(
+                                r.prompt_len * victim.workload.probe_bytes,
+                                victim.workload.min_unit_bytes,
+                            )
+                            for r in reqs
+                        )
+                    ),
+                    reclaimed_stage_s=reclaimed,
+                    clock=thief.clock,
+                )
+            )
+
+    # -- virtual lockstep drive ------------------------------------------------
+    def run(self, requests: list[Request]) -> dict:
+        pending = sorted(requests, key=lambda r: r.arrival_time)
+        i = 0
+        while True:
+            self._maybe_steal()
+            # Admit every arrival its owner's clock has reached.
+            while (
+                i < len(pending)
+                and pending[i].arrival_time <= self._owner(pending[i]).clock
+            ):
+                self.submit(pending[i])
+                i += 1
+            runnable = [
+                e for e in self.engines if e.workload.nonempty_queues()
+            ]
+            if runnable:
+                eng = min(
+                    runnable, key=lambda e: (e.clock, self.engines.index(e))
+                )
+                eng.step()
+                continue
+            if i < len(pending):
+                nxt = pending[i]
+                owner = self._owner(nxt)
+                owner.clock = max(owner.clock, nxt.arrival_time)
+                self.submit(nxt)
+                i += 1
+                continue
+            return self.summary()
+
+    # -- metrics ---------------------------------------------------------------
+    def summary(self) -> dict:
+        completed = [r for eng in self.engines for r in eng.completed]
+        resp = [r.finish_time - r.arrival_time for r in completed]
+        hits = sum(eng.cache.stats.hits for eng in self.engines)
+        accesses = sum(eng.cache.stats.accesses for eng in self.engines)
+        makespan = max(eng.clock for eng in self.engines)
+        tokens = sum(eng.tokens_served for eng in self.engines)
+        return {
+            "policy": f"{self.engines[0].cfg.policy}+S{self.n_shards}"
+            + ("st" if self.steal is not None else ""),
+            "n_shards": self.n_shards,
+            "n_completed": len(completed),
+            "makespan": makespan,
+            "token_throughput": tokens / max(makespan, 1e-9),
+            "request_throughput": len(completed) / max(makespan, 1e-9),
+            "mean_response": float(np.mean(resp)) if resp else 0.0,
+            "p95_response": float(np.percentile(resp, 95)) if resp else 0.0,
+            "cache_hit_rate": hits / accesses if accesses else 0.0,
+            "batches": sum(eng.batches for eng in self.engines),
+            "steals": len(self.steals),
         }

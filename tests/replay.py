@@ -81,13 +81,44 @@ class TraceRecorder:
         self.entries.append(entry)
 
 
+class ShardTraceRecorder(TraceRecorder):
+    """Recorder for the sharded coordinator: rounds interleave across
+    shard-local DispatchLoops, so each entry carries its ``shard`` id, and
+    steal migrations appear as their own in-order entries — the golden
+    pins the interleaving AND the steal schedule, not just per-shard
+    decisions."""
+
+    def on_round(self, shard_id: int, outcome) -> None:
+        self(outcome)
+        self.entries[-1]["shard"] = int(shard_id)
+
+    def on_steal(self, ev) -> None:
+        self.entries.append(
+            {
+                "steal": [
+                    int(ev.bucket_id),
+                    int(ev.victim),
+                    int(ev.thief),
+                    int(ev.n_units),
+                ]
+            }
+        )
+
+
 # --------------------------------------------------------------- diffing
 def _fmt(entry: dict) -> str:
+    if "steal" in entry:
+        b, v, t, n = entry["steal"]
+        return f"steal b{b}: shard {v} -> shard {t} ({n} units)"
     ds = ", ".join(
         f"b{b}:s={s!r}:c={int(c)}:n={n}" for b, s, c, n in entry["decisions"]
     )
     a, k, sp = entry["vector"]
-    return f"[{ds}] cost={entry['cost']!r} vec=(a={a!r},k={k},spill={int(sp)})"
+    shard = f" shard={entry['shard']}" if "shard" in entry else ""
+    return (
+        f"[{ds}] cost={entry['cost']!r}"
+        f" vec=(a={a!r},k={k},spill={int(sp)}){shard}"
+    )
 
 
 def diff_traces(expect: list[dict], got: list[dict]) -> list[str]:
@@ -102,7 +133,7 @@ def diff_traces(expect: list[dict], got: list[dict]) -> list[str]:
     for i, (e, g) in enumerate(zip(expect, got)):
         for field in (
             "decisions", "cost", "vector", "spill_changed", "stall",
-            "share_width",
+            "share_width", "shard", "steal",
         ):
             if e.get(field) != g.get(field):
                 out.append(
@@ -307,6 +338,74 @@ def sim_scenario(name: str) -> list[dict]:
     return rec.entries
 
 
+def shard_skew_trace(seed: int, n: int = 220, buckets: int = 48,
+                     gap: float = 0.01, depth_hi: int = 40):
+    """Skewed-depth trace for the steal scenarios: bucket popularity is
+    quadratically biased toward the low end of the SFC range, so the
+    shard owning that range floods while the rest drain — the imbalance
+    work stealing exists to fix."""
+    from repro.core import Query
+
+    rng = np.random.default_rng(seed)
+    qs, t = [], 0.0
+    for qid in range(n):
+        t += float(rng.exponential(gap))
+        b = int(rng.integers(0, buckets)) ** 2 // buckets
+        ks = np.full(int(rng.integers(1, depth_hi)), b, dtype=np.uint64)
+        qs.append(Query(qid, t, ks, ks))
+    return qs
+
+
+def shard_scenario(name: str) -> list[dict]:
+    """Multi-shard coordinator scenarios (``simulate_sharded``): the
+    golden pins the cross-shard round interleaving, every shard-local
+    decision, and (for the steal scenario) the migration schedule."""
+    from repro.core import (
+        ControlConfig, ControlLoop, CostModel, LifeRaftScheduler,
+        ShardControlPlane, StealConfig, simulate_sharded,
+    )
+
+    rec = ShardTraceRecorder()
+    if name == "sim_shard4":
+        # Four shards, per-shard closed loops, the global plane
+        # waterfilling the §6 byte budget across shards: the steady
+        # multi-shard configuration the bench gates.
+        cost = CostModel(T_b=0.08, T_m=2e-4, T_spill=0.2, probe_bytes=8.0)
+        simulate_sharded(
+            sim_trace(67, n=200, buckets=64, gap=0.015, depth_hi=30),
+            _identity_range, cost,
+            scheduler_factory=lambda: LifeRaftScheduler(
+                cost, 0.5, normalized=True
+            ),
+            n_shards=4, cache_capacity=8, fuse_k=2,
+            control_factory=lambda: ControlLoop(ControlConfig(
+                alpha_init=0.5, alpha_step=0.2, halflife_s=2.0,
+                rate_knee=12.0, depth_knee=1_200.0, fuse_k_max=3,
+                spill_budget_bytes=4_000.0,
+            )),
+            plane=ShardControlPlane(4, spill_budget_bytes=8_000.0),
+            on_round=rec.on_round,
+        )
+    elif name == "sim_shard_steal":
+        # Skewed load + work stealing: drained shards migrate the hot
+        # shard's top buckets.  The golden must contain at least one
+        # steal entry (asserted in tests/test_shard.py) or it guards
+        # nothing.
+        cost = CostModel(T_b=0.08, T_m=2e-4, T_spill=0.2, probe_bytes=8.0)
+        simulate_sharded(
+            shard_skew_trace(71), _identity_range, cost,
+            scheduler_factory=lambda: LifeRaftScheduler(
+                cost, 0.5, normalized=True
+            ),
+            n_shards=4, cache_capacity=8, fuse_k=2,
+            steal=StealConfig(low_water_bytes=0.0),
+            on_round=rec.on_round, on_steal=rec.on_steal,
+        )
+    else:
+        raise ValueError(name)
+    return rec.entries
+
+
 def serving_scenario(name: str) -> list[dict]:
     """Serving-engine DispatchLoop scenarios (virtual-clock decode)."""
     from repro.serving import AdapterSpec, LifeRaftEngine, Request, ServeConfig
@@ -415,6 +514,8 @@ SCENARIOS = {
     "sim_spill_paged": lambda: sim_scenario("sim_spill_paged"),
     "sim_prefetch": lambda: sim_scenario("sim_prefetch"),
     "sim_sharedplan": lambda: sim_scenario("sim_sharedplan"),
+    "sim_shard4": lambda: shard_scenario("sim_shard4"),
+    "sim_shard_steal": lambda: shard_scenario("sim_shard_steal"),
     "serving_static": lambda: serving_scenario("serving_static"),
     "serving_adaptive": lambda: serving_scenario("serving_adaptive"),
     "serving_spill_paged": lambda: serving_scenario("serving_spill_paged"),

@@ -1,0 +1,308 @@
+"""Multi-shard execution tier: routing, stealing, joins, and the S=1
+proof obligation.
+
+The tentpole claim is composability: ``simulate_sharded`` with one shard
+must replay the single-loop simulator *bit-identically* (same executor
+arithmetic, same round sequence), and with S shards plus stealing it must
+complete exactly the same query set — never losing or double-counting a
+completion across a migration.  The hypothesis property here drives that
+join invariant over random traces, shard counts, and steal schedules; the
+unit tests pin the migration bookkeeping and the per-shard starvation
+bound; the golden assertions keep the recorded steal scenario honest.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import replay
+from repro.core import (
+    ControlConfig,
+    ControlLoop,
+    CostModel,
+    LifeRaftScheduler,
+    Query,
+    ShardControlPlane,
+    ShardMap,
+    StealConfig,
+    WorkloadManager,
+    simulate_batched,
+    simulate_sharded,
+    waterfill,
+)
+
+
+def _identity_range(lo, hi):
+    return np.arange(lo, hi + 1)
+
+
+def _trace(seed, n=80, buckets=32, gap=0.03, depth_hi=24, skew=False):
+    rng = np.random.default_rng(seed)
+    qs, t = [], 0.0
+    for qid in range(n):
+        t += float(rng.exponential(gap))
+        b = int(rng.integers(0, buckets))
+        if skew:
+            b = b * b // buckets
+        ks = np.full(int(rng.integers(1, depth_hi)), b, dtype=np.uint64)
+        qs.append(Query(qid, t, ks, ks))
+    return qs
+
+
+# ------------------------------------------------------------------ ShardMap
+class TestShardMap:
+    def test_byte_balanced_cuts_cover_every_bucket(self):
+        bb = {b: float(1 + (b % 5)) for b in range(40)}
+        sm = ShardMap.from_bucket_bytes(bb, 4)
+        owned = {s: [] for s in sm.shards()}
+        for b in bb:
+            owned[sm.shard_of(b)].append(b)
+        assert sorted(sum(owned.values(), [])) == sorted(bb)
+        # SFC ranges: each shard owns a contiguous id run
+        for ids in owned.values():
+            assert ids == list(range(min(ids), max(ids) + 1))
+        # the greedy target keeps the heaviest shard within one bucket
+        # of the mean load
+        loads = [sum(bb[b] for b in ids) for ids in owned.values()]
+        assert max(loads) <= sum(bb.values()) / 4 + max(bb.values())
+
+    def test_reassign_overrides_and_clears(self):
+        sm = ShardMap.uniform(12, 3)
+        home = sm.shard_of(5)
+        other = (home + 1) % 3
+        sm.reassign(5, other)
+        assert sm.shard_of(5) == other
+        sm.reassign(5, home)  # back home: override dropped, not stacked
+        assert sm.shard_of(5) == home
+        assert 5 not in sm.overrides
+
+    def test_more_shards_than_buckets_still_partitions(self):
+        sm = ShardMap.from_bucket_bytes({0: 1.0, 1: 1.0}, 4)
+        assert {sm.shard_of(0), sm.shard_of(1)} <= set(sm.shards())
+
+
+# ----------------------------------------------------------------- waterfill
+class TestWaterfill:
+    def test_grants_sum_to_budget_and_cap_at_demand(self):
+        demand = {0: 100.0, 1: 400.0, 2: 50.0}
+        g = waterfill(demand, {}, 300.0)
+        assert sum(g.values()) == pytest.approx(300.0)
+        for s, d in demand.items():
+            assert g[s] <= d + 1e-9
+
+    def test_weights_tilt_the_fill(self):
+        demand = {0: 500.0, 1: 500.0}
+        g = waterfill(demand, {0: 3.0, 1: 1.0}, 400.0)
+        assert g[0] == pytest.approx(300.0)
+        assert g[1] == pytest.approx(100.0)
+
+    def test_slack_from_satisfied_redistributes(self):
+        demand = {0: 10.0, 1: 1000.0}
+        g = waterfill(demand, {}, 500.0)
+        assert g[0] == pytest.approx(10.0)
+        assert g[1] == pytest.approx(490.0)
+
+
+# ---------------------------------------------------- the S=1 proof obligation
+class TestSingleShardBitIdentity:
+    """simulate_sharded(S=1) must equal simulate_batched round for round —
+    replayed against the committed goldens, not just against a fresh
+    oracle run."""
+
+    def _sharded_entries(self, golden_name):
+        rec = replay.ShardTraceRecorder()
+        if golden_name == "sim_raw_fused":
+            cost = CostModel(T_b=0.8, T_m=2e-4)
+            simulate_sharded(
+                replay.sim_trace(11), _identity_range, cost,
+                scheduler_factory=lambda: LifeRaftScheduler(cost, alpha=0.25),
+                n_shards=1, cache_capacity=8, fuse_k=3,
+                on_round=rec.on_round,
+            )
+        elif golden_name == "sim_norm_ctl":
+            cost = CostModel(T_b=0.8, T_m=2e-4)
+            simulate_sharded(
+                replay.sim_trace(23, n=180, buckets=90, gap=0.02),
+                _identity_range, cost,
+                scheduler_factory=lambda: LifeRaftScheduler(
+                    cost, alpha=0.5, normalized=True
+                ),
+                n_shards=1, cache_capacity=8,
+                control_factory=lambda: ControlLoop(ControlConfig(
+                    alpha_init=0.5, alpha_step=0.2, halflife_s=3.0,
+                    rate_knee=6.0, depth_knee=500.0, fuse_k_max=4,
+                )),
+                on_round=rec.on_round,
+            )
+        else:
+            raise ValueError(golden_name)
+        entries = rec.entries
+        for e in entries:
+            e.pop("shard", None)  # the golden predates the shard axis
+        return entries
+
+    @pytest.mark.parametrize("name", ["sim_raw_fused", "sim_norm_ctl"])
+    def test_single_shard_replays_golden_bit_identically(self, name):
+        expect = replay.load_trace(replay.GOLDEN_DIR / f"{name}.json")
+        got = self._sharded_entries(name)
+        divergence = replay.diff_traces(expect, got)
+        assert not divergence, "\n".join(divergence)
+
+
+# ------------------------------------------------------- completion invariant
+class TestCompletionJoin:
+    @given(st.integers(0, 10_000), st.integers(1, 4), st.integers(0, 1))
+    @settings(max_examples=20, deadline=None)
+    def test_sharded_completions_equal_single_shard(self, seed, S, stealing):
+        """The join invariant: same queries, any shard count, any steal
+        schedule -> the completed-query set equals the single-loop run's,
+        with every query completed exactly once."""
+        cost = CostModel(T_b=0.08, T_m=2e-4, T_spill=0.2, probe_bytes=8.0)
+        qs = _trace(seed, skew=bool(stealing))
+        base = simulate_batched(
+            qs, _identity_range,
+            LifeRaftScheduler(cost, alpha=0.3), cost, cache_capacity=8,
+        )
+        done: dict[int, int] = {}
+        r = simulate_sharded(
+            qs, _identity_range, cost,
+            scheduler_factory=lambda: LifeRaftScheduler(cost, alpha=0.3),
+            n_shards=S, cache_capacity=8,
+            steal=StealConfig(low_water_bytes=0.0) if stealing else None,
+            on_steal=lambda ev: None,
+        )
+        assert r.n_queries == base.n_queries == len(qs)
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_steal_never_loses_or_duplicates(self, seed):
+        """Every query completes exactly once even when the steal schedule
+        migrates its buckets mid-flight (tracked via on_round completions
+        through the coordinator's own response map)."""
+        cost = CostModel(T_b=0.08, T_m=2e-4, T_spill=0.2, probe_bytes=8.0)
+        qs = _trace(seed, n=60, skew=True)
+        steals = []
+        r = simulate_sharded(
+            qs, _identity_range, cost,
+            scheduler_factory=lambda: LifeRaftScheduler(cost, alpha=0.3),
+            n_shards=3, cache_capacity=6,
+            steal=StealConfig(low_water_bytes=0.0),
+            on_steal=steals.append,
+        )
+        assert r.n_queries == len(qs)
+        assert r.steals == len(steals)
+
+
+# ----------------------------------------------------------- migration units
+class TestMigration:
+    def _wm(self, cost):
+        return WorkloadManager(
+            _identity_range, probe_bytes=cost.probe_bytes,
+            min_unit_bytes=cost.min_unit_bytes,
+        )
+
+    def test_units_conserved_across_a_migration(self):
+        cost = CostModel(probe_bytes=8.0)
+        src, dst = self._wm(cost), self._wm(cost)
+        ks = np.array([3, 3, 7], dtype=np.uint64)
+        q = Query(1, 0.5, ks, ks)
+        src.submit(q)
+        before = {b: qq.size for b, qq in src.queues.items() if qq}
+        units = src.migrate_out(3)
+        # bucket 3 left the source: not pending, not completed
+        assert 3 not in {b for b, qq in src.queues.items() if qq}
+        assert src.outstanding[1] == {7}
+        assert 1 not in src.completed
+        assert sum(u.size for u in units) == before[3]
+        nbytes = sum(u.nbytes for u in units)
+        dst.migrate_in(units, {1: q})
+        assert dst.queue(3).size == before[3]
+        assert dst.queue(3).nbytes == pytest.approx(nbytes)
+        assert dst.outstanding[1] == {3}
+        # arrival times survive the move (ages stay honest on the thief)
+        assert all(u.arrival_time == 0.5 for u in dst.queue(3).units)
+
+    def test_migrated_probe_indices_stay_valid(self):
+        """Object indices index the ORIGINAL query arrays; migration must
+        not rebase them (the thief gathers probes from the same payload)."""
+        cost = CostModel(probe_bytes=8.0)
+        src, dst = self._wm(cost), self._wm(cost)
+        ks = np.array([9, 2, 9, 2, 9], dtype=np.uint64)
+        q = Query(4, 0.0, ks, ks)
+        src.submit(q)
+        units = src.migrate_out(9)
+        dst.migrate_in(units, {4: q})
+        idx = np.concatenate([u.object_idx for u in dst.queue(9).units])
+        assert sorted(idx.tolist()) == [0, 2, 4]
+
+    def test_migrate_out_empty_bucket_is_noop(self):
+        cost = CostModel()
+        src = self._wm(cost)
+        assert src.migrate_out(123) == []
+
+
+# ------------------------------------------------------ per-shard starvation
+class TestPerShardStarvation:
+    """The §6 bound survives sharding: each shard runs its own tenant
+    plane over its slice of the flood, so no interactive query ages past
+    the same age_scale-derived horizon that holds at S=1."""
+
+    ALPHA_MIN = 0.7
+    ROUND_SLACK_S = 0.7
+
+    def test_bound_holds_on_every_shard(self):
+        cost = CostModel(T_b=0.08, T_m=2e-4, T_spill=0.1, probe_bytes=16.0)
+        bound = cost.age_scale_ms / 1e3 / self.ALPHA_MIN + self.ROUND_SLACK_S
+        qs = replay.two_tenant_trace(
+            41, horizon=10.0, flood_gap=0.03, depth_lo=60, depth_hi=120
+        )
+        r = simulate_sharded(
+            qs, _identity_range, cost,
+            scheduler_factory=lambda: LifeRaftScheduler(
+                cost, 0.5, normalized=True
+            ),
+            n_shards=2, cache_capacity=8,
+            control_factory=lambda: replay.two_tenant_plane(60_000.0),
+        )
+        stats = r.per_tenant["interactive"]
+        assert stats["n"] > 0
+        assert stats["max_response"] <= bound, (stats, bound)
+
+
+# -------------------------------------------------------------- golden teeth
+class TestStealGolden:
+    def test_steal_golden_actually_exercises_a_migration(self):
+        """A steal golden with no steal entries guards nothing."""
+        rounds = replay.load_trace(replay.GOLDEN_DIR / "sim_shard_steal.json")
+        steals = [e for e in rounds if "steal" in e]
+        assert steals, "sim_shard_steal.json recorded zero migrations"
+        for b, victim, thief, n_units in (e["steal"] for e in steals):
+            assert victim != thief
+            assert n_units > 0
+
+    def test_shard_golden_interleaves_all_shards(self):
+        rounds = replay.load_trace(replay.GOLDEN_DIR / "sim_shard4.json")
+        assert {e["shard"] for e in rounds if "shard" in e} == {0, 1, 2, 3}
+
+
+# -------------------------------------------------------- global byte arbiter
+class TestShardControlPlane:
+    def test_grants_waterfill_across_shards(self):
+        from repro.core.control import Telemetry
+
+        plane = ShardControlPlane(3, spill_budget_bytes=600.0)
+        tels = {
+            s: Telemetry(
+                now=1.0, arrival_rate=0.0, pending_objects=0,
+                resident_objects=0, n_queues=1, oldest_age_ms=0.0,
+                cache_hit_rate=0.0, occupancy=0.0,
+                pending_bytes=pb, resident_bytes=pb,
+            )
+            for s, pb in {0: 100.0, 1: 1000.0, 2: 100.0}.items()
+        }
+        grants = plane.update(tels)
+        assert sum(g.spill_bytes for g in grants.values()) == pytest.approx(
+            600.0
+        )
+        assert grants[0].spill_bytes == pytest.approx(100.0)
+        assert grants[2].spill_bytes == pytest.approx(100.0)
+        assert grants[1].spill_bytes == pytest.approx(400.0)
