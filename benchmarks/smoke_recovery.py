@@ -1,0 +1,216 @@
+"""Kill -9 recovery smoke for the durable service tier.
+
+The headline durability gate, as a runnable check:
+
+1. run the serving daemon's driver uninterrupted in-process → golden
+   decision log;
+2. spawn a child process running the SAME driver over a write-ahead
+   journal, throttled on the wall clock so the flood takes a few seconds;
+3. ``SIGKILL`` the child mid-flood (no atexit, no flushing grace);
+4. recover a fresh daemon over the killed journal and re-run the driver;
+5. assert every submission the child acked completes, and the recovered
+   decision log is **bit-identical** to the uninterrupted golden.
+
+On failure the journal directory is left in place (CI uploads it as an
+artifact); on success it is removed.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.smoke_recovery            # full smoke
+    PYTHONPATH=src python -m benchmarks.smoke_recovery --n 60     # quicker
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import shutil
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+
+_REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+# ---------------------------------------------------------------- scenario
+def _adapters():
+    from repro.serving import AdapterSpec
+
+    return [
+        AdapterSpec(
+            a,
+            nbytes=(a + 1) * 1_000_000,
+            tenant="interactive" if a % 2 else "batch",
+        )
+        for a in range(8)
+    ]
+
+
+def _trace(n: int):
+    from repro.serving import Request
+
+    return [
+        Request(
+            request_id=i,
+            adapter_id=(i * 5) % 8,
+            arrival_time=0.01 * i,
+            prompt_len=32 + (i % 7) * 16,
+            max_new_tokens=48,
+        )
+        for i in range(n)
+    ]
+
+
+def build_daemon(journal_dir):
+    from repro.serving import (
+        LifeRaftEngine,
+        ServeConfig,
+        ServiceDaemon,
+        ServingHost,
+    )
+
+    cfg = ServeConfig(adapter_slots=5, fuse_k=2, adaptive=True)
+    return ServiceDaemon(
+        ServingHost(LifeRaftEngine(_adapters(), cfg)), journal_dir
+    )
+
+
+def drive(daemon, requests, throttle_s: float = 0.0) -> None:
+    """The daemon driver: decode up to each arrival, then durably submit.
+    ``throttle_s`` slows the *wall* clock only — the virtual clock, and
+    therefore every decision, is unaffected."""
+    for r in requests:
+        daemon.pump(until=r.arrival_time)
+        daemon.submit(r)
+        if throttle_s:
+            time.sleep(throttle_s)
+    daemon.pump()
+
+
+# ---------------------------------------------------------------- child
+def run_child(journal_dir, n: int, throttle_s: float) -> int:
+    daemon = build_daemon(journal_dir)
+    drive(daemon, _trace(n), throttle_s)
+    daemon.close()
+    return 0
+
+
+# ---------------------------------------------------------------- parent
+def run_parent(journal_dir, n: int, throttle_s: float,
+               keep: bool = False) -> int:
+    from repro.core import diff_entries
+
+    journal_dir = pathlib.Path(journal_dir).resolve()
+    if journal_dir.exists():
+        shutil.rmtree(journal_dir)
+
+    # 1. uninterrupted golden, in-process
+    golden_dir = tempfile.mkdtemp(prefix="smoke-recovery-golden-")
+    golden = build_daemon(golden_dir)
+    drive(golden, _trace(n))
+    golden.close()
+    shutil.rmtree(golden_dir)
+    print(
+        f"golden: {len(golden.entries)} rounds, "
+        f"{len(golden.completed())} completed"
+    )
+
+    # 2. throttled child over the real journal
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    child = subprocess.Popen(
+        [
+            sys.executable, "-m", "benchmarks.smoke_recovery", "--child",
+            "--dir", str(journal_dir), "--n", str(n),
+            "--throttle", str(throttle_s),
+        ],
+        cwd=str(_REPO),
+        env=env,
+    )
+
+    # 3. SIGKILL once the journal shows a healthy mid-flood prefix
+    def journal_bytes() -> int:
+        if not journal_dir.exists():
+            return 0
+        return sum(p.stat().st_size for p in journal_dir.glob("seg-*.jsonl"))
+
+    deadline = time.time() + 120.0
+    target = 2_000  # a handful of acked submissions + rounds
+    while (
+        time.time() < deadline
+        and child.poll() is None
+        and journal_bytes() < target
+    ):
+        time.sleep(0.01)
+    if child.poll() is None:
+        os.kill(child.pid, signal.SIGKILL)
+        child.wait()
+        print(f"killed child mid-flood at {journal_bytes()} journal bytes")
+    else:
+        print("child exited before the kill; recovery still exercised")
+
+    # 4. recover + finish the trace with the same driver
+    recovered = build_daemon(journal_dir)
+    acked_in_journal = set(recovered.acked)
+    print(
+        f"recovered: {len(recovered.entries)} rounds replayed, "
+        f"{len(acked_in_journal)} acked submissions"
+    )
+    drive(recovered, _trace(n))
+    recovered.close()
+
+    # 5. the gate
+    failures = []
+    diff = diff_entries(golden.entries, recovered.entries)
+    if diff:
+        failures.append(
+            "decision log diverged from the uninterrupted run:\n"
+            + "\n".join(diff)
+        )
+    completed = recovered.completed()
+    missing = sorted(
+        k for k in acked_in_journal
+        if int(k.rsplit("-", 1)[1]) not in completed
+    )
+    if missing:
+        failures.append(f"acked but never completed: {missing[:10]}")
+    if failures:
+        print("FAIL: kill -9 recovery smoke", file=sys.stderr)
+        for f in failures:
+            print(f, file=sys.stderr)
+        print(
+            f"journal left at {journal_dir} for inspection", file=sys.stderr
+        )
+        return 1
+    print(
+        f"OK: {len(acked_in_journal)} acked pre-kill, "
+        f"{len(completed)} completed post-recovery, decisions bit-identical"
+    )
+    if not keep:
+        shutil.rmtree(journal_dir)
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--child", action="store_true",
+                    help="internal: run the to-be-killed driver")
+    ap.add_argument("--dir", default="smoke_recovery_journal",
+                    help="journal directory (left behind on failure)")
+    ap.add_argument("--n", type=int, default=150, help="trace length")
+    ap.add_argument("--throttle", type=float, default=0.02,
+                    help="child wall-clock delay per submission (s)")
+    ap.add_argument("--keep", action="store_true",
+                    help="keep the journal directory on success too")
+    args = ap.parse_args(argv)
+    if args.child:
+        return run_child(args.dir, args.n, args.throttle)
+    return run_parent(args.dir, args.n, args.throttle, keep=args.keep)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,6 +37,9 @@ from .metrics import (
 )
 from .adaptive import AlphaController, SaturationEstimator, TradeoffPoint, TradeoffTable
 from .control import (
+    AdmissionController,
+    AdmissionQuota,
+    AdmissionRejected,
     ControlConfig,
     ControlLoop,
     ControlVector,
@@ -48,6 +51,17 @@ from .control import (
     apply_spill,
     unspill_price,
     waterfill,
+)
+from .journal import (
+    TRACE_SCHEMA_VERSION,
+    Journal,
+    JournalCorrupt,
+    diff_entries,
+    encode_outcome,
+    encode_steal,
+    format_entry,
+    load_trace,
+    save_trace,
 )
 from .dispatch import DispatchLoop, DispatchOutcome
 from .prefetch import PrefetchConfig, PrefetchPipeline, build_pipeline
@@ -65,6 +79,7 @@ from .shard import (
     ShardedDispatch,
     StealConfig,
     StealEvent,
+    split_slots,
 )
 from .simulate import (
     SimResult,
@@ -97,6 +112,9 @@ __all__ = [
     "SaturationEstimator",
     "TradeoffPoint",
     "TradeoffTable",
+    "AdmissionController",
+    "AdmissionQuota",
+    "AdmissionRejected",
     "ControlConfig",
     "ControlLoop",
     "ControlVector",
@@ -126,6 +144,16 @@ __all__ = [
     "ShardedDispatch",
     "StealConfig",
     "StealEvent",
+    "split_slots",
+    "TRACE_SCHEMA_VERSION",
+    "Journal",
+    "JournalCorrupt",
+    "diff_entries",
+    "encode_outcome",
+    "encode_steal",
+    "format_entry",
+    "load_trace",
+    "save_trace",
     "SimResult",
     "run_policy",
     "simulate_batched",

@@ -60,6 +60,9 @@ __all__ = [
     "TenantControlPlane",
     "ShardGrant",
     "ShardControlPlane",
+    "AdmissionQuota",
+    "AdmissionRejected",
+    "AdmissionController",
     "apply_spill",
     "unspill_price",
     "waterfill",
@@ -307,6 +310,108 @@ class ControlLoop:
             self._spilling = False
         return self._spilling
 
+    # -- state snapshot -----------------------------------------------------------
+    def state(self) -> dict:
+        """Plain-data view of the loop's evolving law state (everything a
+        future ``update`` depends on besides the telemetry), for the
+        durability tier's replayed-state == live-state assertions."""
+        return {
+            "alpha": self._alpha,
+            "fuse_k": self._fuse_k,
+            "share_width": self._share_width,
+            "horizon": self._horizon,
+            "depth_ewma": self._depth_ewma,
+            "spilling": self._spilling,
+            "rounds": self.rounds,
+            "rate": self.estimator.rate,
+        }
+
+
+# --------------------------------------------------------------------------
+# Per-tenant admission control (ahead of the spill path)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AdmissionQuota:
+    """One tenant class's intake limits, checked at submit time — *before*
+    work enters the workload manager.  §6 spill absorbs overload that is
+    already admitted; admission control is the layer that refuses overload
+    at the door (CasJobs-style: a batch service says 429, it does not
+    queue unboundedly).  ``None`` disables a dimension."""
+
+    max_queue_depth: Optional[int] = None  # pending objects, both sides
+    max_pending_bytes: Optional[float] = None  # pending probe bytes
+
+
+class AdmissionRejected(Exception):
+    """429-style typed rejection raised by ``submit`` when a tenant's
+    quota would be exceeded.  Carries enough to journal the decision and
+    re-raise it bit-identically on replay."""
+
+    status = 429
+
+    def __init__(
+        self, tenant: str, reason: str, observed: float, limit: float
+    ) -> None:
+        self.tenant = tenant
+        self.reason = reason  # "queue_depth" | "pending_bytes"
+        self.observed = observed
+        self.limit = limit
+        super().__init__(
+            f"tenant {tenant!r} over {reason} quota: "
+            f"{observed!r} + submission > {limit!r}"
+        )
+
+
+class AdmissionController:
+    """Per-tenant-class quota check.  ``quotas`` maps tenant -> quota;
+    ``default`` applies to unlisted tenants (``None``: unlisted tenants
+    are unlimited).  Deterministic: the verdict is a pure function of the
+    tenant's current pending state and the submission's size, so a
+    journal replay reproduces every rejection exactly."""
+
+    def __init__(
+        self,
+        quotas: Optional[Mapping[str, AdmissionQuota]] = None,
+        default: Optional[AdmissionQuota] = None,
+    ) -> None:
+        self.quotas = dict(quotas or {})
+        self.default = default
+
+    def quota_for(self, tenant: str) -> Optional[AdmissionQuota]:
+        return self.quotas.get(tenant, self.default)
+
+    def check(
+        self,
+        tenant: str,
+        pending_objects: int,
+        pending_bytes: float,
+        add_objects: int = 1,
+        add_bytes: float = 0.0,
+    ) -> None:
+        """Raise :class:`AdmissionRejected` iff admitting a submission of
+        ``add_objects``/``add_bytes`` would push the tenant past its
+        quota.  Admission counts *total* pending state (resident +
+        spilled): spilling must not launder quota headroom."""
+        quota = self.quota_for(tenant)
+        if quota is None:
+            return
+        if (
+            quota.max_queue_depth is not None
+            and pending_objects + add_objects > quota.max_queue_depth
+        ):
+            raise AdmissionRejected(
+                tenant, "queue_depth", float(pending_objects),
+                float(quota.max_queue_depth),
+            )
+        if (
+            quota.max_pending_bytes is not None
+            and pending_bytes + add_bytes > quota.max_pending_bytes
+        ):
+            raise AdmissionRejected(
+                tenant, "pending_bytes", float(pending_bytes),
+                float(quota.max_pending_bytes),
+            )
+
 
 def unspill_price(q, cost, now: Optional[float] = None) -> float:
     """The §6 wait-cost-per-byte of leaving queue ``q`` spilled — the
@@ -517,11 +622,16 @@ def waterfill(
     Parties demanding less than their weighted share are granted their
     demand; the freed headroom is re-shared (by weight) among the
     still-unsatisfied parties until none remain, and any final slack is
-    distributed (by weight) on top of every grant so the grants always
-    sum to *exactly* the budget.  The slack matters: it is the headroom
-    that lets a previously spilling party's low-water disengage test
-    (``pending <= grant * low_water``) pass once global pressure subsides
-    — a grant capped at demand can never satisfy it.  Invariants:
+    distributed (by weight) on top of the grants of parties with *nonzero*
+    demand, so the grants always sum to *exactly* the budget.  The slack
+    matters: it is the headroom that lets a previously spilling party's
+    low-water disengage test (``pending <= grant * low_water``) pass once
+    global pressure subsides — a grant capped at demand can never satisfy
+    it.  Zero-demand parties are excluded from slack (their share is
+    re-shared among the demanders): an idle shard/tenant granted phantom
+    bytes would carry inflated low-water headroom into its next engaged
+    round.  Only when *every* party is zero-demand does the slack fall
+    back to all of them, preserving the sum invariant.  Invariants:
     sum(grants) == budget (work-conserving), every grant >= its party's
     satisfied demand.  Missing weights default to 1.0.
     """
@@ -546,12 +656,13 @@ def waterfill(
             remaining -= demand[t]
             active.discard(t)
     if remaining > 0.0 and grants:
-        wsum = sum(weights.get(t, 1.0) for t in grants)
-        for t in grants:
+        takers = [t for t in grants if demand[t] > 0.0] or list(grants)
+        wsum = sum(weights.get(t, 1.0) for t in takers)
+        for t in takers:
             grants[t] += (
                 remaining * weights.get(t, 1.0) / wsum
                 if wsum > 0.0
-                else remaining / len(grants)
+                else remaining / len(takers)
             )
     return grants
 

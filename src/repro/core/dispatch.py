@@ -130,6 +130,25 @@ class DispatchLoop:
                 lambda b: q.size if (q := wm.queues.get(b)) else 0
             )
 
+    # -- decision-log taps --------------------------------------------------------
+    def add_round_tap(
+        self, fn: Callable[[DispatchOutcome], None]
+    ) -> Callable[[DispatchOutcome], None]:
+        """Chain a second ``on_round`` consumer.  The write-ahead journal
+        tap (serving/daemon.py) rides alongside a golden-trace recorder
+        this way — neither clobbers the other; existing taps fire first,
+        in installation order.  Returns ``fn``."""
+        prev = self.on_round
+        if prev is None:
+            self.on_round = fn
+        else:
+            def chained(outcome, _prev=prev, _fn=fn):
+                _prev(outcome)
+                _fn(outcome)
+
+            self.on_round = chained
+        return fn
+
     # -- executor-side sensor ----------------------------------------------------
     def note_device_dispatches(
         self, n: int, shared_occupancy: Optional[float] = None

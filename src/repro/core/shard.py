@@ -58,7 +58,21 @@ __all__ = [
     "StealEvent",
     "ShardRuntime",
     "ShardedDispatch",
+    "split_slots",
 ]
+
+
+def split_slots(total: int, n_shards: int) -> list[int]:
+    """Split ``total`` capacity slots across ``n_shards``, conserving the
+    aggregate: the first ``total % n_shards`` shards get one extra slot
+    (plain ``total // n_shards`` silently drops the remainder).  Each
+    share is floored at 1 so every shard stays runnable — when
+    ``total < n_shards`` the aggregate is inflated to ``n_shards``, the
+    minimum that keeps all shards live."""
+    n_shards = max(1, int(n_shards))
+    total = int(total)
+    base, rem = divmod(total, n_shards)
+    return [max(1, base + (1 if s < rem else 0)) for s in range(n_shards)]
 
 
 class ShardMap:

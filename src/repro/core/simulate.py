@@ -28,7 +28,13 @@ from .scheduler import (
     NaiveLifeRaftScheduler,
     RoundRobinScheduler,
 )
-from .shard import ShardedDispatch, ShardMap, ShardRuntime, StealConfig
+from .shard import (
+    ShardedDispatch,
+    ShardMap,
+    ShardRuntime,
+    StealConfig,
+    split_slots,
+)
 from .workload import Query, WorkloadManager
 
 __all__ = [
@@ -329,8 +335,9 @@ def simulate_sharded(
     ``bucket_bytes``, or an equal split when neither is given); each query
     is decomposed once and its slices routed to the owning shards, with
     completion a join over per-shard completions.  ``cache_capacity`` is
-    the **aggregate** across shards — each shard gets ``capacity // S``
-    slots, so an S-vs-1 comparison holds total cache bytes equal.
+    the **aggregate** across shards — slots are split evenly with the
+    remainder going to the lowest shard ids (``split_slots``), so an
+    S-vs-1 comparison holds total cache slots equal.
     ``scheduler_factory`` / ``control_factory`` build one instance per
     shard (schedulers and control loops hold per-workload state and
     cannot be shared).  ``steal`` enables work stealing; ``plane`` wires
@@ -368,14 +375,14 @@ def simulate_sharded(
         on_steal=on_steal, on_round=on_round,
     )
     state = _ExecState()
-    per_cap = max(1, cache_capacity // max(1, n_shards))
+    caps = split_slots(cache_capacity, n_shards)
     runtimes: list[ShardRuntime] = []
     for sid in range(n_shards):
         wm = WorkloadManager(
             bucket_of_range, bucket_of_keys, probe_bytes=cost.probe_bytes,
             min_unit_bytes=cost.min_unit_bytes,
         )
-        cache = BucketCache(per_cap)
+        cache = BucketCache(caps[sid])
         sched = scheduler_factory()
         loop_box: list = []
         execute = _make_executor(

@@ -324,6 +324,26 @@ class SpillQueue(Generic[T]):
     def __bool__(self) -> bool:
         return self._size > 0
 
+    # -- state snapshot -----------------------------------------------------------
+    def snapshot(self, describe: Optional[Callable[[T], object]] = None) -> dict:
+        """Plain-data view of the queue's full state — both sides in
+        stored order plus the O(1) tallies.  ``describe`` maps an item to
+        a JSON-comparable key (defaults to ``repr``).  Used by the
+        durability tier to assert journal-replayed state equals live state
+        (resident/spilled membership AND order matter: the spill boundary
+        and the paged-unspill merge order are part of the decision
+        state)."""
+        describe = describe or repr
+        return {
+            "bucket": self.bucket_id,
+            "resident": [describe(x) for x in self.resident],
+            "spilled": [describe(x) for x in self.spilled],
+            "size": self._size,
+            "bytes": self._bytes,
+            "spilled_size": self._spilled_size,
+            "spilled_bytes": self._spilled_bytes,
+        }
+
 
 class SpillBookkeepingMixin:
     """Manager-side §6 bookkeeping over a dict of SpillQueue buckets —

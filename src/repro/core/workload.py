@@ -369,6 +369,53 @@ class WorkloadManager(SpillBookkeepingMixin):
     def spilled_bytes(self) -> float:
         return sum(q.spilled_bytes for q in self.queues.values() if q)
 
+    def tenant_pending(self, tenant: str) -> tuple[int, float]:
+        """(pending objects, pending probe bytes) attributable to one
+        tenant class — the admission controller's view of how much of the
+        workload a tenant already occupies, counted over BOTH residency
+        sides (admission guards total pending state, not just the resident
+        prefix; spilling must not launder quota headroom)."""
+        objs, nbytes = 0, 0.0
+        for q in self.queues.values():
+            for unit in q.resident:
+                if unit.tenant == tenant:
+                    objs += unit.size
+                    nbytes += unit.nbytes
+            for unit in q.spilled:
+                if unit.tenant == tenant:
+                    objs += unit.size
+                    nbytes += unit.nbytes
+        return objs, nbytes
+
+    # -- state snapshot ----------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Plain-data view of the manager's full scheduling state (queue
+        contents + order on both residency sides, outstanding joins,
+        completions, spill marks) for the durability tier's replayed-state
+        == live-state assertions."""
+
+        def unit(u: WorkUnit) -> list:
+            return [
+                int(u.query_id), int(u.bucket_id), int(u.size),
+                float(u.arrival_time), float(u.nbytes), u.tenant,
+            ]
+
+        return {
+            "queues": {
+                int(b): q.snapshot(unit)
+                for b, q in sorted(self.queues.items())
+                if q
+            },
+            "outstanding": {
+                int(qid): sorted(int(b) for b in pending)
+                for qid, pending in sorted(self.outstanding.items())
+            },
+            "completed": {
+                int(qid): float(t) for qid, t in sorted(self.completed.items())
+            },
+            "spilled": sorted(int(b) for b in self._spilled),
+        }
+
     # -- completion ------------------------------------------------------------
     def complete_bucket(self, bucket_id: int, now: float) -> list[int]:
         """Drain bucket's queue (both sides — servicing pages the spilled

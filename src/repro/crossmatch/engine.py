@@ -36,7 +36,7 @@ from ..core.hybrid import HybridPlanner
 from ..core.metrics import CostModel, dispatch_stats, per_tenant_latency
 from ..core.prefetch import PrefetchConfig, build_pipeline
 from ..core.scheduler import BucketScheduler, LifeRaftScheduler, SchedulerDecision
-from ..core.shard import ShardMap, StealConfig, StealEvent
+from ..core.shard import ShardMap, StealConfig, StealEvent, split_slots
 from ..core.workload import Query, WorkloadManager
 from .catalog import SkyCatalog
 
@@ -603,19 +603,20 @@ class ShardedCrossMatch:
         )
         self.steal = steal
         self.steals: list[StealEvent] = []
-        # Aggregate cache bytes stay equal to a single-engine run with the
-        # same ``cache_capacity`` — each shard gets its slice.
-        per_cap = max(1, cache_capacity // self.n_shards)
+        # Aggregate cache slots stay equal to a single-engine run with the
+        # same ``cache_capacity`` — each shard gets its slice, remainder
+        # slots going to the lowest shard ids (split_slots conserves sum).
+        caps = split_slots(cache_capacity, self.n_shards)
         self.engines = [
             CrossMatchEngine(
                 catalog,
                 scheduler=scheduler_factory() if scheduler_factory else None,
                 cost_model=self.cost_model,
-                cache_capacity=per_cap,
+                cache_capacity=caps[sid],
                 control=control_factory() if control_factory else None,
                 **engine_kwargs,
             )
-            for _ in range(self.n_shards)
+            for sid in range(self.n_shards)
         ]
         # Router: decompose once, centrally; never services anything.
         self.router = WorkloadManager(
@@ -625,6 +626,12 @@ class ShardedCrossMatch:
         )
         self._locks = [threading.Lock() for _ in range(self.n_shards)]
         self._steal_lock = threading.Lock()
+        # Drain-thread fault channel: a thread that dies mid-drain records
+        # (shard id, exception) here and trips the abort flag so sibling
+        # shards stop instead of spinning/stealing against a dead peer;
+        # ``run`` re-raises at join time with the originating shard id.
+        self._drain_errors: list[tuple[int, BaseException]] = []
+        self._abort = threading.Event()
 
     # -- intake ----------------------------------------------------------------
     def submit(self, query: Query) -> None:
@@ -648,7 +655,7 @@ class ShardedCrossMatch:
                 eng.sim_clock = max(eng.sim_clock, q.arrival_time)
             self.submit(q)
         threads = [
-            threading.Thread(target=self._drain, args=(sid,), daemon=True)
+            threading.Thread(target=self._drain_guard, args=(sid,), daemon=True)
             for sid in range(self.n_shards)
         ]
         for t in threads:
@@ -657,11 +664,28 @@ class ShardedCrossMatch:
             t.join()
         for eng in self.engines:
             eng.close()
+        if self._drain_errors:
+            sid, exc = self._drain_errors[0]
+            raise RuntimeError(
+                f"shard {sid} drain thread died: {exc!r}"
+            ) from exc
         return self.collect_results()
+
+    def _drain_guard(self, sid: int) -> None:
+        """Exception fence around one shard's drain loop: locks are
+        released by their ``with`` blocks, the failure is recorded with
+        its shard id, and the abort flag stops the sibling loops so the
+        join in ``run`` returns instead of waiting on steals from a dead
+        shard."""
+        try:
+            self._drain(sid)
+        except BaseException as exc:  # noqa: BLE001 — re-raised at join
+            self._drain_errors.append((sid, exc))
+            self._abort.set()
 
     def _drain(self, sid: int) -> None:
         eng = self.engines[sid]
-        while True:
+        while not self._abort.is_set():
             with self._locks[sid]:
                 serviced = eng.step()
             if serviced is not None:

@@ -193,14 +193,14 @@ def _calibrated_costs(arch, shape_name, multi_pod, zero1, overrides, cfg,
 def run_cell(arch, shape_name, multi_pod=False, zero1=False, overrides=None,
              out_dir="experiments/dryrun", tag="", calibrate=True,
              rule_overrides=None):
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered, meta, cfg, shape = lower_cell(
         arch, shape_name, multi_pod, zero1, overrides, rule_overrides
     )
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}

@@ -1,3 +1,4 @@
+from .daemon import CrossMatchHost, RecoveryError, ServiceDaemon, ServingHost
 from .engine import (
     AdapterSpec,
     AdapterWorkload,
@@ -10,4 +11,5 @@ from .kvcache import PagePool, SequenceAllocation
 
 __all__ = ["AdapterSpec", "AdapterWorkload", "LifeRaftEngine", "Request",
            "ServeConfig", "ShardedServingEngine", "PagePool",
-           "SequenceAllocation"]
+           "SequenceAllocation", "ServiceDaemon", "ServingHost",
+           "CrossMatchHost", "RecoveryError"]

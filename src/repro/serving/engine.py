@@ -50,7 +50,7 @@ from ..core.dispatch import DispatchLoop
 from ..core.metrics import CostModel, dispatch_stats, per_tenant_latency
 from ..core.prefetch import PrefetchConfig, build_pipeline, prefetch_stats
 from ..core.scheduler import LifeRaftScheduler, RoundRobinScheduler
-from ..core.shard import ShardMap, StealConfig, StealEvent
+from ..core.shard import ShardMap, StealConfig, StealEvent, split_slots
 from ..core.spillq import SpillBookkeepingMixin, SpillQueue
 from ..core.workload import DEFAULT_TENANT
 
@@ -329,6 +329,39 @@ class AdapterWorkload(SpillBookkeepingMixin):
 
     def tenant_of_adapter(self, adapter_id: int) -> str:
         return self._tenants.get(adapter_id, DEFAULT_TENANT)
+
+    def tenant_pending(self, tenant: str) -> tuple[int, float]:
+        """(pending requests, pending prompt-state bytes) for one tenant
+        class, both residency sides — the admission controller's view
+        (spilling must not launder quota headroom)."""
+        objs, nbytes = 0, 0.0
+        for a, q in self.queues.items():
+            if self.tenant_of_adapter(a) != tenant or not q:
+                continue
+            objs += q.size
+            nbytes += q.nbytes
+        return objs, nbytes
+
+    # -- state snapshot ----------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Plain-data view of the full workload state (queue contents +
+        order on both residency sides, spill marks) for the durability
+        tier's replayed-state == live-state assertions."""
+
+        def req(r: Request) -> list:
+            return [
+                int(r.request_id), int(r.adapter_id), float(r.arrival_time),
+                int(r.prompt_len), int(r.tokens_done),
+            ]
+
+        return {
+            "queues": {
+                int(a): q.snapshot(req)
+                for a, q in sorted(self.queues.items())
+                if q
+            },
+            "spilled": sorted(int(a) for a in self._spilled),
+        }
 
     # -- §6 workload overflow ---------------------------------------------------
     # is_spilled / spilled_fraction / spill_bucket / unspill_bucket /
@@ -694,13 +727,34 @@ class ShardedServingEngine:
         )
         self.steal = steal
         self.steals: list[StealEvent] = []
-        per_cfg = dataclasses.replace(
-            config, adapter_slots=max(1, config.adapter_slots // self.n_shards)
-        )
+        # Aggregate HBM slots are conserved across the split: the first
+        # ``slots % S`` shards carry one extra (plain ``slots // S``
+        # silently dropped the remainder — shards are NOT interchangeable
+        # replicas of capacity).
+        slot_split = split_slots(config.adapter_slots, self.n_shards)
         self.engines = [
-            LifeRaftEngine(adapters, per_cfg, decode_batch_fn=decode_batch_fn)
-            for _ in range(self.n_shards)
+            LifeRaftEngine(
+                adapters,
+                dataclasses.replace(config, adapter_slots=slot_split[sid]),
+                decode_batch_fn=decode_batch_fn,
+            )
+            for sid in range(self.n_shards)
         ]
+        # Decision-log taps for the durability tier (and any recorder):
+        # ``on_round(shard_id, outcome)`` fires after each shard-local
+        # round, ``on_steal(event)`` after each migration, preserving the
+        # cross-shard interleaving order.
+        self.on_round: Optional[Callable] = None
+        self.on_steal: Optional[Callable] = None
+        for sid, eng in enumerate(self.engines):
+            eng.loop.add_round_tap(self._make_round_tap(sid))
+
+    def _make_round_tap(self, sid: int):
+        def tap(outcome):
+            if self.on_round is not None:
+                self.on_round(sid, outcome)
+
+        return tap
 
     # -- routing ---------------------------------------------------------------
     def _owner(self, req: Request) -> LifeRaftEngine:
@@ -756,27 +810,41 @@ class ShardedServingEngine:
             newest = max(r.arrival_time for r in reqs)
             thief.clock = max(thief.clock, newest)
             thief.loop.observe_arrival(newest)
-            self.steals.append(
-                StealEvent(
-                    bucket_id=adapter,
-                    victim=vid,
-                    thief=sid,
-                    n_units=len(reqs),
-                    nbytes=float(
-                        sum(
-                            max(
-                                r.prompt_len * victim.workload.probe_bytes,
-                                victim.workload.min_unit_bytes,
-                            )
-                            for r in reqs
+            ev = StealEvent(
+                bucket_id=adapter,
+                victim=vid,
+                thief=sid,
+                n_units=len(reqs),
+                nbytes=float(
+                    sum(
+                        max(
+                            r.prompt_len * victim.workload.probe_bytes,
+                            victim.workload.min_unit_bytes,
                         )
-                    ),
-                    reclaimed_stage_s=reclaimed,
-                    clock=thief.clock,
-                )
+                        for r in reqs
+                    )
+                ),
+                reclaimed_stage_s=reclaimed,
+                clock=thief.clock,
             )
+            self.steals.append(ev)
+            if self.on_steal is not None:
+                self.on_steal(ev)
 
     # -- virtual lockstep drive ------------------------------------------------
+    def step(self) -> Optional[int]:
+        """One lockstep iteration, the unit the service daemon pumps: a
+        steal sweep, then one round on the least-clock shard with work.
+        Returns that shard's serviced adapter id, or None when every shard
+        is idle.  (``run`` keeps its own historical loop — it interleaves
+        trace admission between the sweep and the round.)"""
+        self._maybe_steal()
+        runnable = [e for e in self.engines if e.workload.nonempty_queues()]
+        if not runnable:
+            return None
+        eng = min(runnable, key=lambda e: (e.clock, self.engines.index(e)))
+        return eng.step()
+
     def run(self, requests: list[Request]) -> dict:
         pending = sorted(requests, key=lambda r: r.arrival_time)
         i = 0

@@ -29,12 +29,23 @@ recorded at feature introduction, guarding future drift).
 """
 from __future__ import annotations
 
-import json
 import pathlib
 
 import numpy as np
 
-TRACE_SCHEMA_VERSION = 1
+# The entry codec was promoted to ``repro.core.journal`` (the write-ahead
+# decision journal shares the golden-trace schema); the names below stay
+# re-exported so existing imports keep working.
+from repro.core.journal import (  # noqa: F401  (re-exports)
+    TRACE_SCHEMA_VERSION,
+    diff_entries as diff_traces,
+    encode_outcome,
+    encode_steal,
+    format_entry as _fmt,
+    load_trace,
+    save_trace,
+)
+
 GOLDEN_DIR = pathlib.Path(__file__).resolve().parent / "golden"
 
 
@@ -47,38 +58,7 @@ class TraceRecorder:
         self.entries: list[dict] = []
 
     def __call__(self, outcome) -> None:
-        entry = {
-            "decisions": [
-                [
-                    int(d.bucket_id),
-                    float(d.score),
-                    bool(d.in_cache),
-                    int(d.queue_size),
-                ]
-                for d in outcome.decisions
-            ],
-            "cost": float(outcome.cost),
-            "vector": [
-                float(outcome.vector.alpha),
-                int(outcome.vector.fuse_k),
-                bool(outcome.vector.spill),
-            ],
-            "spill_changed": [int(b) for b in outcome.spill_changed],
-        }
-        # Residual prefetch stall: only emitted when nonzero, so goldens
-        # recorded before the pipeline existed replay byte-identically
-        # (their rounds never stall) while prefetch-on goldens pin it.
-        stall = float(getattr(outcome, "stall", 0.0))
-        if stall:
-            entry["stall"] = stall
-        # Shared-plan width: same conditional-emit discipline as ``stall``
-        # — goldens recorded before shared plans existed (share_width == 0
-        # on every round) replay byte-identically, while shared-plan-on
-        # goldens pin the AIMD width trajectory.
-        share_width = int(getattr(outcome.vector, "share_width", 0))
-        if share_width:
-            entry["share_width"] = share_width
-        self.entries.append(entry)
+        self.entries.append(encode_outcome(outcome))
 
 
 class ShardTraceRecorder(TraceRecorder):
@@ -89,76 +69,10 @@ class ShardTraceRecorder(TraceRecorder):
     decisions."""
 
     def on_round(self, shard_id: int, outcome) -> None:
-        self(outcome)
-        self.entries[-1]["shard"] = int(shard_id)
+        self.entries.append(encode_outcome(outcome, shard=shard_id))
 
     def on_steal(self, ev) -> None:
-        self.entries.append(
-            {
-                "steal": [
-                    int(ev.bucket_id),
-                    int(ev.victim),
-                    int(ev.thief),
-                    int(ev.n_units),
-                ]
-            }
-        )
-
-
-# --------------------------------------------------------------- diffing
-def _fmt(entry: dict) -> str:
-    if "steal" in entry:
-        b, v, t, n = entry["steal"]
-        return f"steal b{b}: shard {v} -> shard {t} ({n} units)"
-    ds = ", ".join(
-        f"b{b}:s={s!r}:c={int(c)}:n={n}" for b, s, c, n in entry["decisions"]
-    )
-    a, k, sp = entry["vector"]
-    shard = f" shard={entry['shard']}" if "shard" in entry else ""
-    return (
-        f"[{ds}] cost={entry['cost']!r}"
-        f" vec=(a={a!r},k={k},spill={int(sp)}){shard}"
-    )
-
-
-def diff_traces(expect: list[dict], got: list[dict]) -> list[str]:
-    """Structural diff of two decision logs.  Empty list == bit-identical.
-
-    Each divergence names the round, the field, and both sides, so a
-    regression reads as 'round 17: decisions expect [...] got [...]'
-    instead of a bare assert."""
-    out: list[str] = []
-    if len(expect) != len(got):
-        out.append(f"length: expect {len(expect)} rounds, got {len(got)}")
-    for i, (e, g) in enumerate(zip(expect, got)):
-        for field in (
-            "decisions", "cost", "vector", "spill_changed", "stall",
-            "share_width", "shard", "steal",
-        ):
-            if e.get(field) != g.get(field):
-                out.append(
-                    f"round {i} {field}:\n  expect {_fmt(e)}\n  got    {_fmt(g)}"
-                )
-                break
-        if len(out) >= 5:  # enough context; don't flood
-            out.append("... (further divergence suppressed)")
-            break
-    return out
-
-
-def save_trace(path, entries: list[dict], meta: dict | None = None) -> None:
-    doc = {
-        "schema": TRACE_SCHEMA_VERSION,
-        "meta": meta or {},
-        "rounds": entries,
-    }
-    pathlib.Path(path).write_text(json.dumps(doc, indent=1) + "\n")
-
-
-def load_trace(path) -> list[dict]:
-    doc = json.loads(pathlib.Path(path).read_text())
-    assert doc["schema"] == TRACE_SCHEMA_VERSION, doc["schema"]
-    return doc["rounds"]
+        self.entries.append(encode_steal(ev))
 
 
 # --------------------------------------------------------------- scenarios
