@@ -1,0 +1,19 @@
+# Convenience entry points; CI runs the same commands (.github/workflows).
+PYTHON ?= python
+export PYTHONPATH := src
+
+.PHONY: lint lint-baseline test bench
+
+lint:
+	$(PYTHON) -m tools.analysis src tests --baseline tools/analysis/baseline.json
+
+# Regenerate the grandfathered-findings baseline (shrink-only by policy:
+# see docs/static-analysis.md).
+lint-baseline:
+	$(PYTHON) -m tools.analysis src tests --baseline tools/analysis/baseline.json --write-baseline
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+bench:
+	$(PYTHON) -m benchmarks.run

@@ -636,7 +636,12 @@ def waterfill(
     satisfied demand.  Missing weights default to 1.0.
     """
     remaining = float(budget)
-    active = set(demand)
+    # Insertion-ordered list, NOT a set: the float sums below depend on
+    # iteration order, and set order over str tenant keys is salted by
+    # PYTHONHASHSEED — a recovery replay in a fresh process would derive
+    # different grants (det-set-order).  The caller's dict order is
+    # deterministic.
+    active = list(demand)
     grants: dict = {}
     while active:
         wsum = sum(weights.get(t, 1.0) for t in active)
@@ -654,7 +659,8 @@ def waterfill(
         for t in satisfied:
             grants[t] = demand[t]
             remaining -= demand[t]
-            active.discard(t)
+        done = set(satisfied)
+        active = [t for t in active if t not in done]
     if remaining > 0.0 and grants:
         takers = [t for t in grants if demand[t] > 0.0] or list(grants)
         wsum = sum(weights.get(t, 1.0) for t in takers)

@@ -362,7 +362,7 @@ class ShardedDispatch:
         pipe = getattr(victim.loop, "prefetch", None)
         if pipe is not None:
             reclaimed = pipe.cancel(bucket_id, victim.loop.clock)
-        qids = {u.query_id for u in units}
+        qids = sorted({u.query_id for u in units})
         qmap = {q: self.queries[q] for q in qids if q in self.queries}
         thief.wm.migrate_in(units, qmap)
         self.shard_map.reassign(bucket_id, thief.shard_id)

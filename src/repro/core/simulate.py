@@ -91,7 +91,7 @@ def _collect(
     responses = wm.response_times()
     resp = np.array(sorted(responses.values()), dtype=np.float64)
     makespan = max(makespan, 1e-9)
-    tenants = {q.tenant for q in wm.queries.values()}
+    tenants = sorted({q.tenant for q in wm.queries.values()})
     per_tenant = (
         per_tenant_latency(responses, wm.tenant_of_query, makespan, tenants)
         if len(tenants) > 1
@@ -428,7 +428,7 @@ def simulate_sharded(
     makespan = max(coord.makespan(), 1e-9)
     hits = sum(rt.cache.stats.hits for rt in runtimes)
     accesses = sum(rt.cache.stats.accesses for rt in runtimes)
-    tenants = {q.tenant for q in coord.queries.values()}
+    tenants = sorted({q.tenant for q in coord.queries.values()})
     per_tenant = (
         per_tenant_latency(
             responses,

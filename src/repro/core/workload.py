@@ -317,7 +317,7 @@ class WorkloadManager(SpillBookkeepingMixin):
             self.outstanding.setdefault(unit.query_id, set()).add(unit.bucket_id)
             self.queue(unit.bucket_id).push(unit)
             touched.add(unit.bucket_id)
-        for b in touched:
+        for b in sorted(touched):
             self._notify(b)
         return units
 

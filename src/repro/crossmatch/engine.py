@@ -541,7 +541,7 @@ class CrossMatchEngine:
     # -- metrics --------------------------------------------------------------------
     def summary(self) -> dict:
         rt = self.wm.response_times()
-        tenants = {q.tenant for q in self.wm.queries.values()}
+        tenants = sorted({q.tenant for q in self.wm.queries.values()})
         dstats = dispatch_stats(self.loop)
         return {
             "n_queries": len(rt),
@@ -732,7 +732,7 @@ class ShardedCrossMatch:
                     reclaimed = victim.loop.prefetch.cancel(
                         bucket_id, victim.loop.clock
                     )
-                qids = {u.query_id for u in units}
+                qids = sorted({u.query_id for u in units})
                 qmap = {
                     q: victim.wm.queries[q]
                     for q in qids

@@ -290,7 +290,7 @@ class AdapterWorkload(SpillBookkeepingMixin):
         for r in requests:
             self.queue(r.adapter_id).push(r)
             touched.add(r.adapter_id)
-        for a in touched:
+        for a in sorted(touched):
             self._notify(a)
         return requests
 
@@ -650,7 +650,7 @@ class LifeRaftEngine:
             r.request_id: r.finish_time - r.arrival_time for r in self.completed
         }
         adapter_of = {r.request_id: r.adapter_id for r in self.completed}
-        tenants = {a.tenant for a in self.adapters.values()}
+        tenants = sorted({a.tenant for a in self.adapters.values()})
         per_tenant = (
             per_tenant_latency(
                 response_by_id,

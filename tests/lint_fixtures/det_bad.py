@@ -1,0 +1,24 @@
+"""Seeded determinism violations (analyzed by tests, never imported)."""
+import datetime
+import time
+
+import numpy as np
+
+
+def decide_when(units):
+    deadline = time.time() + 5.0
+    stamp = datetime.datetime.now()
+    return deadline, stamp
+
+
+def decide_jitter():
+    rng = np.random.default_rng()
+    del rng
+    return np.random.rand()
+
+
+def decide_order(queries, report):
+    tenants = {q.tenant for q in queries}
+    for t in tenants:
+        report(t)
+    report(tenants)

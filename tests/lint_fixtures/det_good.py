@@ -1,0 +1,24 @@
+"""Determinism-clean decision-path idioms: should produce no findings."""
+import time
+
+import numpy as np
+
+
+def time_pure(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def seeded(seed):
+    rng = np.random.default_rng(seed)
+    return rng.normal()
+
+
+def ordered(queries, process):
+    tenants = sorted({q.tenant for q in queries})
+    for t in tenants:
+        process(t)
+    pending = {q.qid for q in queries}
+    n = len(pending)
+    return [q for q in queries if q.qid in pending], n

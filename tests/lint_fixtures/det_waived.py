@@ -1,0 +1,10 @@
+"""Waiver behavior: reasoned waiver suppresses, reasonless does not."""
+
+
+def decide(buckets, notify):
+    touched = {b.bucket_id for b in buckets}
+    for b in touched:  # lint: allow[det-set-order] int bucket ids; CPython int order is insertion-deterministic
+        notify(b)
+    ids = {b.bucket_id for b in buckets}
+    for b in ids:  # lint: allow[det-set-order]
+        notify(b)

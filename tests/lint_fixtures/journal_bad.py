@@ -1,0 +1,20 @@
+"""Mini journal module with an emitted-but-never-diffed field."""
+TRACE_SCHEMA_VERSION = 1
+
+
+def encode_outcome(outcome):
+    entry = {
+        "decisions": list(outcome.decisions),
+        "cost": float(outcome.cost),
+    }
+    entry["debug_note"] = "x"
+    return entry
+
+
+def diff_entries(expect, got):
+    out = []
+    for i, (e, g) in enumerate(zip(expect, got)):
+        for field in ("decisions", "cost"):
+            if e.get(field) != g.get(field):
+                out.append((i, field))
+    return out

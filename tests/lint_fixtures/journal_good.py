@@ -1,0 +1,18 @@
+"""Mini journal module whose emit/diff field sets agree."""
+TRACE_SCHEMA_VERSION = 1
+
+
+def encode_outcome(outcome):
+    return {
+        "decisions": list(outcome.decisions),
+        "cost": float(outcome.cost),
+    }
+
+
+def diff_entries(expect, got):
+    out = []
+    for i, (e, g) in enumerate(zip(expect, got)):
+        for field in ("decisions", "cost"):
+            if e.get(field) != g.get(field):
+                out.append((i, field))
+    return out

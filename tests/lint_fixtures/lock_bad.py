@@ -1,0 +1,27 @@
+"""Seeded lock-hierarchy violations (docs/sharding.md, lock-order rules)."""
+import os
+import threading
+
+
+class BadShards:
+    def __init__(self, n):
+        self._locks = [threading.Lock() for _ in range(n)]
+        self._steal_lock = threading.Lock()
+
+    def inverted_steal(self, sid, migrate):
+        with self._locks[sid]:
+            with self._steal_lock:
+                migrate()
+
+    def unproven_pair(self, a, b, migrate):
+        with self._locks[a], self._locks[b]:
+            migrate()
+
+    def bare(self, sid, work):
+        self._locks[sid].acquire()
+        work()
+        self._locks[sid].release()
+
+    def io_under_lock(self, sid, fh):
+        with self._locks[sid]:
+            os.fsync(fh)

@@ -1,0 +1,31 @@
+"""Lock idioms matching the documented hierarchy: no findings expected."""
+import os
+import threading
+
+
+class GoodShards:
+    def __init__(self, n):
+        self._locks = [threading.Lock() for _ in range(n)]
+        self._steal_lock = threading.Lock()
+
+    def steal(self, thief, victim, migrate):
+        with self._steal_lock:
+            lo, hi = sorted((thief, victim))
+            with self._locks[lo], self._locks[hi]:
+                migrate()
+
+    def constant_pair(self, migrate):
+        with self._locks[0], self._locks[1]:
+            migrate()
+
+    def guarded(self, sid, work):
+        self._locks[sid].acquire()
+        try:
+            work()
+        finally:
+            self._locks[sid].release()
+
+    def io_outside(self, sid, fh, publish):
+        os.fsync(fh)
+        with self._locks[sid]:
+            publish()

@@ -1,0 +1,23 @@
+"""Seeded tracing-safety violations in jit-reachable code."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("flag",))
+def bad_branch(x, flag):
+    if x > 0:
+        return x
+    return -x
+
+
+@jax.jit
+def bad_concretize(x):
+    return float(x)
+
+
+@jax.jit
+def bad_pad(x):
+    n = 37
+    return jnp.pad(x, ((0, n), (0, 0)))

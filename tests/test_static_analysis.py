@@ -1,0 +1,366 @@
+"""liferaft-lint (tools/analysis): per-rule fixtures, waivers, baseline,
+journal schema drift regression, and an end-to-end zero-findings run.
+
+Fixtures live in tests/lint_fixtures/ — that directory is excluded from
+tree walks (the seeded violations must never fail the real lint run) and
+is analyzed here explicitly, file by file.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools.analysis.framework import (  # noqa: E402
+    AnalyzerConfig,
+    Baseline,
+    Finding,
+    analyze_paths,
+    collect_files,
+    parse_file,
+    run_passes,
+)
+from tools.analysis.passes import ALL_PASSES, rule_catalog  # noqa: E402
+from tools.analysis.passes.determinism import DeterminismPass  # noqa: E402
+from tools.analysis.passes.journal_schema import (  # noqa: E402
+    JournalSchemaPass,
+    extract_schema,
+)
+from tools.analysis.passes.lockorder import LockOrderPass  # noqa: E402
+from tools.analysis.passes.tracing import TracingPass  # noqa: E402
+
+FIXTURES = REPO / "tests" / "lint_fixtures"
+REAL_JOURNAL = REPO / "src" / "repro" / "core" / "journal.py"
+REAL_MANIFEST = REPO / "tools" / "analysis" / "schema_manifest.json"
+
+# Fixtures sit outside src/, so point the determinism pass at them.
+FIXTURE_CONFIG = AnalyzerConfig(decision_paths=("tests/lint_fixtures/",))
+
+
+def run_fixture(name, passes, config=FIXTURE_CONFIG):
+    pf = parse_file(FIXTURES / name, root=str(REPO))
+    return run_passes(pf, passes, config)
+
+
+def rules_of(findings):
+    return sorted(f.rule for f in findings)
+
+
+# --------------------------------------------------------------- determinism
+class TestDeterminismPass:
+    def test_seeded_violations(self):
+        findings = run_fixture("det_bad.py", [DeterminismPass()])
+        assert rules_of(findings) == [
+            "det-rng", "det-rng",
+            "det-set-order", "det-set-order",
+            "det-wallclock", "det-wallclock",
+        ]
+
+    def test_wallclock_exact_lines(self):
+        findings = run_fixture("det_bad.py", [DeterminismPass()])
+        wall = sorted(f.line for f in findings if f.rule == "det-wallclock")
+        assert wall == [9, 10]  # time.time() and datetime.datetime.now()
+
+    def test_clean_idioms_pass(self):
+        assert run_fixture("det_good.py", [DeterminismPass()]) == []
+
+    def test_pass_scoped_to_decision_paths(self):
+        # Outside decision_paths the pass doesn't apply at all.
+        findings = run_fixture(
+            "det_bad.py", [DeterminismPass()], config=AnalyzerConfig()
+        )
+        assert findings == []
+
+
+# -------------------------------------------------------------------- waivers
+class TestWaivers:
+    def test_reasoned_waiver_suppresses_reasonless_does_not(self):
+        findings = run_fixture("det_waived.py", [DeterminismPass()])
+        got = {(f.rule, f.line) for f in findings}
+        # line 6 (reasoned waiver) fully suppressed; line 9 keeps the
+        # original finding AND gains lint-bad-waiver.
+        assert got == {("det-set-order", 9), ("lint-bad-waiver", 9)}
+
+    def test_waiver_only_covers_named_rules(self, tmp_path):
+        src = (FIXTURES / "det_bad.py").read_text()
+        # Waive the wrong rule on the time.time() line: must not suppress.
+        src = src.replace(
+            "deadline = time.time() + 5.0",
+            "deadline = time.time() + 5.0  # lint: allow[det-rng] wrong rule",
+        )
+        p = tmp_path / "wrong_rule.py"
+        p.write_text(src)
+        pf = parse_file(p, root=str(tmp_path))
+        config = AnalyzerConfig(decision_paths=("wrong_rule.py",))
+        findings = run_passes(pf, [DeterminismPass()], config)
+        assert ("det-wallclock", 9) in {(f.rule, f.line) for f in findings}
+
+
+# ------------------------------------------------------------------ lock order
+class TestLockOrderPass:
+    def test_seeded_violations(self):
+        findings = run_fixture("lock_bad.py", [LockOrderPass()])
+        assert rules_of(findings) == [
+            "lock-bare-acquire",
+            "lock-blocking-io",
+            "lock-order-inversion",
+            "lock-order-inversion",
+        ]
+
+    def test_inverted_steal_is_flagged_at_inner_acquire(self):
+        findings = run_fixture("lock_bad.py", [LockOrderPass()])
+        inv = [f for f in findings if f.rule == "lock-order-inversion"]
+        assert 13 in {f.line for f in inv}  # steal lock under shard lock
+        assert any("steal" in f.message for f in inv)
+
+    def test_documented_hierarchy_passes(self):
+        # sorted-unpack pair, ascending constants, acquire+try/finally,
+        # fsync outside the lock: all clean.
+        assert run_fixture("lock_good.py", [LockOrderPass()]) == []
+
+
+# --------------------------------------------------------------------- tracing
+class TestTracingPass:
+    def test_seeded_violations(self):
+        findings = run_fixture("trace_bad.py", [TracingPass()])
+        got = {(f.rule, f.line) for f in findings}
+        assert got == {
+            ("trace-py-branch", 10),   # if x > 0 on a traced arg
+            ("trace-concretize", 17),  # float(x) on a traced arg
+            ("trace-shape-pow2", 23),  # ad-hoc jnp.pad
+        }
+
+    def test_static_and_shape_branches_pass(self):
+        # static_argnames branch, x.shape[0] branch, pads routed through
+        # _pad_rows/_pow2_ceil: all clean.
+        assert run_fixture("trace_good.py", [TracingPass()]) == []
+
+    def test_real_kernel_modules_are_clean(self):
+        findings = analyze_paths(
+            [str(REPO / "src" / "repro" / "kernels")],
+            [TracingPass()],
+            AnalyzerConfig(),
+            root=str(REPO),
+        )
+        assert findings == []
+
+
+# -------------------------------------------------------------- journal schema
+def _mini_manifest(tmp_path, fields=("decisions", "cost"), version=1):
+    p = tmp_path / "manifest.json"
+    p.write_text(json.dumps({"version": version, "fields": sorted(fields)}))
+    return str(p)
+
+
+class TestJournalSchemaPass:
+    def test_unconsumed_field_flagged(self, tmp_path):
+        config = AnalyzerConfig(schema_manifest=_mini_manifest(tmp_path))
+        findings = run_fixture(
+            "journal_bad.py", [JournalSchemaPass()], config=config
+        )
+        # debug_note is both unconsumed and added without a version bump.
+        assert rules_of(findings) == [
+            "journal-field-unconsumed", "journal-version-drift",
+        ]
+        assert all(f.line == 10 for f in findings)  # the emit site
+
+    def test_agreeing_schema_passes(self, tmp_path):
+        config = AnalyzerConfig(schema_manifest=_mini_manifest(tmp_path))
+        assert run_fixture(
+            "journal_good.py", [JournalSchemaPass()], config=config
+        ) == []
+
+    def test_unversioned_field_is_exactly_version_drift(self, tmp_path):
+        # Field consumed by diff_entries but added without a version bump:
+        # the ONLY finding must be journal-version-drift.
+        src = (FIXTURES / "journal_good.py").read_text()
+        src = src.replace(
+            '"cost": float(outcome.cost),',
+            '"cost": float(outcome.cost),\n        "extra": 0,',
+        ).replace('("decisions", "cost")', '("decisions", "cost", "extra")')
+        p = tmp_path / "journal_drift.py"
+        p.write_text(src)
+        pf = parse_file(p, root=str(tmp_path))
+        config = AnalyzerConfig(schema_manifest=_mini_manifest(tmp_path))
+        findings = run_passes(pf, [JournalSchemaPass()], config)
+        assert rules_of(findings) == ["journal-version-drift"]
+
+    def test_version_bump_clears_drift(self, tmp_path):
+        src = (FIXTURES / "journal_good.py").read_text()
+        src = src.replace(
+            '"cost": float(outcome.cost),',
+            '"cost": float(outcome.cost),\n        "extra": 0,',
+        ).replace('("decisions", "cost")', '("decisions", "cost", "extra")')
+        src = src.replace(
+            "TRACE_SCHEMA_VERSION = 1", "TRACE_SCHEMA_VERSION = 2"
+        )
+        p = tmp_path / "journal_bumped.py"
+        p.write_text(src)
+        pf = parse_file(p, root=str(tmp_path))
+        config = AnalyzerConfig(schema_manifest=_mini_manifest(tmp_path))
+        assert run_passes(pf, [JournalSchemaPass()], config) == []
+
+    def test_removed_field_flagged_at_version_line(self, tmp_path):
+        config = AnalyzerConfig(
+            schema_manifest=_mini_manifest(
+                tmp_path, fields=("decisions", "cost", "vanished")
+            )
+        )
+        findings = run_fixture(
+            "journal_good.py", [JournalSchemaPass()], config=config
+        )
+        assert rules_of(findings) == ["journal-version-drift"]
+        assert "vanished" in findings[0].message
+
+
+class TestRealJournalSchema:
+    """Satellite: drift regression against the actual core/journal.py."""
+
+    def test_manifest_matches_reality(self):
+        schema = extract_schema(
+            __import__("ast").parse(REAL_JOURNAL.read_text())
+        )
+        manifest = json.loads(REAL_MANIFEST.read_text())
+        assert sorted(schema["emitted"]) == manifest["fields"]
+        assert schema["version"] == manifest["version"]
+
+    def test_real_journal_is_clean(self):
+        pf = parse_file(REAL_JOURNAL, root=str(REPO))
+        assert run_passes(pf, [JournalSchemaPass()], AnalyzerConfig()) == []
+
+    def _mutate(self, bump_version):
+        src = REAL_JOURNAL.read_text()
+        emit_anchor = (
+            '"spill_changed": [int(b) for b in outcome.spill_changed],'
+        )
+        diff_anchor = '"decisions", "cost", "vector", "spill_changed", "stall",'
+        assert emit_anchor in src and diff_anchor in src
+        src = src.replace(
+            emit_anchor, emit_anchor + '\n        "synthetic_flux": 1.0,'
+        )
+        # Also consume it, so only the version-drift rule is in play.
+        src = src.replace(diff_anchor, diff_anchor + ' "synthetic_flux",')
+        if bump_version:
+            src = src.replace(
+                "TRACE_SCHEMA_VERSION = 1", "TRACE_SCHEMA_VERSION = 2"
+            )
+        return src
+
+    def test_new_field_without_bump_is_flagged(self, tmp_path):
+        p = tmp_path / "journal_mutated.py"
+        p.write_text(self._mutate(bump_version=False))
+        pf = parse_file(p, root=str(tmp_path))
+        findings = run_passes(pf, [JournalSchemaPass()], AnalyzerConfig())
+        assert rules_of(findings) == ["journal-version-drift"]
+        assert "synthetic_flux" in findings[0].message
+
+    def test_new_field_with_bump_passes(self, tmp_path):
+        p = tmp_path / "journal_bumped.py"
+        p.write_text(self._mutate(bump_version=True))
+        pf = parse_file(p, root=str(tmp_path))
+        assert run_passes(pf, [JournalSchemaPass()], AnalyzerConfig()) == []
+
+
+# ------------------------------------------------------------------- baseline
+class TestBaseline:
+    def test_baseline_suppresses_old_but_not_new(self):
+        old = Finding("a.py", 3, "det-rng", "msg one")
+        base = Baseline.from_findings([old])
+        moved = Finding("a.py", 9, "det-rng", "msg one")  # same fingerprint
+        fresh = Finding("a.py", 4, "det-rng", "msg two")
+        assert base.new_findings([moved, fresh]) == [fresh]
+
+    def test_counts_per_fingerprint(self):
+        f = Finding("a.py", 1, "det-rng", "msg")
+        base = Baseline.from_findings([f])
+        dup = Finding("a.py", 2, "det-rng", "msg")
+        # One grandfathered, the second occurrence is new.
+        assert len(base.new_findings([f, dup])) == 1
+
+    def test_roundtrip(self, tmp_path):
+        f = Finding("a.py", 1, "det-rng", "msg")
+        path = tmp_path / "baseline.json"
+        Baseline.from_findings([f, f]).save(path)
+        loaded = Baseline.load(path)
+        assert loaded.counts == {f.fingerprint(): 2}
+
+
+# ------------------------------------------------------------------ framework
+class TestFramework:
+    def test_fixture_dir_excluded_from_tree_walk(self):
+        files = collect_files([str(REPO / "tests")], root=str(REPO))
+        assert not any("lint_fixtures" in str(p) for p in files)
+
+    def test_finding_render_format(self):
+        f = Finding("src/x.py", 12, "det-rng", "boom")
+        assert f.render() == "src/x.py:12 det-rng boom"
+
+    def test_rule_catalog_covers_all_rules(self):
+        cat = rule_catalog()
+        for rule in (
+            "det-wallclock", "det-rng", "det-set-order",
+            "lock-order-inversion", "lock-bare-acquire", "lock-blocking-io",
+            "trace-py-branch", "trace-concretize", "trace-shape-pow2",
+            "journal-field-unconsumed", "journal-version-drift",
+            "lint-bad-waiver", "lint-syntax-error",
+        ):
+            assert rule in cat, rule
+
+    def test_syntax_error_becomes_finding(self, tmp_path):
+        p = tmp_path / "broken.py"
+        p.write_text("def nope(:\n")
+        findings = analyze_paths(
+            [str(p)], ALL_PASSES, AnalyzerConfig(), root=str(tmp_path)
+        )
+        assert [f.rule for f in findings] == ["lint-syntax-error"]
+
+
+# ------------------------------------------------------------------------ CLI
+def run_cli(*argv):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.analysis", *argv],
+        cwd=str(REPO), capture_output=True, text=True,
+    )
+
+
+class TestCli:
+    def test_e2e_merged_tree_is_clean(self):
+        # The acceptance bar: the analyzer exits 0 over src/ and tests/.
+        res = run_cli(
+            "src", "tests", "--baseline", "tools/analysis/baseline.json"
+        )
+        assert res.returncode == 0, res.stdout + res.stderr
+        assert "0 new finding(s)" in res.stdout
+
+    def test_seeded_fixture_fails_with_rendered_findings(self):
+        res = run_cli("tests/lint_fixtures/lock_bad.py")
+        assert res.returncode == 1
+        assert "lock-order-inversion" in res.stdout
+        # file:line rule-id message
+        assert "tests/lint_fixtures/lock_bad.py:13 " in res.stdout
+
+    def test_write_baseline_then_clean(self, tmp_path):
+        base = tmp_path / "b.json"
+        res = run_cli(
+            "tests/lint_fixtures/trace_bad.py",
+            "--baseline", str(base), "--write-baseline",
+        )
+        assert res.returncode == 0, res.stdout + res.stderr
+        res = run_cli(
+            "tests/lint_fixtures/trace_bad.py", "--baseline", str(base)
+        )
+        assert res.returncode == 0
+        assert "baselined" in res.stdout
+
+    def test_list_rules(self):
+        res = run_cli("--list-rules")
+        assert res.returncode == 0
+        assert "det-set-order" in res.stdout
+        assert "journal-version-drift" in res.stdout
+
+    def test_missing_path_is_usage_error(self):
+        res = run_cli("no/such/dir")
+        assert res.returncode == 2

@@ -1,0 +1,31 @@
+"""liferaft-lint: AST-based invariant analysis for the LifeRaft repo.
+
+Usage: ``python -m tools.analysis src/ tests/ [--baseline B]`` — see
+docs/static-analysis.md for the rule catalog and workflow.
+"""
+from __future__ import annotations
+
+from .framework import (
+    AnalyzerConfig,
+    Baseline,
+    Finding,
+    LintPass,
+    ParsedFile,
+    analyze_paths,
+    parse_file,
+    run_passes,
+)
+from .passes import ALL_PASSES, rule_catalog
+
+__all__ = [
+    "AnalyzerConfig",
+    "Baseline",
+    "Finding",
+    "LintPass",
+    "ParsedFile",
+    "ALL_PASSES",
+    "analyze_paths",
+    "parse_file",
+    "run_passes",
+    "rule_catalog",
+]

@@ -1,0 +1,110 @@
+"""Command-line front end: ``python -m tools.analysis`` / ``liferaft-lint``.
+
+Exit codes: 0 clean (or everything baselined), 1 new findings, 2 usage
+error.  The CI tier-1 job runs::
+
+    python -m tools.analysis src tests --baseline tools/analysis/baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .framework import AnalyzerConfig, Baseline, analyze_paths
+from .passes import ALL_PASSES, rule_catalog
+from .passes.journal_schema import JournalSchemaPass, default_manifest_path
+
+__all__ = ["main"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="liferaft-lint",
+        description="AST invariant analyzer: determinism, lock order, "
+        "tracing safety, journal schema drift.",
+    )
+    ap.add_argument(
+        "paths", nargs="*", default=["src", "tests"],
+        help="files/directories to analyze (default: src tests)",
+    )
+    ap.add_argument(
+        "--baseline", default=None,
+        help="baseline JSON; findings in it are grandfathered",
+    )
+    ap.add_argument(
+        "--write-baseline", action="store_true",
+        help="write current findings to --baseline and exit 0",
+    )
+    ap.add_argument(
+        "--rules", default=None,
+        help="comma-separated rule ids to report (default: all)",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true",
+        help="print the rule catalog and exit",
+    )
+    ap.add_argument(
+        "--schema-manifest", default=None,
+        help="journal schema manifest path (default: bundled)",
+    )
+    ap.add_argument(
+        "--update-schema-manifest", metavar="JOURNAL_PY", nargs="?",
+        const="src/repro/core/journal.py", default=None,
+        help="regenerate the schema manifest from the journal module "
+        "(use together with a TRACE_SCHEMA_VERSION bump) and exit",
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, (pname, why) in sorted(rule_catalog().items()):
+            print(f"{rule:26s} [{pname}] {why}")
+        return 0
+
+    if args.update_schema_manifest:
+        doc = JournalSchemaPass.write_manifest(
+            args.update_schema_manifest, args.schema_manifest
+        )
+        dest = args.schema_manifest or default_manifest_path()
+        print(
+            f"schema manifest -> {dest}: version {doc['version']}, "
+            f"{len(doc['fields'])} fields"
+        )
+        return 0
+
+    config = AnalyzerConfig(schema_manifest=args.schema_manifest)
+    missing = [p for p in args.paths if not Path(p).exists()]
+    if missing:
+        print(f"error: no such path(s): {', '.join(missing)}",
+              file=sys.stderr)
+        return 2
+
+    findings = analyze_paths(args.paths, ALL_PASSES, config)
+    if args.rules:
+        keep = {r.strip() for r in args.rules.split(",")}
+        findings = [f for f in findings if f.rule in keep]
+
+    if args.write_baseline:
+        if not args.baseline:
+            print("error: --write-baseline requires --baseline",
+                  file=sys.stderr)
+            return 2
+        Baseline.from_findings(findings).save(args.baseline)
+        print(f"baseline written: {len(findings)} finding(s) grandfathered")
+        return 0
+
+    baseline = Baseline.load(args.baseline) if args.baseline else Baseline()
+    fresh = baseline.new_findings(findings)
+    for f in fresh:
+        print(f.render())
+    suppressed = len(findings) - len(fresh)
+    tail = f" ({suppressed} baselined)" if suppressed else ""
+    print(
+        f"liferaft-lint: {len(fresh)} new finding(s){tail} over "
+        f"{', '.join(args.paths)}"
+    )
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

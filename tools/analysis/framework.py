@@ -1,0 +1,290 @@
+"""liferaft-lint core: findings, waivers, baseline, pass registry, driver.
+
+The analyzer enforces invariants that the test suite can only observe
+*after* they corrupt a trace: journal replay determinism (PR 8 makes
+divergence a hard ``RecoveryError``), the shard-tier lock hierarchy
+(docs/sharding.md), tracing safety inside jit/pallas-reachable code, and
+journal schema/version lockstep.  Each invariant is one *pass*; a pass
+walks a parsed file's AST and returns :class:`Finding` objects.
+
+Reporting protocol
+------------------
+* Findings print as ``file:line rule-id message`` and sort stably.
+* A finding on line L is suppressed by an inline waiver on that line::
+
+      expr_that_trips_rule()  # lint: allow[rule-id] why this is safe
+
+  The reason text is mandatory — a reasonless waiver is itself a finding
+  (``lint-bad-waiver``) and does *not* suppress.  Multiple rules may be
+  waived with ``allow[rule-a,rule-b]``.
+* A checked-in *baseline* (JSON fingerprint->count) grandfathers old
+  findings: only findings beyond the baselined count for their
+  fingerprint are "new" and fail the run.  Fingerprints exclude line
+  numbers so unrelated edits don't churn the file.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Iterable, Optional
+
+__all__ = [
+    "Finding",
+    "ParsedFile",
+    "LintPass",
+    "AnalyzerConfig",
+    "Baseline",
+    "collect_files",
+    "parse_file",
+    "run_passes",
+    "analyze_paths",
+]
+
+# Directories never descended into.  ``lint_fixtures`` holds deliberately
+# broken snippets for tests/test_static_analysis.py — they are analyzed
+# explicitly by the tests, never by a tree walk.
+EXCLUDED_DIRS = {"__pycache__", ".git", "lint_fixtures", ".pytest_cache"}
+
+_WAIVER_RE = re.compile(
+    r"#\s*lint:\s*allow\[([A-Za-z0-9_,\- ]+)\]\s*(.*?)\s*$"
+)
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line} {self.rule} {self.message}"
+
+    def fingerprint(self) -> str:
+        # Line numbers excluded: a baseline entry survives unrelated edits
+        # above the finding.  Message included so distinct defects on one
+        # rule don't mask each other.
+        return f"{self.path}::{self.rule}::{self.message}"
+
+
+@dataclass
+class Waiver:
+    line: int
+    rules: tuple
+    reason: str
+
+
+@dataclass
+class ParsedFile:
+    """A source file plus its AST and inline waivers."""
+
+    path: str  # repo-relative posix path (stable across machines)
+    abspath: str
+    source: str
+    tree: ast.Module
+    waivers: dict = field(default_factory=dict)  # line -> Waiver
+
+    @property
+    def lines(self) -> list:
+        return self.source.splitlines()
+
+
+@dataclass
+class AnalyzerConfig:
+    """Knobs shared by the passes.
+
+    ``decision_paths``: path fragments (posix) naming the decision-path
+    modules the determinism pass guards — everything journal replay
+    re-derives must be bit-stable there.  ``pow2_helpers``: functions that
+    are *allowed* to build padded shapes (everything else inside
+    jit-reachable code must route through them).  ``schema_manifest``:
+    the checked-in record of the journal field set at the current
+    ``TRACE_SCHEMA_VERSION``.
+    """
+
+    decision_paths: tuple = (
+        "src/repro/core/",
+        "src/repro/serving/",
+        "src/repro/crossmatch/engine.py",
+    )
+    pow2_helpers: tuple = ("_pow2_ceil", "pow2_ceil", "_pad_rows", "pad_rows")
+    steal_lock_names: tuple = ("steal",)  # scalar locks matching = outermost
+    blocking_calls: tuple = ("os.fsync", "fsync", "time.sleep")
+    blocking_read_roots: tuple = ("store",)  # <root>.read(...) is device/disk I/O
+    schema_manifest: Optional[str] = None  # default: tools/analysis/schema_manifest.json
+
+    def is_decision_path(self, path: str) -> bool:
+        p = path.replace(os.sep, "/")
+        return any(frag in p for frag in self.decision_paths)
+
+
+class LintPass:
+    """Base class: subclasses set ``name``/``rules`` and implement run()."""
+
+    name: str = ""
+    rules: dict = {}  # rule-id -> one-line rationale
+
+    def applies(self, pf: ParsedFile, config: AnalyzerConfig) -> bool:
+        return True
+
+    def run(self, pf: ParsedFile, config: AnalyzerConfig) -> list:
+        raise NotImplementedError
+
+
+# ----------------------------------------------------------------- waivers
+def _parse_waivers(source: str) -> dict:
+    waivers: dict = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _WAIVER_RE.search(line)
+        if m:
+            rules = tuple(
+                r.strip() for r in m.group(1).split(",") if r.strip()
+            )
+            waivers[i] = Waiver(line=i, rules=rules, reason=m.group(2))
+    return waivers
+
+
+def apply_waivers(pf: ParsedFile, findings: list) -> list:
+    """Suppress findings covered by a reasoned waiver on their line.
+
+    Returns the surviving findings plus one ``lint-bad-waiver`` finding
+    per reasonless waiver (which suppresses nothing — the acceptance bar
+    is that every waiver carries a written reason)."""
+    out = []
+    for f in findings:
+        w = pf.waivers.get(f.line)
+        if w is not None and f.rule in w.rules and w.reason:
+            continue
+        out.append(f)
+    for w in pf.waivers.values():
+        if not w.reason:
+            out.append(
+                Finding(
+                    pf.path,
+                    w.line,
+                    "lint-bad-waiver",
+                    "waiver has no reason; write why the rule is safe to "
+                    "ignore here",
+                )
+            )
+    return out
+
+
+# ---------------------------------------------------------------- baseline
+class Baseline:
+    """Fingerprint->count map of grandfathered findings."""
+
+    def __init__(self, counts: Optional[dict] = None) -> None:
+        self.counts = dict(counts or {})
+
+    @classmethod
+    def load(cls, path) -> "Baseline":
+        p = Path(path)
+        if not p.exists():
+            return cls()
+        doc = json.loads(p.read_text())
+        return cls(doc.get("findings", {}))
+
+    @classmethod
+    def from_findings(cls, findings: Iterable[Finding]) -> "Baseline":
+        counts: dict = {}
+        for f in findings:
+            counts[f.fingerprint()] = counts.get(f.fingerprint(), 0) + 1
+        return cls(counts)
+
+    def save(self, path) -> None:
+        doc = {
+            "comment": (
+                "liferaft-lint baseline: grandfathered findings by "
+                "fingerprint. Regenerate with --write-baseline; shrink it "
+                "whenever you fix an old finding."
+            ),
+            "findings": dict(sorted(self.counts.items())),
+        }
+        Path(path).write_text(json.dumps(doc, indent=1) + "\n")
+
+    def new_findings(self, findings: Iterable[Finding]) -> list:
+        """Findings beyond the baselined count for their fingerprint."""
+        seen: dict = {}
+        fresh = []
+        for f in sorted(findings):
+            n = seen.get(f.fingerprint(), 0)
+            seen[f.fingerprint()] = n + 1
+            if n >= self.counts.get(f.fingerprint(), 0):
+                fresh.append(f)
+        return fresh
+
+
+# ------------------------------------------------------------------ driver
+def collect_files(paths: Iterable[str], root: Optional[str] = None) -> list:
+    """Expand files/directories into a sorted list of .py paths."""
+    out = []
+    for p in paths:
+        pp = Path(p)
+        if pp.is_file() and pp.suffix == ".py":
+            out.append(pp)
+        elif pp.is_dir():
+            for dirpath, dirnames, filenames in os.walk(pp):
+                dirnames[:] = sorted(
+                    d for d in dirnames if d not in EXCLUDED_DIRS
+                )
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        out.append(Path(dirpath) / fn)
+    return sorted(set(out))
+
+
+def parse_file(path, root: Optional[str] = None) -> ParsedFile:
+    abspath = os.path.abspath(str(path))
+    rel = os.path.relpath(abspath, root or os.getcwd())
+    source = Path(abspath).read_text(encoding="utf-8")
+    tree = ast.parse(source, filename=rel)
+    return ParsedFile(
+        path=rel.replace(os.sep, "/"),
+        abspath=abspath,
+        source=source,
+        tree=tree,
+        waivers=_parse_waivers(source),
+    )
+
+
+def run_passes(
+    pf: ParsedFile, passes: Iterable[LintPass], config: AnalyzerConfig
+) -> list:
+    findings: list = []
+    for p in passes:
+        if p.applies(pf, config):
+            findings.extend(p.run(pf, config))
+    return apply_waivers(pf, findings)
+
+
+def analyze_paths(
+    paths: Iterable[str],
+    passes: Iterable[LintPass],
+    config: Optional[AnalyzerConfig] = None,
+    root: Optional[str] = None,
+) -> list:
+    """Analyze every .py file under ``paths``; returns sorted findings."""
+    config = config or AnalyzerConfig()
+    findings: list = []
+    for fpath in collect_files(paths, root):
+        try:
+            pf = parse_file(fpath, root)
+        except SyntaxError as exc:
+            findings.append(
+                Finding(
+                    str(fpath),
+                    int(exc.lineno or 1),
+                    "lint-syntax-error",
+                    f"file does not parse: {exc.msg}",
+                )
+            )
+            continue
+        findings.extend(run_passes(pf, passes, config))
+    return sorted(findings)

@@ -1,0 +1,41 @@
+"""Pass registry for liferaft-lint.
+
+Adding a pass: subclass ``LintPass`` in a new module here, declare
+``name`` + ``rules`` (rule-id -> rationale), implement
+``applies``/``run``, and append an instance to ``ALL_PASSES``.  See
+docs/static-analysis.md for the full checklist (fixtures + docs).
+"""
+from __future__ import annotations
+
+from .determinism import DeterminismPass
+from .journal_schema import JournalSchemaPass
+from .lockorder import LockOrderPass
+from .tracing import TracingPass
+
+__all__ = [
+    "ALL_PASSES",
+    "DeterminismPass",
+    "LockOrderPass",
+    "TracingPass",
+    "JournalSchemaPass",
+    "rule_catalog",
+]
+
+ALL_PASSES = (
+    DeterminismPass(),
+    LockOrderPass(),
+    TracingPass(),
+    JournalSchemaPass(),
+)
+
+
+def rule_catalog() -> dict:
+    """rule-id -> (pass name, rationale), plus the framework's own rules."""
+    cat = {
+        "lint-bad-waiver": ("framework", "waiver without a written reason"),
+        "lint-syntax-error": ("framework", "file does not parse"),
+    }
+    for p in ALL_PASSES:
+        for rule, why in p.rules.items():
+            cat[rule] = (p.name, why)
+    return cat

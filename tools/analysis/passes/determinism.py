@@ -1,0 +1,265 @@
+"""Determinism pass: decision paths must be bit-replayable.
+
+PR 8 made journal replay a correctness requirement — recovery re-executes
+every journaled round and diffs it against the record, and *any*
+divergence is a hard ``RecoveryError``.  Goldens (tests/golden/) enforce
+the same property across refactors.  Three classes of nondeterminism can
+silently break that contract inside the decision-path modules
+(``AnalyzerConfig.decision_paths``):
+
+``det-wallclock``
+    Wall-clock reads (``time.time``, argless ``datetime.now``,
+    ``utcnow``/``today``).  A replayed process observes a different clock
+    and derives different decisions.  PR 8 already fixed one of these
+    (``launch/dryrun.py`` timing on ``time.time``); ``perf_counter`` /
+    ``monotonic`` are allowed — they never feed decision state here and
+    flagging them would only breed waivers.
+
+``det-rng``
+    Unseeded randomness: the ``random`` module's global generator,
+    legacy ``np.random.*`` global-state calls, and ``default_rng()`` /
+    ``SeedSequence()`` with no seed argument.  Seeded construction
+    (``default_rng(seed)``, ``jax.random.PRNGKey(s)``) is fine.
+
+``det-set-order``
+    Iterating a set of strings — or letting one escape into a callee
+    that iterates it — salts the order by ``PYTHONHASHSEED``.  The pass
+    tracks names bound to set displays/comprehensions/``set(...)`` per
+    function scope and flags (a) direct iteration (``for``/comprehension
+    generators) and (b) passing the set as a call argument to anything
+    that isn't order-insensitive (``sorted``/``len``/``min``/``max``/
+    ``sum``/``any``/``all``/``set``/``frozenset``).  Membership tests,
+    set algebra, and ``.add``/``.discard`` mutation are untouched.
+    Element types are unknown statically, so int-element sets (whose
+    CPython order is not hash-salted) get flagged too — waive those
+    with a reason, or just sort them if order is immaterial.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..framework import AnalyzerConfig, Finding, LintPass, ParsedFile
+
+__all__ = ["DeterminismPass"]
+
+# Callees that consume an iterable without exposing its order.
+_ORDER_INSENSITIVE_CALLEES = {
+    "sorted", "len", "min", "max", "sum", "any", "all", "set", "frozenset",
+    "bool", "isinstance", "id", "iter",  # iter() alone exposes nothing yet
+}
+
+_WALLCLOCK_ATTRS = {
+    ("time", "time"),
+    ("time", "time_ns"),
+    ("datetime", "utcnow"),
+    ("datetime", "today"),
+    ("date", "today"),
+}
+
+# np.random legacy global-state functions are all nondeterministic unless
+# the process seeds them — and seeding global state is itself a hazard.
+_SEEDED_RNG_CTORS = {"default_rng", "SeedSequence", "Generator", "PRNGKey"}
+
+
+def _scoped_walk(body):
+    """Walk statements without descending into nested function scopes
+    (those are analyzed as their own ``_SetOrderScope``)."""
+    stack = list(body)
+    while stack:
+        node = stack.pop()
+        if isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+        ):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _attr_chain(node: ast.AST) -> list:
+    """['np', 'random', 'default_rng'] for np.random.default_rng — [] if
+    the expression isn't a plain name/attribute chain."""
+    parts: list = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        parts.reverse()
+        return parts
+    return []
+
+
+class DeterminismPass(LintPass):
+    name = "determinism"
+    rules = {
+        "det-wallclock": "wall-clock read in a decision path breaks replay",
+        "det-rng": "unseeded RNG in a decision path breaks replay",
+        "det-set-order": "set iteration order is PYTHONHASHSEED-salted",
+    }
+
+    def applies(self, pf: ParsedFile, config: AnalyzerConfig) -> bool:
+        return config.is_decision_path(pf.path)
+
+    def run(self, pf: ParsedFile, config: AnalyzerConfig) -> list:
+        findings: list = []
+        for node in ast.walk(pf.tree):
+            if isinstance(node, ast.Call):
+                findings.extend(self._check_call(pf, node))
+        # Set-order tracking needs scope, not a flat walk: analyze each
+        # function body (and the module body) as one scope.
+        scopes = [pf.tree] + [
+            n
+            for n in ast.walk(pf.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        ]
+        for scope in scopes:
+            findings.extend(_SetOrderScope(pf, scope).findings())
+        return findings
+
+    # -- wall clock / rng ---------------------------------------------------
+    def _check_call(self, pf: ParsedFile, call: ast.Call) -> list:
+        chain = _attr_chain(call.func)
+        if not chain:
+            return []
+        out: list = []
+        tail2 = tuple(chain[-2:])
+        if tail2 in _WALLCLOCK_ATTRS:
+            out.append(
+                Finding(
+                    pf.path, call.lineno, "det-wallclock",
+                    f"{'.'.join(chain)}() reads the wall clock; replay "
+                    f"re-derives decisions in a different process — use a "
+                    f"logical/sim clock (or perf_counter for pure timing)",
+                )
+            )
+        elif chain[-1] == "now" and tail2[0] in ("datetime", "dt"):
+            # datetime.now() with no tz argument is wall-clock local time;
+            # datetime.now(tz=utc) is *also* wall-clock — flag both.
+            out.append(
+                Finding(
+                    pf.path, call.lineno, "det-wallclock",
+                    f"{'.'.join(chain)}() reads the wall clock; decisions "
+                    f"must derive from the journaled/sim clock",
+                )
+            )
+        if "random" in chain[:-1] and chain[0] != "jax":
+            # random.x(...), np.random.x(...), numpy.random.x(...).
+            # jax.random is exempt: purely functional, key-threaded.
+            fn = chain[-1]
+            seeded = fn in _SEEDED_RNG_CTORS and call.args
+            if not seeded:
+                out.append(
+                    Finding(
+                        pf.path, call.lineno, "det-rng",
+                        f"{'.'.join(chain)}() draws from "
+                        f"{'an unseeded generator' if fn in _SEEDED_RNG_CTORS else 'global RNG state'}"
+                        f"; decision paths must thread an explicitly "
+                        f"seeded Generator",
+                    )
+                )
+        return out
+
+
+class _SetOrderScope:
+    """Track set-bound locals in one scope; flag order-exposing uses."""
+
+    def __init__(self, pf: ParsedFile, scope: ast.AST) -> None:
+        self.pf = pf
+        self.out: list = []
+        self.set_names: set = set()
+        body = scope.body if hasattr(scope, "body") else []
+        # First sweep: which locals are bound to set expressions anywhere
+        # in this scope (a name rebound to a non-set anywhere is dropped —
+        # conservative in the don't-flag direction).
+        rebound_nonset: set = set()
+        for node in _scoped_walk(body):
+            tgt = None
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tgt, val = node.targets[0], node.value
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                tgt, val = node.target, node.value
+            else:
+                continue
+            if isinstance(tgt, ast.Name):
+                if self._is_set_expr(val):
+                    self.set_names.add(tgt.id)
+                else:
+                    rebound_nonset.add(tgt.id)
+        self.set_names -= rebound_nonset
+        self.body = body
+
+    @staticmethod
+    def _is_set_expr(node: ast.AST) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        return (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id in ("set", "frozenset")
+        )
+
+    def _is_tracked_set(self, node: ast.AST) -> bool:
+        if self._is_set_expr(node):
+            return True
+        return isinstance(node, ast.Name) and node.id in self.set_names
+
+    def findings(self) -> list:
+        for node in _scoped_walk(self.body):
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                self._check_iter(node.iter)
+            elif isinstance(
+                node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                       ast.GeneratorExp)
+            ):
+                for gen in node.generators:
+                    self._check_iter(gen.iter)
+            elif isinstance(node, ast.Call):
+                self._check_escape(node)
+        return self.out
+
+    def _check_iter(self, it: ast.AST) -> None:
+        if self._is_tracked_set(it):
+            label = (
+                it.id if isinstance(it, ast.Name) else "a set expression"
+            )
+            self.out.append(
+                Finding(
+                    self.pf.path, it.lineno, "det-set-order",
+                    f"iteration over set {label!r}: order is salted by "
+                    f"PYTHONHASHSEED for str elements — iterate "
+                    f"sorted({label if isinstance(it, ast.Name) else '...'})"
+                    f" (or waive if elements are ints)",
+                )
+            )
+
+    def _check_escape(self, call: ast.Call) -> None:
+        callee = ""
+        if isinstance(call.func, ast.Name):
+            callee = call.func.id
+        elif isinstance(call.func, ast.Attribute):
+            callee = call.func.attr
+        if callee in _ORDER_INSENSITIVE_CALLEES:
+            return
+        # A method called *on* the tracked set (s.add/.discard/.union) is
+        # not an escape; the set appearing as an *argument* is.  A fresh
+        # empty set() passed inline (e.g. a setdefault default) has no
+        # order to leak.
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            if (
+                isinstance(arg, ast.Call)
+                and isinstance(arg.func, ast.Name)
+                and arg.func.id in ("set", "frozenset")
+                and not arg.args
+            ):
+                continue
+            if self._is_tracked_set(arg):
+                label = arg.id if isinstance(arg, ast.Name) else "set expr"
+                self.out.append(
+                    Finding(
+                        self.pf.path, arg.lineno, "det-set-order",
+                        f"set {label!r} passed to {callee or 'a call'}(): "
+                        f"its iteration order escapes unsorted — pass "
+                        f"sorted(...) so downstream iteration is "
+                        f"hash-seed-independent",
+                    )
+                )

@@ -1,0 +1,203 @@
+"""Journal-schema pass: goldens and the recovery log cannot drift apart.
+
+PR 8 promoted the golden-trace codec into ``core/journal.py`` so the
+write-ahead journal and the goldens share ONE schema: every field the
+``encode_*`` emitters write is compared during recovery by
+``diff_entries`` (divergence is a hard ``RecoveryError``).  Two drift
+modes survive review and every existing test:
+
+``journal-field-unconsumed``
+    A field emitted by an ``encode_*`` function that ``diff_entries``
+    never compares.  The journal records it, recovery silently ignores
+    it — a divergence in that field replays "bit-identically" while the
+    actual state differs.  Add it to the ``diff_entries`` field tuple
+    (and to goldens via re-record) or don't emit it.
+
+``journal-version-drift``
+    The emitted field set changed relative to the checked-in manifest
+    (``tools/analysis/schema_manifest.json``) while
+    ``TRACE_SCHEMA_VERSION`` did not.  Old goldens/journals would load
+    under the same version but diff against entries with different
+    shape.  Bump ``TRACE_SCHEMA_VERSION`` and refresh the manifest
+    (``python -m tools.analysis --update-schema-manifest``) in the same
+    change.
+
+Scope: any module that defines both an ``encode_outcome`` function and a
+``diff_entries`` function (i.e. ``core/journal.py`` and test fixtures).
+
+Emitted fields = string keys of dict literals plus string-key subscript
+stores (``entry["stall"] = ...``) inside ``encode_*`` functions.
+Consumed fields = string constants in the iterable of ``for field in
+(...)`` loops plus ``.get("f")``/``["f"]`` keys inside ``diff_entries``.
+"""
+from __future__ import annotations
+
+import ast
+import json
+from pathlib import Path
+
+from ..framework import AnalyzerConfig, Finding, LintPass, ParsedFile
+
+__all__ = ["JournalSchemaPass", "default_manifest_path", "extract_schema"]
+
+
+def default_manifest_path() -> Path:
+    return Path(__file__).resolve().parent.parent / "schema_manifest.json"
+
+
+def extract_schema(tree: ast.Module) -> dict:
+    """(version, emitted fields w/ lines, consumed fields) from a module."""
+    version = None
+    version_line = 1
+    emitted: dict = {}  # field -> first emit line
+    consumed: set = set()
+    for node in tree.body:
+        if (
+            isinstance(node, ast.Assign)
+            and len(node.targets) == 1
+            and isinstance(node.targets[0], ast.Name)
+            and node.targets[0].id == "TRACE_SCHEMA_VERSION"
+            and isinstance(node.value, ast.Constant)
+        ):
+            version = node.value.value
+            version_line = node.lineno
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if fn.name.startswith("encode_"):
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Dict):
+                    for k in node.keys:
+                        if isinstance(k, ast.Constant) and isinstance(
+                            k.value, str
+                        ):
+                            emitted.setdefault(k.value, k.lineno)
+                elif (
+                    isinstance(node, ast.Assign)
+                    and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Subscript)
+                    and isinstance(node.targets[0].slice, ast.Constant)
+                    and isinstance(node.targets[0].slice.value, str)
+                ):
+                    emitted.setdefault(
+                        node.targets[0].slice.value, node.lineno
+                    )
+        elif fn.name == "diff_entries":
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.For, ast.AsyncFor)) and isinstance(
+                    node.iter, (ast.Tuple, ast.List)
+                ):
+                    for elt in node.iter.elts:
+                        if isinstance(elt, ast.Constant) and isinstance(
+                            elt.value, str
+                        ):
+                            consumed.add(elt.value)
+                elif isinstance(node, ast.Subscript) and isinstance(
+                    node.slice, ast.Constant
+                ):
+                    if isinstance(node.slice.value, str):
+                        consumed.add(node.slice.value)
+                elif (
+                    isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "get"
+                    and node.args
+                    and isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[0].value, str)
+                ):
+                    consumed.add(node.args[0].value)
+    return {
+        "version": version,
+        "version_line": version_line,
+        "emitted": emitted,
+        "consumed": consumed,
+    }
+
+
+class JournalSchemaPass(LintPass):
+    name = "journal-schema"
+    rules = {
+        "journal-field-unconsumed": "journaled field never compared by "
+        "diff_entries — divergence in it is invisible to recovery",
+        "journal-version-drift": "journal field set changed without a "
+        "TRACE_SCHEMA_VERSION bump",
+    }
+
+    def applies(self, pf: ParsedFile, config: AnalyzerConfig) -> bool:
+        return (
+            "def encode_outcome" in pf.source
+            and "def diff_entries" in pf.source
+        )
+
+    def run(self, pf: ParsedFile, config: AnalyzerConfig) -> list:
+        schema = extract_schema(pf.tree)
+        findings: list = []
+        for field, line in sorted(schema["emitted"].items()):
+            if field not in schema["consumed"]:
+                findings.append(
+                    Finding(
+                        pf.path, line, "journal-field-unconsumed",
+                        f"encode_* emits {field!r} but diff_entries never "
+                        f"compares it: recovery would ignore divergence in "
+                        f"this field — add it to the diff field tuple or "
+                        f"stop emitting it",
+                    )
+                )
+        manifest_path = Path(
+            config.schema_manifest or default_manifest_path()
+        )
+        if manifest_path.exists() and schema["version"] is not None:
+            manifest = json.loads(manifest_path.read_text())
+            man_fields = set(manifest.get("fields", []))
+            cur_fields = set(schema["emitted"])
+            if (
+                cur_fields != man_fields
+                and schema["version"] == manifest.get("version")
+            ):
+                added = sorted(cur_fields - man_fields)
+                removed = sorted(man_fields - cur_fields)
+                for field in added:
+                    findings.append(
+                        Finding(
+                            pf.path, schema["emitted"][field],
+                            "journal-version-drift",
+                            f"field {field!r} added to the journal schema "
+                            f"but TRACE_SCHEMA_VERSION is still "
+                            f"{schema['version']}: old goldens/journals "
+                            f"would replay against a different entry shape "
+                            f"— bump the version and refresh the manifest",
+                        )
+                    )
+                if removed:
+                    findings.append(
+                        Finding(
+                            pf.path, schema["version_line"],
+                            "journal-version-drift",
+                            f"field(s) {', '.join(map(repr, removed))} "
+                            f"removed from the journal schema but "
+                            f"TRACE_SCHEMA_VERSION is still "
+                            f"{schema['version']} — bump the version and "
+                            f"refresh the manifest",
+                        )
+                    )
+        return findings
+
+    @staticmethod
+    def write_manifest(journal_source_path, manifest_path=None) -> dict:
+        """Regenerate the manifest from the journal module's current
+        schema (used by --update-schema-manifest alongside a version
+        bump)."""
+        tree = ast.parse(Path(journal_source_path).read_text())
+        schema = extract_schema(tree)
+        doc = {
+            "comment": (
+                "Journal/golden trace field manifest: regenerate with "
+                "--update-schema-manifest WHEN bumping "
+                "TRACE_SCHEMA_VERSION (never to paper over drift)."
+            ),
+            "version": schema["version"],
+            "fields": sorted(schema["emitted"]),
+        }
+        path = Path(manifest_path or default_manifest_path())
+        path.write_text(json.dumps(doc, indent=1) + "\n")
+        return doc

@@ -1,0 +1,336 @@
+"""Lock-order pass: enforce the shard tier's documented lock hierarchy.
+
+docs/sharding.md (normative as of this PR): the **steal lock is
+outermost**; **shard locks nest inside it in ascending shard id order**;
+nothing blocking (disk/device I/O, fsync, sleeps) runs while a shard lock
+is held.  PR 7's ``ShardedCrossMatch`` follows this by construction
+(victim choice under ``_steal_lock``, migration under
+``with self._locks[lo], self._locks[hi]`` after ``lo, hi = sorted(...)``)
+— but nothing *enforced* it, and an inverted pair deadlocks only under a
+precise interleaving the tests may never hit.
+
+Lock model (per class):
+
+* ``self.<name> = threading.Lock()``                      -> scalar lock
+* ``self.<name> = [threading.Lock() for ...]``            -> indexed family
+
+A scalar lock whose name contains a fragment from
+``AnalyzerConfig.steal_lock_names`` ranks *outermost* (level 0); indexed
+families rank level 1, ordered by index.  Rules:
+
+``lock-order-inversion``
+    Acquiring a level-0 lock while holding a level-1 lock, or acquiring
+    two locks of one family without static proof the indices ascend.
+    Accepted proofs: integer-constant indices in ascending order, or
+    index names bound by an ``a, b = sorted((x, y))`` unpacking (rank =
+    tuple position) acquired in rank order.
+
+``lock-bare-acquire``
+    ``.acquire()`` on a recognized lock outside a ``with`` and without an
+    immediately following ``try/finally`` that releases it — an exception
+    between acquire and release leaks the lock and wedges every sibling
+    shard.
+
+``lock-blocking-io``
+    A blocking call (``os.fsync``, ``time.sleep``, ``<store>.read``) made
+    while a shard (level-1) lock is held: shard locks serialize the
+    dispatch hot path, so I/O under one stalls stealing and sibling
+    rounds.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from ..framework import AnalyzerConfig, Finding, LintPass, ParsedFile
+
+__all__ = ["LockOrderPass"]
+
+
+def _is_lock_ctor(node: ast.AST) -> bool:
+    """threading.Lock() / threading.RLock() / Lock()."""
+    if not isinstance(node, ast.Call):
+        return False
+    f = node.func
+    name = f.attr if isinstance(f, ast.Attribute) else getattr(f, "id", "")
+    return name in ("Lock", "RLock")
+
+
+class _Acq:
+    """One lock acquisition: family + (optional) index expression."""
+
+    def __init__(self, family: str, level: int, index: Optional[ast.AST],
+                 lineno: int) -> None:
+        self.family = family
+        self.level = level
+        self.index = index
+        self.lineno = lineno
+
+    def describe(self) -> str:
+        if self.index is None:
+            return f"self.{self.family}"
+        return f"self.{self.family}[{ast.unparse(self.index)}]"
+
+
+class LockOrderPass(LintPass):
+    name = "lock-order"
+    rules = {
+        "lock-order-inversion": "nested acquisition violates the hierarchy "
+        "(steal lock outermost, shard locks ascending by id)",
+        "lock-bare-acquire": "acquire() without with/try-finally leaks the "
+        "lock on an exception path",
+        "lock-blocking-io": "blocking I/O while holding a shard lock stalls "
+        "sibling shards",
+    }
+
+    def applies(self, pf: ParsedFile, config: AnalyzerConfig) -> bool:
+        return "threading" in pf.source or "Lock(" in pf.source
+
+    def run(self, pf: ParsedFile, config: AnalyzerConfig) -> list:
+        findings: list = []
+        for node in ast.walk(pf.tree):
+            if isinstance(node, ast.ClassDef):
+                findings.extend(_ClassLockAnalysis(pf, node, config).run())
+        return findings
+
+
+class _ClassLockAnalysis:
+    def __init__(self, pf: ParsedFile, cls: ast.ClassDef,
+                 config: AnalyzerConfig) -> None:
+        self.pf = pf
+        self.cls = cls
+        self.config = config
+        # family name -> level (0 = outermost scalar steal lock,
+        # 1 = indexed shard family or plain scalar lock)
+        self.locks: dict = {}
+        self._discover()
+
+    def _discover(self) -> None:
+        for node in ast.walk(self.cls):
+            if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                continue
+            tgt = node.targets[0]
+            if not (
+                isinstance(tgt, ast.Attribute)
+                and isinstance(tgt.value, ast.Name)
+                and tgt.value.id == "self"
+            ):
+                continue
+            val = node.value
+            if _is_lock_ctor(val):
+                is_steal = any(
+                    frag in tgt.attr for frag in self.config.steal_lock_names
+                )
+                self.locks[tgt.attr] = 0 if is_steal else 1
+            elif isinstance(val, (ast.List, ast.ListComp)):
+                elts = (
+                    [val.elt] if isinstance(val, ast.ListComp) else val.elts
+                )
+                if elts and all(_is_lock_ctor(e) for e in elts):
+                    self.locks[tgt.attr] = 1
+
+    # -- per-function analysis ------------------------------------------------
+    def run(self) -> list:
+        if not self.locks:
+            return []
+        out: list = []
+        for node in self.cls.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.extend(self._analyze_function(node))
+        return out
+
+    def _lock_expr(self, expr: ast.AST) -> Optional[_Acq]:
+        """Recognize self.<fam> / self.<fam>[i] where <fam> is a lock."""
+        index = None
+        node = expr
+        if isinstance(node, ast.Subscript):
+            index = node.slice
+            node = node.value
+        if (
+            isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"
+            and node.attr in self.locks
+        ):
+            return _Acq(node.attr, self.locks[node.attr], index, expr.lineno)
+        return None
+
+    def _analyze_function(self, fn) -> list:
+        out: list = []
+        # names ranked by a `lo, hi = sorted(...)` unpack: name -> rank
+        sorted_ranks: dict = {}
+        for node in ast.walk(fn):
+            if (
+                isinstance(node, ast.Assign)
+                and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Tuple)
+                and isinstance(node.value, ast.Call)
+                and isinstance(node.value.func, ast.Name)
+                and node.value.func.id == "sorted"
+            ):
+                for rank, elt in enumerate(node.targets[0].elts):
+                    if isinstance(elt, ast.Name):
+                        sorted_ranks[elt.id] = rank
+        self._walk(fn.body, held=[], sorted_ranks=sorted_ranks, out=out)
+        return out
+
+    def _walk(self, body, held: list, sorted_ranks: dict, out: list) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                acquired = []
+                for item in stmt.items:
+                    acq = self._lock_expr(item.context_expr)
+                    if acq is not None:
+                        self._check_order(held + acquired, acq, sorted_ranks,
+                                          out)
+                        acquired.append(acq)
+                self._walk(stmt.body, held + acquired, sorted_ranks, out)
+                continue
+            sub_bodies = [
+                getattr(stmt, f)
+                for f in ("body", "orelse", "finalbody")
+                if getattr(stmt, f, None)
+            ] + [h.body for h in getattr(stmt, "handlers", []) or []]
+            if sub_bodies:
+                # Compound statement: only recurse — its leaf statements
+                # are scanned at their own nesting level.
+                for sub in sub_bodies:
+                    self._walk(sub, held, sorted_ranks, out)
+                continue
+            # Simple statement: scan for bare acquire() and blocking I/O.
+            for node in ast.walk(stmt):
+                if (
+                    isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "acquire"
+                ):
+                    acq = self._lock_expr(node.func.value)
+                    if acq is not None and not self._released_in_finally(
+                        stmt, body, acq
+                    ):
+                        out.append(
+                            Finding(
+                                self.pf.path, node.lineno,
+                                "lock-bare-acquire",
+                                f"{acq.describe()}.acquire() outside "
+                                f"with/try-finally: an exception before "
+                                f"release() wedges every thread waiting on "
+                                f"it — use a with block",
+                            )
+                        )
+            if held and max(h.level for h in held) >= 1:
+                self._check_blocking(stmt, held, out)
+
+    def _released_in_finally(self, stmt, body, acq: _Acq) -> bool:
+        """Accept `l.acquire()` immediately followed by try/finally that
+        calls `l.release()` in its finalbody."""
+        try:
+            i = body.index(stmt)
+        except ValueError:
+            return False
+        if i + 1 >= len(body) or not isinstance(body[i + 1], ast.Try):
+            return False
+        for node in ast.walk(ast.Module(body=body[i + 1].finalbody,
+                                        type_ignores=[])):
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "release"
+            ):
+                rel = self._lock_expr(node.func.value)
+                if rel is not None and rel.family == acq.family:
+                    return True
+        return False
+
+    def _check_order(self, held: list, acq: _Acq, sorted_ranks: dict,
+                     out: list) -> None:
+        for h in held:
+            if acq.level < h.level:
+                out.append(
+                    Finding(
+                        self.pf.path, acq.lineno, "lock-order-inversion",
+                        f"acquiring outer-level {acq.describe()} while "
+                        f"holding {h.describe()}: the steal lock is "
+                        f"outermost in the documented hierarchy "
+                        f"(docs/sharding.md) — take it first or not at all",
+                    )
+                )
+            elif (
+                acq.level == h.level
+                and acq.family == h.family
+                and acq.index is not None
+                and h.index is not None
+                and not self._provably_ascending(h.index, acq.index,
+                                                sorted_ranks)
+            ):
+                out.append(
+                    Finding(
+                        self.pf.path, acq.lineno, "lock-order-inversion",
+                        f"acquiring {acq.describe()} while holding "
+                        f"{h.describe()}: cannot prove ascending index "
+                        f"order — bind `lo, hi = sorted((a, b))` and "
+                        f"acquire [lo] then [hi]",
+                    )
+                )
+
+    @staticmethod
+    def _provably_ascending(first: ast.AST, second: ast.AST,
+                            sorted_ranks: dict) -> bool:
+        if (
+            isinstance(first, ast.Constant)
+            and isinstance(second, ast.Constant)
+            and isinstance(first.value, int)
+            and isinstance(second.value, int)
+        ):
+            return first.value < second.value
+        if (
+            isinstance(first, ast.Name)
+            and isinstance(second, ast.Name)
+            and first.id in sorted_ranks
+            and second.id in sorted_ranks
+        ):
+            return sorted_ranks[first.id] < sorted_ranks[second.id]
+        return False
+
+    def _check_blocking(self, stmt, held: list, out: list) -> None:
+        shard = next(h for h in held if h.level >= 1)
+        for node in ast.walk(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            desc = self._blocking_desc(node)
+            if desc:
+                out.append(
+                    Finding(
+                        self.pf.path, node.lineno, "lock-blocking-io",
+                        f"{desc} while holding {shard.describe()}: shard "
+                        f"locks serialize the dispatch hot path — do the "
+                        f"I/O outside the lock and publish under it",
+                    )
+                )
+
+    def _blocking_desc(self, call: ast.Call) -> Optional[str]:
+        f = call.func
+        parts: list = []
+        node = f
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if isinstance(node, ast.Name):
+            parts.append(node.id)
+        parts.reverse()
+        dotted = ".".join(parts)
+        for blk in self.config.blocking_calls:
+            if dotted == blk or dotted.endswith("." + blk):
+                return f"{dotted}()"
+        # <...store...>.read(...): catalog/disk reads
+        if (
+            parts
+            and parts[-1] == "read"
+            and any(
+                root in p
+                for p in parts[:-1]
+                for root in self.config.blocking_read_roots
+            )
+        ):
+            return f"{dotted}()"
+        return None

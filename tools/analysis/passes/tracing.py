@@ -1,0 +1,410 @@
+"""Tracing-safety pass: jit/pallas-reachable code must stay traceable.
+
+The fused/shared kernels are compiled once per pow2 shape pair — that
+compile bound is the PR 1 invariant ``jit_cache_size()`` gates
+*dynamically* in benchmarks.  This pass makes the underlying hygiene
+*static*.  Roots are:
+
+* functions decorated ``@jax.jit`` or
+  ``@functools.partial(jax.jit, static_argnames=(...))`` — parameters
+  not named in ``static_argnames`` are **traced**;
+* kernel bodies handed to ``pl.pallas_call`` (directly or via
+  ``functools.partial(kernel, **static_kwargs)``) — positional
+  parameters are traced Refs, keyword-only/partial-bound parameters are
+  static.
+
+Taint propagates through assignments, arithmetic, and module-local
+calls (each call site re-analyzes the callee under the actual argument
+taints, memoized).  ``x.shape`` / ``x.ndim`` / ``x.dtype`` / ``len(x)``
+*clear* taint: shape math is static under jit and is exactly how the
+pow2 wrappers are supposed to branch.  Results of ``jnp.* / jax.* /
+pl.*`` calls are tainted (tracers) regardless of inputs.
+
+``trace-py-branch``
+    ``if``/``while``/ternary/``assert`` on a traced value: under jit
+    this raises ``TracerBoolConversionError`` at best, and at worst (in
+    shape-dependent helper code) silently bakes one branch into the
+    compiled artifact.
+
+``trace-concretize``
+    ``float()``/``int()``/``bool()``/``.item()``/``.tolist()`` on a
+    traced value — forces a device sync or a trace error.
+
+``trace-shape-pow2``
+    ``jnp.pad``/``np.pad`` inside jit-reachable code whose enclosing
+    function is not a designated pow2/block helper
+    (``AnalyzerConfig.pow2_helpers``) and whose arguments reference no
+    such helper: ad-hoc padding mints arbitrary shapes, and every novel
+    shape is a fresh XLA compile — the O(log M) compile bound only
+    holds if all shape-changing pads route through the helpers.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from ..framework import AnalyzerConfig, Finding, LintPass, ParsedFile
+
+__all__ = ["TracingPass"]
+
+_TAINT_ROOT_MODULES = {"jnp", "jax", "pl", "lax"}
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size"}
+_CONCRETIZERS = {"float", "int", "bool", "complex"}
+_CONCRETIZE_METHODS = {"item", "tolist", "__bool__", "__float__"}
+
+
+def _decorator_jit_statics(dec: ast.AST) -> Optional[set]:
+    """If ``dec`` is jax.jit / functools.partial(jax.jit, ...), return the
+    set of static_argnames (empty set when none); else None."""
+    def is_jax_jit(node):
+        return (
+            isinstance(node, ast.Attribute)
+            and node.attr == "jit"
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "jax"
+        ) or (isinstance(node, ast.Name) and node.id == "jit")
+
+    if is_jax_jit(dec):
+        return set()
+    if isinstance(dec, ast.Call):
+        f = dec.func
+        is_partial = (
+            isinstance(f, ast.Attribute) and f.attr == "partial"
+        ) or (isinstance(f, ast.Name) and getattr(f, "id", "") == "partial")
+        if is_partial and dec.args and is_jax_jit(dec.args[0]):
+            statics: set = set()
+            for kw in dec.keywords:
+                if kw.arg in ("static_argnames", "static_argnums"):
+                    for node in ast.walk(kw.value):
+                        if isinstance(node, ast.Constant) and isinstance(
+                            node.value, str
+                        ):
+                            statics.add(node.value)
+            return statics
+        if is_jax_jit(f):  # @jax.jit(donate_argnums=...) style
+            statics = set()
+            for kw in dec.keywords:
+                if kw.arg in ("static_argnames",):
+                    for node in ast.walk(kw.value):
+                        if isinstance(node, ast.Constant) and isinstance(
+                            node.value, str
+                        ):
+                            statics.add(node.value)
+            return statics
+    return None
+
+
+class TracingPass(LintPass):
+    name = "tracing"
+    rules = {
+        "trace-py-branch": "Python control flow on a traced value",
+        "trace-concretize": "host concretization of a traced value",
+        "trace-shape-pow2": "ad-hoc padding bypasses the pow2 bucketing "
+        "helpers, unbounding the jit compile count",
+    }
+
+    def applies(self, pf: ParsedFile, config: AnalyzerConfig) -> bool:
+        return "jax" in pf.source or "pallas" in pf.source
+
+    def run(self, pf: ParsedFile, config: AnalyzerConfig) -> list:
+        functions = {
+            n.name: n
+            for n in ast.walk(pf.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        roots = self._find_roots(pf, functions)
+        if not roots:
+            return []
+        analyzer = _TaintAnalyzer(pf, functions, config)
+        for fn, traced_params in roots:
+            analyzer.analyze(fn, traced_params)
+        return analyzer.findings
+
+    # -- root discovery -------------------------------------------------------
+    def _find_roots(self, pf: ParsedFile, functions: dict) -> list:
+        roots: list = []
+        for fn in functions.values():
+            for dec in fn.decorator_list:
+                statics = _decorator_jit_statics(dec)
+                if statics is not None:
+                    traced = {
+                        a.arg
+                        for a in list(fn.args.args)
+                        + list(fn.args.posonlyargs)
+                        if a.arg not in statics
+                    }
+                    roots.append((fn, traced))
+                    break
+        # Local aliases: `kern = functools.partial(_kernel, **static)` —
+        # record which module-level functions each local name references,
+        # so `pallas_call(kern, ...)` resolves to `_kernel`.
+        aliases: dict = {}
+        for node in ast.walk(pf.tree):
+            if (
+                isinstance(node, ast.Assign)
+                and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Call)
+            ):
+                referenced = [
+                    n.id
+                    for n in ast.walk(node.value)
+                    if isinstance(n, ast.Name) and n.id in functions
+                ]
+                if referenced:
+                    aliases[node.targets[0].id] = referenced
+        # pallas_call kernels: pallas_call(kern, ...) or
+        # pallas_call(functools.partial(kern, **static), ...)
+        for node in ast.walk(pf.tree):
+            if not (isinstance(node, ast.Call)):
+                continue
+            f = node.func
+            callee = f.attr if isinstance(f, ast.Attribute) else getattr(
+                f, "id", ""
+            )
+            if callee != "pallas_call" or not node.args:
+                continue
+            kern_names: list = []
+            for kname in self._kernel_names(node.args[0]):
+                if kname in functions:
+                    kern_names.append(kname)
+                kern_names.extend(aliases.get(kname, []))
+            for kname in kern_names:
+                fn = functions.get(kname)
+                if fn is None:
+                    continue
+                # positional params = traced Refs; kwonly = static
+                traced = {
+                    a.arg
+                    for a in list(fn.args.args) + list(fn.args.posonlyargs)
+                }
+                roots.append((fn, traced))
+        return roots
+
+    @staticmethod
+    def _kernel_names(arg: ast.AST) -> list:
+        """Kernel function names referenced by pallas_call's first arg,
+        following one level of local Name indirection is not attempted —
+        `kern = functools.partial(_kernel, ...)` assigns are resolved by
+        scanning the module for partial() binds of known functions."""
+        names: list = []
+        if isinstance(arg, ast.Name):
+            names.append(arg.id)
+        elif isinstance(arg, ast.Call):
+            for sub in ast.walk(arg):
+                if isinstance(sub, ast.Name):
+                    names.append(sub.id)
+        return names
+
+
+class _TaintAnalyzer:
+    """Per-function forward taint propagation with callsite-sensitive
+    descent into module-local callees (memoized on taint signature)."""
+
+    MAX_DEPTH = 6
+
+    def __init__(self, pf: ParsedFile, functions: dict,
+                 config: AnalyzerConfig) -> None:
+        self.pf = pf
+        self.functions = functions
+        self.config = config
+        self.findings: list = []
+        self._seen: set = set()  # (fn-name, frozenset(traced)) memo
+        self._emitted: set = set()  # dedupe identical findings
+
+    def analyze(self, fn, traced_params: set, depth: int = 0) -> None:
+        key = (fn.name, frozenset(traced_params))
+        if key in self._seen or depth > self.MAX_DEPTH:
+            return
+        self._seen.add(key)
+        # kernels resolved via functools.partial: kwonly args bound in the
+        # partial are static, so drop them from the traced set.
+        kwonly = {a.arg for a in fn.args.kwonlyargs}
+        tainted = set(traced_params) - kwonly
+        _FunctionTaint(self, fn, tainted, depth).run()
+
+    def emit(self, line: int, rule: str, message: str) -> None:
+        f = Finding(self.pf.path, line, rule, message)
+        if (line, rule, message) not in self._emitted:
+            self._emitted.add((line, rule, message))
+            self.findings.append(f)
+
+
+class _FunctionTaint:
+    def __init__(self, analyzer: _TaintAnalyzer, fn, tainted: set,
+                 depth: int) -> None:
+        self.a = analyzer
+        self.fn = fn
+        self.tainted = set(tainted)
+        self.depth = depth
+        self.is_pow2_helper = fn.name in analyzer.config.pow2_helpers
+
+    # -- expression taint -----------------------------------------------------
+    def expr_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            # x.shape / x.ndim / x.dtype clear taint: static under trace.
+            if node.attr in _SHAPE_ATTRS:
+                return False
+            return self.expr_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.expr_tainted(node.value) or self.expr_tainted(
+                node.slice
+            )
+        if isinstance(node, ast.Call):
+            return self.call_tainted(node)
+        if isinstance(node, (ast.Constant, ast.Lambda)):
+            return False
+        return any(
+            self.expr_tainted(c) for c in ast.iter_child_nodes(node)
+        )
+
+    def call_tainted(self, call: ast.Call) -> bool:
+        f = call.func
+        # len(x), int(x.shape[0]) etc: taint-clearing when used on shapes,
+        # but int(traced) is concretization, handled in visit.
+        if isinstance(f, ast.Name) and f.id == "len":
+            return False
+        chain_root = f
+        while isinstance(chain_root, ast.Attribute):
+            chain_root = chain_root.value
+        if (
+            isinstance(chain_root, ast.Name)
+            and chain_root.id in _TAINT_ROOT_MODULES
+        ):
+            return True  # jnp/jax/pl results are tracers inside jit
+        args_tainted = any(self.expr_tainted(a) for a in call.args) or any(
+            self.expr_tainted(kw.value) for kw in call.keywords
+        )
+        return args_tainted
+
+    # -- driver ---------------------------------------------------------------
+    def run(self) -> None:
+        self.visit_body(self.fn.body)
+
+    def visit_body(self, body) -> None:
+        for stmt in body:
+            self.visit_stmt(stmt)
+
+    def visit_stmt(self, stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # Nested defs (pallas @pl.when closures) share the enclosing
+            # taint environment.
+            self.visit_body(stmt.body)
+            return
+        if isinstance(stmt, ast.Assign):
+            t = self.expr_tainted(stmt.value)
+            for tgt in stmt.targets:
+                self.bind_target(tgt, t)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self.bind_target(stmt.target, self.expr_tainted(stmt.value))
+        elif isinstance(stmt, ast.AugAssign):
+            t = self.expr_tainted(stmt.value) or self.expr_tainted(
+                stmt.target
+            )
+            self.bind_target(stmt.target, t)
+        elif isinstance(stmt, (ast.If, ast.While)):
+            self.check_branch(stmt.test)
+        elif isinstance(stmt, ast.Assert):
+            self.check_branch(stmt.test, kind="assert")
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            if self.expr_tainted(stmt.iter):
+                self.a.emit(
+                    stmt.iter.lineno, "trace-py-branch",
+                    f"in `{self.fn.name}`: Python for-loop over a traced "
+                    f"value — use lax.fori_loop/scan or static shapes",
+                )
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.IfExp):
+                self.check_branch(node.test, kind="ternary")
+            elif isinstance(node, ast.Call):
+                self.check_call(node)
+        # recurse into compound bodies with the updated environment
+        for field in ("body", "orelse", "finalbody"):
+            sub = getattr(stmt, field, None)
+            if sub and not isinstance(
+                stmt, (ast.FunctionDef, ast.AsyncFunctionDef)
+            ):
+                self.visit_body(sub)
+
+    def bind_target(self, tgt, tainted: bool) -> None:
+        if isinstance(tgt, ast.Name):
+            if tainted:
+                self.tainted.add(tgt.id)
+            else:
+                self.tainted.discard(tgt.id)
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for elt in tgt.elts:
+                self.bind_target(elt, tainted)
+
+    def check_branch(self, test: ast.AST, kind: str = "branch") -> None:
+        if self.expr_tainted(test):
+            self.a.emit(
+                test.lineno, "trace-py-branch",
+                f"in `{self.fn.name}`: Python {kind} on a traced value "
+                f"(`{ast.unparse(test)}`) — jit traces one path only; use "
+                f"jnp.where/lax.cond or mark the argument static",
+            )
+
+    def check_call(self, call: ast.Call) -> None:
+        f = call.func
+        # float()/int()/bool() on traced
+        if (
+            isinstance(f, ast.Name)
+            and f.id in _CONCRETIZERS
+            and call.args
+            and self.expr_tainted(call.args[0])
+        ):
+            self.a.emit(
+                call.lineno, "trace-concretize",
+                f"in `{self.fn.name}`: {f.id}() on a traced value forces "
+                f"host concretization — keep it on-device "
+                f"(jnp ops) or mark the argument static",
+            )
+        if (
+            isinstance(f, ast.Attribute)
+            and f.attr in _CONCRETIZE_METHODS
+            and self.expr_tainted(f.value)
+        ):
+            self.a.emit(
+                call.lineno, "trace-concretize",
+                f"in `{self.fn.name}`: .{f.attr}() on a traced value "
+                f"forces host concretization",
+            )
+        # jnp.pad / np.pad outside the pow2 helpers
+        if (
+            isinstance(f, ast.Attribute)
+            and f.attr == "pad"
+            and isinstance(f.value, ast.Name)
+            and f.value.id in ("jnp", "np", "numpy")
+            and not self.is_pow2_helper
+            and not self._mentions_pow2_helper(call)
+        ):
+            self.a.emit(
+                call.lineno, "trace-shape-pow2",
+                f"in `{self.fn.name}`: {f.value.id}.pad() outside the pow2 "
+                f"bucketing helpers mints ad-hoc shapes — every novel "
+                f"shape is a fresh jit compile; route through "
+                f"{'/'.join(self.a.config.pow2_helpers[:2])}",
+            )
+        # descend into module-local callees with actual taints
+        if isinstance(f, ast.Name) and f.id in self.a.functions:
+            callee = self.a.functions[f.id]
+            params = list(callee.args.posonlyargs) + list(callee.args.args)
+            traced: set = set()
+            for i, arg in enumerate(call.args):
+                if i < len(params) and self.expr_tainted(arg):
+                    traced.add(params[i].arg)
+            for kw in call.keywords:
+                if kw.arg and self.expr_tainted(kw.value):
+                    traced.add(kw.arg)
+            self.a.analyze(callee, traced, self.depth + 1)
+
+    def _mentions_pow2_helper(self, call: ast.Call) -> bool:
+        for node in ast.walk(call):
+            if isinstance(node, ast.Name) and (
+                node.id in self.a.config.pow2_helpers
+            ):
+                return True
+        return False
