@@ -14,6 +14,7 @@ def main() -> None:
     t0 = time.time()
     from . import (  # noqa: E402
         bench_adaptive,
+        bench_obs,
         bench_prefetch,
         bench_scheduler,
         bench_shard,
@@ -40,6 +41,7 @@ def main() -> None:
         ("Prefetch: scan-horizon staging vs reactive LRU", bench_prefetch.main),
         ("Shared plans: masked multi-query kernel vs per-predicate", bench_sharedplan.main),
         ("Sharding: multi-shard tier + work stealing vs one loop", bench_shard.main),
+        ("Observability: obs-on/off overhead + snapshot/Perfetto artifacts", bench_obs.main),
         ("Serving: multi-tenant LifeRaft engine", serving_bench.main),
         ("Kernels: micro-benchmarks", kernel_bench.main),
         ("Fault tolerance: goodput under failures", ft_bench.main),

@@ -12,9 +12,16 @@ arrival order), the rest are *batch* (alpha low — data-driven), each
 class running its own control vector with the §6 byte budget arbitrated
 between them.
 
+``--metrics`` attaches the observability layer (docs/observability.md)
+and dumps the Prometheus text exposition after the run; add
+``--metrics-json PATH`` for the consolidated JSON snapshot (metrics +
+control-explain + trace rollup).  Metrics ride the side-channel taps, so
+the schedule is identical with or without them.
+
     PYTHONPATH=src python examples/serve_multitenant.py [--policy liferaft]
     PYTHONPATH=src python examples/serve_multitenant.py --adaptive
     PYTHONPATH=src python examples/serve_multitenant.py --per-tenant
+    PYTHONPATH=src python examples/serve_multitenant.py --adaptive --metrics
 """
 import argparse
 import json
@@ -41,7 +48,21 @@ def main():
     ap.add_argument("--per-tenant", action="store_true",
                     help="one control vector per adapter class "
                          "(interactive vs batch) + arbitrated byte budget")
+    ap.add_argument("--metrics", action="store_true",
+                    help="attach observability taps and print the "
+                         "Prometheus text exposition after the run")
+    ap.add_argument("--metrics-json", metavar="PATH", default=None,
+                    help="also write the consolidated obs snapshot "
+                         "(implies --metrics)")
     args = ap.parse_args()
+    if args.metrics_json:
+        args.metrics = True
+
+    obs = None
+    if args.metrics:
+        from repro.obs import Observability
+
+        obs = Observability()
 
     cfg = smoke_config("moonshot-v1-16b-a3b")
     params = R.init_params(cfg, jax.random.PRNGKey(0))
@@ -104,6 +125,7 @@ def main():
                     spill_budget_bytes=4096.0 if args.per_tenant else None,
                     kv_bytes_per_token=2.0),
         decode_batch_fn=decode_batch,
+        obs=obs,
     )
     mode = ("per-tenant control plane" if args.per_tenant
             else "adaptive closed-loop" if args.adaptive else args.policy)
@@ -122,6 +144,14 @@ def main():
         print(f"  controller        : alpha={vec.alpha:.2f} fuse_k={vec.fuse_k} "
               f"rounds={engine.control.rounds} spilled={s['spilled']}")
     print(f"  real tokens decoded per tenant: {decoded_tokens}")
+    if obs is not None:
+        print("\n--- Prometheus exposition " + "-" * 40)
+        print(obs.prometheus(), end="")
+        if args.metrics_json:
+            with open(args.metrics_json, "w") as fh:
+                json.dump(obs.snapshot(), fh, indent=1)
+                fh.write("\n")
+            print(f"--- snapshot written to {args.metrics_json}")
 
 
 if __name__ == "__main__":

@@ -39,6 +39,7 @@ from __future__ import annotations
 import json
 import os
 import pathlib
+from time import perf_counter
 from typing import Callable, Iterable, Optional
 
 __all__ = [
@@ -199,20 +200,31 @@ class Journal:
         )
         self._fh = None  # opened lazily on first append
         self.appended = 0
+        # Optional latency tap: ``fn(record_type, total_s, fsync_s)`` with
+        # ``fsync_s is None`` on unsynced appends.  Purely observational —
+        # installed by ``repro.obs`` (Observability.attach_journal); when
+        # None (the default) append takes no timestamps at all.
+        self.obs_tap: Optional[Callable[[str, float, Optional[float]], None]] = None
 
     def segments(self) -> list:
         return sorted(self.dir.glob("seg-*.jsonl"))
 
     # -- writing -----------------------------------------------------------
     def append(self, record: dict, *, sync: bool = False) -> None:
+        tap = self.obs_tap
+        t0 = perf_counter() if tap is not None else 0.0
         line = json.dumps(record, separators=(",", ":")) + "\n"
         if self._fh is None or self._fh.tell() >= self.segment_bytes:
             self._rotate()
         self._fh.write(line)
         self._fh.flush()
+        tf = perf_counter() if (tap is not None and sync) else 0.0
         if sync:
             os.fsync(self._fh.fileno())
         self.appended += 1
+        if tap is not None:
+            t1 = perf_counter()
+            tap(record.get("type", ""), t1 - t0, (t1 - tf) if sync else None)
 
     def _rotate(self) -> None:
         self._close_segment()

@@ -211,6 +211,7 @@ def simulate_batched(
     prefetch: bool | PrefetchConfig = False,
     shared_plan: bool = False,
     share_width: int = 8,
+    obs=None,
 ) -> SimResult:
     """Batched policies (LifeRaft any alpha, RR): one bucket batch at a time.
 
@@ -240,6 +241,10 @@ def simulate_batched(
     ceiling; a ControlLoop with ``share_width_max`` set resizes it per
     round).  Costs and decisions are unchanged — the simulator tracks
     only the device-dispatch/occupancy accounting.
+    ``obs`` (off by default) attaches the ``repro.obs`` metrics/tracing
+    tap to the loop — a pure side-channel consumer chained via
+    ``add_round_tap``, so decisions and goldens are unchanged; pass an
+    ``Observability`` instance to export its registry/trace afterwards.
     """
     queries = sorted(queries, key=lambda q: q.arrival_time)
     wm = WorkloadManager(
@@ -260,6 +265,10 @@ def simulate_batched(
         prefetch=build_pipeline(prefetch, scheduler, cache, cost.T_b),
     )
     loop_box.append(loop)
+    if obs:
+        from ..obs import ensure as _obs_ensure  # lazy: off-path never imports
+
+        _obs_ensure(obs).attach_loop(loop, track=0, clock="virtual")
 
     def admit(until: float) -> None:
         nonlocal i
@@ -327,6 +336,7 @@ def simulate_sharded(
     share_width: int = 8,
     on_round: Optional[Callable[[int, object], None]] = None,
     on_steal=None,
+    obs=None,
 ) -> SimResult:
     """Multi-shard harness: S shard-local DispatchLoops on virtual clocks
     behind one ``ShardedDispatch`` coordinator (``core/shard.py``).
@@ -402,6 +412,14 @@ def simulate_sharded(
         rt = ShardRuntime(sid, wm, cache, sched, loop)
         runtimes.append(rt)
         coord.add_shard(rt)
+
+    if obs:
+        from ..obs import ensure as _obs_ensure  # lazy: off-path never imports
+
+        _o = _obs_ensure(obs)
+        for rt in runtimes:
+            _o.attach_loop(rt.loop, track=rt.shard_id, clock="virtual")
+        coord.on_steal = _o.chain_steal_tap(coord.on_steal)
 
     for q in queries:
         coord.route(q)
@@ -518,6 +536,7 @@ def run_policy(
     prefetch: bool | PrefetchConfig = False,
     shared_plan: bool = False,
     share_width: int = 8,
+    obs=None,
 ) -> SimResult:
     """Convenience dispatcher used by benchmarks:
     'noshare'|'rr'|'liferaft'|'liferaft-naive'."""
@@ -538,5 +557,5 @@ def run_policy(
         queries, bucket_of_range, sched, cost, cache_capacity, hybrid,
         bucket_of_keys=bucket_of_keys, fuse_k=fuse_k, control=control,
         on_round=on_round, prefetch=prefetch, shared_plan=shared_plan,
-        share_width=share_width,
+        share_width=share_width, obs=obs,
     )

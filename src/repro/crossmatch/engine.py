@@ -70,6 +70,7 @@ class CrossMatchEngine:
         prefetch: bool | PrefetchConfig = False,
         shared_plan: bool = False,
         share_width: int = 8,
+        obs=None,
     ) -> None:
         self.catalog = catalog
         self.cost_model = cost_model or CostModel()
@@ -113,6 +114,15 @@ class CrossMatchEngine:
                 layout_of=self.catalog.partitioner.layout_position,
             ),
         )
+        self.obs = None
+        if obs:
+            # Lazy import (off-path never touches repro.obs).  Crossmatch
+            # executes real device/array work, so spans ride on
+            # perf_counter marks; decisions still come off the tap only.
+            from ..obs import ensure as _obs_ensure
+
+            self.obs = _obs_ensure(obs)
+            self.obs.attach_loop(self.loop, track=0, clock="wall")
 
     # -- loop-owned counters (kept as attributes for back-compat) --------------
     @property

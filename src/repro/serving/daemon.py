@@ -337,12 +337,25 @@ class ServiceDaemon:
         *,
         admission: Optional[AdmissionController] = None,
         segment_bytes: int = 1 << 20,
+        obs=None,
     ) -> None:
         self.host = host
         self.admission = admission
         self.journal = Journal(
             journal_dir, segment_bytes=segment_bytes, kind=host.kind
         )
+        self.obs = None
+        if obs:
+            # Lazy import: the default (obs off) never touches repro.obs.
+            # The daemon's contribution is the journal append/fsync
+            # latency tap, admission verdict counters, and the served
+            # metrics_text/metrics_snapshot endpoints; to also see the
+            # engine's round metrics, construct the engine with the same
+            # Observability instance.
+            from ..obs import ensure as _obs_ensure
+
+            self.obs = _obs_ensure(obs)
+            self.obs.attach_journal(self.journal)
         # Full in-memory decision log (same entries the journal holds,
         # including rounds recovered by replay) — diffable against a
         # golden via ``diff_entries``.
@@ -353,6 +366,10 @@ class ServiceDaemon:
         self._tap_buf: list[dict] = []
         host.install_tap(self._emit)
         self._recover()
+        if self.obs is not None:
+            self.obs.note_recovery(
+                self._recovered_records, self._recovered_rounds
+            )
 
     # -- decision tap --------------------------------------------------------
     def _emit(self, entry: dict) -> None:
@@ -365,6 +382,8 @@ class ServiceDaemon:
     # -- recovery ------------------------------------------------------------
     def _recover(self) -> None:
         records = self.journal.replay()
+        self._recovered_records = len(records)
+        self._recovered_rounds = 0
         if not records:
             return
         self._recovering = True
@@ -383,6 +402,7 @@ class ServiceDaemon:
                         rec["observed"], rec["limit"],
                     )
                 elif rtype == "entry":
+                    self._recovered_rounds += 1
                     expect = rec["entry"]
                     while not self._tap_buf:
                         if self.host.step() is None:
@@ -443,7 +463,11 @@ class ServiceDaemon:
                     sync=True,
                 )
                 self.rejected[key] = exc
+                if self.obs is not None:
+                    self.obs.note_admission(exc.tenant, False, exc.reason)
                 raise
+            if self.obs is not None:
+                self.obs.note_admission(tenant, True)
         # Write-ahead barrier: the record is fsync'd before the engine
         # sees the item, so the ack below implies durability.
         self.journal.append(
@@ -486,6 +510,16 @@ class ServiceDaemon:
         durability property tests assert replayed == live at every
         truncation point of a recorded run."""
         return self.host.state_fingerprint()
+
+    # -- observability endpoints ---------------------------------------------
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the attached Observability (empty
+        without ``obs=`` — scraping a dark daemon is not an error)."""
+        return self.obs.prometheus() if self.obs is not None else ""
+
+    def metrics_snapshot(self) -> dict:
+        """JSON-safe metrics + ControlExplain + trace rollup snapshot."""
+        return self.obs.snapshot() if self.obs is not None else {}
 
     def close(self) -> None:
         self.journal.close()

@@ -376,6 +376,7 @@ class LifeRaftEngine:
         config: ServeConfig = ServeConfig(),
         decode_batch_fn: Optional[Callable] = None,
         control: Optional[ControlLoop | TenantControlPlane] = None,
+        obs=None,
     ) -> None:
         self.cfg = config
         self.adapters = {a.adapter_id: a for a in adapters}
@@ -461,6 +462,14 @@ class LifeRaftEngine:
                 lambda a: self.adapters[a].nbytes / self.cfg.hbm_bw,
             ),
         )
+        self.obs = None
+        if obs:
+            # Lazy import: with obs off (the default) the hot path never
+            # touches repro.obs.  The tap is a pure add_round_tap consumer.
+            from ..obs import ensure as _obs_ensure
+
+            self.obs = _obs_ensure(obs)
+            self.obs.attach_loop(self.loop, track=0, clock="virtual")
 
     # ------------------------------------------------------------- views
     @property
@@ -646,6 +655,7 @@ class LifeRaftEngine:
     def summary(self) -> dict:
         resp = [r.finish_time - r.arrival_time for r in self.completed]
         vec = self.loop.last_vector
+        dstats = dispatch_stats(self.loop)
         response_by_id = {
             r.request_id: r.finish_time - r.arrival_time for r in self.completed
         }
@@ -675,10 +685,8 @@ class LifeRaftEngine:
             "p95_response": float(np.percentile(resp, 95)) if resp else 0.0,
             "cache_hit_rate": self.cache.stats.hit_rate,
             "batches": self.batches,
-            "device_dispatches": dispatch_stats(self.loop)["device_dispatches"],
-            "shared_batch_occupancy": dispatch_stats(self.loop)[
-                "shared_batch_occupancy"
-            ],
+            "device_dispatches": dstats["device_dispatches"],
+            "shared_batch_occupancy": dstats["shared_batch_occupancy"],
             "indexed_batches": self.indexed_batches,
             "spilled": self.workload.spilled_buckets(),
             "per_tenant": per_tenant,
@@ -720,6 +728,7 @@ class ShardedServingEngine:
         shard_map: Optional[ShardMap] = None,
         steal: Optional[StealConfig] = None,
         decode_batch_fn: Optional[Callable] = None,
+        obs=None,
     ) -> None:
         self.n_shards = max(1, int(n_shards))
         self.shard_map = shard_map or ShardMap.from_bucket_bytes(
@@ -748,6 +757,13 @@ class ShardedServingEngine:
         self.on_steal: Optional[Callable] = None
         for sid, eng in enumerate(self.engines):
             eng.loop.add_round_tap(self._make_round_tap(sid))
+        self._obs = None
+        if obs:
+            from ..obs import ensure as _obs_ensure  # lazy: off-path clean
+
+            self._obs = _obs_ensure(obs)
+            for sid, eng in enumerate(self.engines):
+                self._obs.attach_loop(eng.loop, track=sid, clock="virtual")
 
     def _make_round_tap(self, sid: int):
         def tap(outcome):
@@ -830,6 +846,8 @@ class ShardedServingEngine:
             self.steals.append(ev)
             if self.on_steal is not None:
                 self.on_steal(ev)
+            if self._obs is not None:
+                self._obs.note_steal(ev)
 
     # -- virtual lockstep drive ------------------------------------------------
     def step(self) -> Optional[int]:

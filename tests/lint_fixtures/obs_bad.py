@@ -1,0 +1,31 @@
+"""Seeded obs-tap purity violations (analyzed by tests, never imported)."""
+
+
+def bad_attr_tap(outcome):
+    outcome.cost = 0.0
+
+
+def bad_mutator_tap(outcome):
+    outcome.decisions.append(None)
+
+
+def bad_alias_tap(outcome):
+    ds = outcome.decisions
+    ds.clear()
+
+
+def bad_aug_tap(ev):
+    ev.n_units += 1
+
+
+def bad_item_tap(outcome):
+    outcome.decisions[0] = None
+
+
+def install(loop, coord, make_coord):
+    loop.add_round_tap(bad_attr_tap)
+    loop.add_round_tap(bad_mutator_tap)
+    coord.on_round = bad_alias_tap
+    coord.on_steal = bad_aug_tap
+    make_coord(on_round=bad_item_tap)
+    loop.add_round_tap(lambda o: o.decisions.pop())

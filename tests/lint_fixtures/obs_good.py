@@ -1,0 +1,33 @@
+"""Clean tap idioms: read-only observers, copies, unregistered mutators."""
+
+
+class Recorder:
+    def __init__(self):
+        self.entries = []
+
+    def __call__(self, outcome):
+        self.entries.append(
+            (outcome.cost, tuple(d.bucket_id for d in outcome.decisions))
+        )
+
+    def on_steal(self, ev):
+        self.entries.append(("steal", ev.bucket_id, ev.n_units))
+
+
+def copy_tap(outcome, sink=None):
+    mine = list(outcome.decisions)
+    mine.sort()
+    if sink is not None:
+        sink.append(mine)
+
+
+def not_a_tap(outcome):
+    outcome.decisions.clear()
+
+
+def install(loop, coord):
+    rec = Recorder()
+    loop.add_round_tap(rec)
+    loop.add_round_tap(copy_tap)
+    coord.on_steal = rec.on_steal
+    coord.on_round = None

@@ -1,0 +1,15 @@
+"""Reasoned waivers suppress obs-tap-pure; reasonless ones do not."""
+
+
+def stamping_tap(outcome):
+    outcome.obs_seen = True  # lint: allow[obs-tap-pure] harness scratch flag; never journaled or diffed
+    return outcome.cost
+
+
+def greedy_tap(outcome):
+    outcome.decisions.clear()  # lint: allow[obs-tap-pure]
+
+
+def install(loop):
+    loop.add_round_tap(stamping_tap)
+    loop.add_round_tap(greedy_tap)

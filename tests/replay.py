@@ -150,8 +150,11 @@ def two_tenant_plane(budget_bytes=None):
     )
 
 
-def sim_scenario(name: str) -> list[dict]:
-    """Simulator DispatchLoop scenarios (cost-model executor)."""
+def sim_scenario(name: str, obs=None) -> list[dict]:
+    """Simulator DispatchLoop scenarios (cost-model executor).
+
+    ``obs`` threads a ``repro.obs.Observability`` through the harness —
+    the obs-on bit-identity tests replay every golden with it attached."""
     from repro.core import (
         ControlConfig, ControlLoop, CostModel, LifeRaftScheduler,
         PrefetchConfig, simulate_batched, run_policy,
@@ -172,14 +175,14 @@ def sim_scenario(name: str) -> list[dict]:
             _identity_range,
             LifeRaftScheduler(cost, 0.5, normalized=True), cost,
             cache_capacity=8, control=two_tenant_plane(budget_bytes=20_000.0),
-            on_round=rec,
+            on_round=rec, obs=obs,
         )
     elif name == "sim_raw_fused":
         # Raw-scale scoring, static knobs, fused top-k selection.
         run_policy(
             "liferaft", sim_trace(11), _identity_range,
             CostModel(T_b=0.8, T_m=2e-4), alpha=0.25, cache_capacity=8,
-            fuse_k=3, on_round=rec,
+            fuse_k=3, on_round=rec, obs=obs,
         )
     elif name == "sim_norm_ctl":
         # normalized=True + closed-loop alpha/fuse_k laws (no spill budget:
@@ -192,6 +195,7 @@ def sim_scenario(name: str) -> list[dict]:
             "liferaft", sim_trace(23, n=180, buckets=90, gap=0.02),
             _identity_range, CostModel(T_b=0.8, T_m=2e-4), alpha=0.5,
             cache_capacity=8, normalized=True, control=ctl, on_round=rec,
+            obs=obs,
         )
     elif name == "sim_prefetch":
         # Scan-horizon prefetch ON (recorded at feature introduction):
@@ -212,7 +216,7 @@ def sim_scenario(name: str) -> list[dict]:
             "liferaft", sim_trace(59, n=220, buckets=48, gap=0.012, depth_hi=60),
             _identity_range, cost, alpha=0.5, cache_capacity=8,
             normalized=True, control=ctl, on_round=rec,
-            prefetch=PrefetchConfig(horizon=4, depth=4),
+            prefetch=PrefetchConfig(horizon=4, depth=4), obs=obs,
         )
     elif name == "sim_spill_paged":
         # §6 byte budget on a saturating flood: spill engages mid-trace,
@@ -228,7 +232,7 @@ def sim_scenario(name: str) -> list[dict]:
         run_policy(
             "liferaft", sim_trace(37, n=240, buckets=40, gap=0.012, depth_hi=28),
             _identity_range, cost, alpha=0.5, cache_capacity=8,
-            normalized=True, control=ctl, on_round=rec,
+            normalized=True, control=ctl, on_round=rec, obs=obs,
         )
     elif name == "sim_sharedplan":
         # Shared query plans ON (recorded at feature introduction): the
@@ -245,7 +249,7 @@ def sim_scenario(name: str) -> list[dict]:
             "liferaft", sim_trace(43, n=200, buckets=50, gap=0.02),
             _identity_range, CostModel(T_b=0.8, T_m=2e-4), alpha=0.5,
             cache_capacity=8, normalized=True, control=ctl, on_round=rec,
-            shared_plan=True, share_width=2,
+            shared_plan=True, share_width=2, obs=obs,
         )
     else:
         raise ValueError(name)
@@ -270,7 +274,7 @@ def shard_skew_trace(seed: int, n: int = 220, buckets: int = 48,
     return qs
 
 
-def shard_scenario(name: str) -> list[dict]:
+def shard_scenario(name: str, obs=None) -> list[dict]:
     """Multi-shard coordinator scenarios (``simulate_sharded``): the
     golden pins the cross-shard round interleaving, every shard-local
     decision, and (for the steal scenario) the migration schedule."""
@@ -298,7 +302,7 @@ def shard_scenario(name: str) -> list[dict]:
                 spill_budget_bytes=4_000.0,
             )),
             plane=ShardControlPlane(4, spill_budget_bytes=8_000.0),
-            on_round=rec.on_round,
+            on_round=rec.on_round, obs=obs,
         )
     elif name == "sim_shard_steal":
         # Skewed load + work stealing: drained shards migrate the hot
@@ -313,14 +317,14 @@ def shard_scenario(name: str) -> list[dict]:
             ),
             n_shards=4, cache_capacity=8, fuse_k=2,
             steal=StealConfig(low_water_bytes=0.0),
-            on_round=rec.on_round, on_steal=rec.on_steal,
+            on_round=rec.on_round, on_steal=rec.on_steal, obs=obs,
         )
     else:
         raise ValueError(name)
     return rec.entries
 
 
-def serving_scenario(name: str) -> list[dict]:
+def serving_scenario(name: str, obs=None) -> list[dict]:
     """Serving-engine DispatchLoop scenarios (virtual-clock decode)."""
     from repro.serving import AdapterSpec, LifeRaftEngine, Request, ServeConfig
 
@@ -376,14 +380,16 @@ def serving_scenario(name: str) -> list[dict]:
         )
     else:
         raise ValueError(name)
-    eng = LifeRaftEngine(adapters, cfg)
+    eng = LifeRaftEngine(adapters, cfg, obs=obs)
     rec = TraceRecorder()
-    eng.loop.on_round = rec
+    # Chain, don't assign: with obs= the engine already installed its tap
+    # at construction, and direct assignment would clobber it.
+    eng.loop.add_round_tap(rec)
     eng.run(reqs)
     return rec.entries
 
 
-def crossmatch_scenario(name: str = "crossmatch_fused") -> list[dict]:
+def crossmatch_scenario(name: str = "crossmatch_fused", obs=None) -> list[dict]:
     """Cross-match engine DispatchLoop scenario (real kernel executor; the
     decision log depends only on the cost model, so this also checks the
     engine's execute/complete plumbing stays decision-neutral)."""
@@ -397,7 +403,9 @@ def crossmatch_scenario(name: str = "crossmatch_fused") -> list[dict]:
         TraceConfig(n_queries=14, arrival_rate=2.0, objects_median=40, seed=19),
     )
     if name == "crossmatch_fused":
-        eng = CrossMatchEngine(catalog, match_radius_rad=4e-3, fuse_k=3)
+        eng = CrossMatchEngine(
+            catalog, match_radius_rad=4e-3, fuse_k=3, obs=obs
+        )
     elif name == "crossmatch_sharedplan":
         # Shared-plan ON with heterogeneous per-query predicates: each
         # query carries its own radius + magnitude cut, so the off-path
@@ -411,31 +419,44 @@ def crossmatch_scenario(name: str = "crossmatch_fused") -> list[dict]:
             q.meta["mag_cut"] = float(rng.choice([23.0, 24.0, 25.0]))
         eng = CrossMatchEngine(
             catalog, match_radius_rad=4e-3, fuse_k=2,
-            shared_plan=True, share_width=2,
+            shared_plan=True, share_width=2, obs=obs,
         )
     else:
         raise ValueError(name)
     rec = TraceRecorder()
-    eng.loop.on_round = rec
+    # Chain, don't assign (see serving_scenario).
+    eng.loop.add_round_tap(rec)
     eng.run(trace)
     return rec.entries
 
 
+# Every builder accepts ``obs=None`` — the obs-on golden tests call
+# ``SCENARIOS[name](obs=Observability())`` and diff against the same file.
 SCENARIOS = {
-    "sim_raw_fused": lambda: sim_scenario("sim_raw_fused"),
-    "sim_norm_ctl": lambda: sim_scenario("sim_norm_ctl"),
-    "sim_two_tenant": lambda: sim_scenario("sim_two_tenant"),
-    "sim_spill_paged": lambda: sim_scenario("sim_spill_paged"),
-    "sim_prefetch": lambda: sim_scenario("sim_prefetch"),
-    "sim_sharedplan": lambda: sim_scenario("sim_sharedplan"),
-    "sim_shard4": lambda: shard_scenario("sim_shard4"),
-    "sim_shard_steal": lambda: shard_scenario("sim_shard_steal"),
-    "serving_static": lambda: serving_scenario("serving_static"),
-    "serving_adaptive": lambda: serving_scenario("serving_adaptive"),
-    "serving_spill_paged": lambda: serving_scenario("serving_spill_paged"),
-    "serving_prefetch": lambda: serving_scenario("serving_prefetch"),
-    "crossmatch_fused": lambda: crossmatch_scenario(),
-    "crossmatch_sharedplan": lambda: crossmatch_scenario("crossmatch_sharedplan"),
+    "sim_raw_fused": lambda obs=None: sim_scenario("sim_raw_fused", obs),
+    "sim_norm_ctl": lambda obs=None: sim_scenario("sim_norm_ctl", obs),
+    "sim_two_tenant": lambda obs=None: sim_scenario("sim_two_tenant", obs),
+    "sim_spill_paged": lambda obs=None: sim_scenario("sim_spill_paged", obs),
+    "sim_prefetch": lambda obs=None: sim_scenario("sim_prefetch", obs),
+    "sim_sharedplan": lambda obs=None: sim_scenario("sim_sharedplan", obs),
+    "sim_shard4": lambda obs=None: shard_scenario("sim_shard4", obs),
+    "sim_shard_steal": lambda obs=None: shard_scenario("sim_shard_steal", obs),
+    "serving_static": lambda obs=None: serving_scenario("serving_static", obs),
+    "serving_adaptive": lambda obs=None: serving_scenario(
+        "serving_adaptive", obs
+    ),
+    "serving_spill_paged": lambda obs=None: serving_scenario(
+        "serving_spill_paged", obs
+    ),
+    "serving_prefetch": lambda obs=None: serving_scenario(
+        "serving_prefetch", obs
+    ),
+    "crossmatch_fused": lambda obs=None: crossmatch_scenario(
+        "crossmatch_fused", obs
+    ),
+    "crossmatch_sharedplan": lambda obs=None: crossmatch_scenario(
+        "crossmatch_sharedplan", obs
+    ),
 }
 
 # Scenarios whose goldens predate the multi-tenant refactor: bit-identity

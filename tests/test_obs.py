@@ -1,0 +1,289 @@
+"""Observability layer (PR 10): metrics registry, round tracer, exporters.
+
+The layer's whole contract is *taps-only*: it consumes the existing
+side-channel taps and never touches the decision path.  The tests here
+pin each clause of that contract:
+
+  * golden bit-identity — every recorded scenario replays identically
+    with obs ON (and the obs tap demonstrably fired);
+  * histogram bucket edges — Prometheus ``le`` semantics, overflow,
+    negative values, quantile clamping, ladder-mismatch errors;
+  * snapshot determinism — two identical virtual-clocked runs produce
+    *equal* snapshot dicts and Prometheus text;
+  * Perfetto export — valid JSON, one named track per shard, and the
+    steal arrows (instant + s/f flow pair) for the steal golden;
+  * lazy import — with ``obs=`` left off, ``repro.obs`` is never
+    imported (subprocess check);
+  * daemon endpoints — journal append/fsync histograms, admission
+    verdict counters, metrics_text/metrics_snapshot, and their empty
+    obs-off fallbacks;
+  * ControlExplain — vector changes carry the trigger-signal reason.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+import replay
+from repro.core import (
+    AdmissionController,
+    AdmissionQuota,
+    AdmissionRejected,
+)
+from repro.obs import MetricsRegistry, Observability
+from repro.serving import (
+    AdapterSpec,
+    LifeRaftEngine,
+    Request,
+    ServeConfig,
+    ServiceDaemon,
+    ServingHost,
+)
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+_MEMO = {}
+
+
+def _obs_run(name):
+    """One obs-ON run of a recorded scenario, shared across tests."""
+    if name not in _MEMO:
+        obs = Observability()
+        entries = replay.SCENARIOS[name](obs=obs)
+        _MEMO[name] = (obs, entries)
+    return _MEMO[name]
+
+
+# ------------------------------------------------------- golden bit-identity
+@pytest.mark.parametrize("name", sorted(replay.SCENARIOS))
+def test_goldens_bit_identical_with_obs_on(name):
+    """The acceptance bar: observability must be a pure observer — the
+    decision log with obs attached diffs empty against the golden."""
+    obs, got = _obs_run(name)
+    expect = replay.load_trace(replay.GOLDEN_DIR / f"{name}.json")
+    divergence = replay.diff_traces(expect, got)
+    assert not divergence, "\n".join(
+        [f"obs-on decision log diverged from golden {name}:"] + divergence
+    )
+    # ... and obs was actually live, not silently detached.
+    rounds = _obs_run(name)[0].snapshot()["metrics"]["liferaft_rounds_total"]
+    assert sum(s["value"] for s in rounds["series"]) > 0
+
+
+# ------------------------------------------------------------ histogram edges
+class TestHistogramEdges:
+    def test_le_semantics_overflow_and_negatives(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("t_seconds", "test ladder", buckets=(1.0, 2.0, 5.0))
+        for v in (0.5, 1.0, 1.5, 5.0, 7.0, -1.0):
+            h.observe(v)
+        cum = dict(h.cumulative())
+        # le=1.0 holds 0.5, the exact bound 1.0, and the negative.
+        assert cum[1.0] == 3
+        assert cum[2.0] == 4
+        assert cum[5.0] == 5  # 5.0 lands IN le=5.0, not overflow
+        assert cum["+Inf"] == 6
+        assert h.count == 6
+        assert h.sum == pytest.approx(14.0)
+
+    def test_quantiles_interpolate_and_clamp(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("q_seconds", "", buckets=(1.0, 2.0, 5.0))
+        for v in (0.5, 1.0, 1.5, 5.0, 7.0, -1.0):
+            h.observe(v)
+        # Median exhausts the first bucket exactly -> its upper bound.
+        assert h.quantile(0.5) == pytest.approx(1.0)
+        # Overflow mass clamps to the last finite bound.
+        assert h.quantile(1.0) == pytest.approx(5.0)
+
+    def test_empty_histogram_quantile_is_zero(self):
+        reg = MetricsRegistry()
+        assert reg.histogram("e_seconds", "").quantile(0.95) == 0.0
+
+    def test_bucket_ladder_mismatch_raises(self):
+        reg = MetricsRegistry()
+        reg.histogram("m_seconds", "", buckets=(1.0, 2.0))
+        with pytest.raises(ValueError, match="bucket ladder mismatch"):
+            reg.histogram("m_seconds", "", buckets=(1.0, 3.0))
+
+    def test_type_mismatch_raises(self):
+        reg = MetricsRegistry()
+        reg.histogram("x_seconds", "")
+        with pytest.raises(ValueError, match="already registered"):
+            reg.counter("x_seconds", "")
+
+    def test_unsorted_bounds_rejected(self):
+        reg = MetricsRegistry()
+        with pytest.raises(ValueError, match="ascending"):
+            reg.histogram("bad_seconds", "", buckets=(2.0, 1.0))
+
+
+# ------------------------------------------------------- snapshot determinism
+def test_virtual_clock_snapshot_is_run_to_run_identical():
+    """Nothing wall-clock may enter the registry on virtual taps: a rerun
+    of the same scenario yields an *equal* snapshot and Prometheus text."""
+    fresh = Observability()
+    replay.SCENARIOS["serving_adaptive"](obs=fresh)
+    memo = _obs_run("serving_adaptive")[0]
+    assert fresh.snapshot() == memo.snapshot()
+    assert fresh.prometheus() == memo.prometheus()
+
+
+# ------------------------------------------------------------ perfetto export
+class TestPerfetto:
+    def _doc(self):
+        doc = _obs_run("sim_shard_steal")[0].perfetto()
+        # must survive a JSON round-trip (the artifact CI uploads)
+        return json.loads(json.dumps(doc))
+
+    def test_one_named_track_per_shard(self):
+        evs = self._doc()["traceEvents"]
+        names = [
+            e for e in evs
+            if e["ph"] == "M" and e["name"] == "thread_name"
+        ]
+        assert sorted(e["tid"] for e in names) == [0, 1, 2, 3]
+        assert {e["args"]["name"] for e in names} == {
+            "shard-0", "shard-1", "shard-2", "shard-3"
+        }
+        spans = {e["tid"] for e in evs
+                 if e["ph"] == "X" and e["name"] == "round"}
+        assert spans == {0, 1, 2, 3}  # every shard dispatched rounds
+
+    def test_steal_arrows_present_and_paired(self):
+        evs = self._doc()["traceEvents"]
+        instants = [e for e in evs
+                    if e.get("cat") == "steal" and e["ph"] == "i"]
+        starts = {e["id"]: e for e in evs
+                  if e.get("cat") == "steal" and e["ph"] == "s"}
+        finishes = [e for e in evs
+                    if e.get("cat") == "steal" and e["ph"] == "f"]
+        assert instants  # the steal golden must show migrations
+        assert len(starts) == len(finishes) == len(instants)
+        for f in finishes:  # arrow crosses tracks: victim != thief
+            assert f["tid"] != starts[f["id"]]["tid"]
+
+    def test_round_spans_are_ordered_per_track(self):
+        evs = self._doc()["traceEvents"]
+        by_track: dict = {}
+        for e in evs:
+            if e["ph"] == "X" and e["name"] == "round":
+                by_track.setdefault(e["tid"], []).append(e["ts"])
+        for ts in by_track.values():
+            assert ts == sorted(ts)  # virtual clock: monotone per shard
+
+
+# ----------------------------------------------------------------- lazy import
+def test_obs_never_imported_when_disabled():
+    """The obs-off hot path must not even import repro.obs."""
+    code = (
+        "import sys\n"
+        "import replay\n"
+        "replay.SCENARIOS['sim_raw_fused']()\n"
+        "bad = sorted(m for m in sys.modules if m.startswith('repro.obs'))\n"
+        "assert not bad, bad\n"
+        "print('CLEAN')\n"
+    )
+    env = dict(os.environ, PYTHONPATH=f"src{os.pathsep}tests")
+    res = subprocess.run(
+        [sys.executable, "-c", code],
+        cwd=str(REPO), capture_output=True, text=True, env=env,
+    )
+    assert res.returncode == 0, res.stderr
+    assert "CLEAN" in res.stdout
+
+
+# ------------------------------------------------------------ daemon endpoints
+def _adapters(n=6):
+    return [
+        AdapterSpec(
+            a,
+            nbytes=(a + 1) * 1_000_000,
+            tenant="interactive" if a % 2 else "batch",
+        )
+        for a in range(n)
+    ]
+
+
+def _reqs(n=12):
+    return [
+        Request(
+            request_id=i,
+            adapter_id=(i * 5) % 6,
+            arrival_time=0.01 * i,
+            prompt_len=32 + (i % 7) * 16,
+            max_new_tokens=32,
+        )
+        for i in range(n)
+    ]
+
+
+class TestDaemonEndpoints:
+    def test_journal_admission_and_round_metrics(self, tmp_path):
+        adm = AdmissionController({"batch": AdmissionQuota(max_queue_depth=2)})
+        obs = Observability()
+        eng = LifeRaftEngine(
+            _adapters(), ServeConfig(adapter_slots=3, fuse_k=2, adaptive=True),
+            obs=obs,
+        )
+        d = ServiceDaemon(ServingHost(eng), tmp_path / "j",
+                          admission=adm, obs=obs)
+        accepted = rejected = 0
+        for r in _reqs():  # no pumping: the batch tenant must hit quota
+            try:
+                d.submit(r)
+                accepted += 1
+            except AdmissionRejected:
+                rejected += 1
+        assert rejected > 0
+        d.pump()
+        snap = d.metrics_snapshot()
+        m = snap["metrics"]
+        # Every synced submit ack paid an append AND an fsync barrier.
+        appends = m["liferaft_journal_append_seconds"]["series"][0]
+        fsyncs = m["liferaft_journal_fsync_seconds"]["series"][0]
+        assert appends["count"] >= accepted + rejected
+        assert fsyncs["count"] >= accepted + rejected
+        assert fsyncs["sum"] > 0.0
+        # Admission verdicts balance the submissions.
+        verdicts = {
+            (s["labels"]["tenant"], s["labels"]["verdict"]): s["value"]
+            for s in m["liferaft_admission_total"]["series"]
+        }
+        assert sum(verdicts.values()) == accepted + rejected
+        assert verdicts.get(("batch", "rejected"), 0) == rejected
+        reasons = m["liferaft_admission_rejected_total"]["series"]
+        assert {s["labels"]["reason"] for s in reasons} == {"queue_depth"}
+        # The engine shared the same Observability: rounds were recorded.
+        assert m["liferaft_rounds_total"]["series"][0]["value"] > 0
+        # Text exposition serves the same registry.
+        text = d.metrics_text()
+        assert "# TYPE liferaft_admission_total counter" in text
+        assert 'verdict="rejected"' in text
+        assert "liferaft_journal_fsync_seconds_bucket" in text
+
+    def test_obs_off_endpoints_are_empty(self, tmp_path):
+        eng = LifeRaftEngine(
+            _adapters(), ServeConfig(adapter_slots=3, fuse_k=2)
+        )
+        d = ServiceDaemon(ServingHost(eng), tmp_path / "j")
+        assert d.metrics_text() == ""
+        assert d.metrics_snapshot() == {}
+
+
+# ------------------------------------------------------------- control explain
+def test_control_explain_names_the_trigger_signal():
+    obs, _ = _obs_run("serving_adaptive")
+    events = obs.snapshot()["control_explain"]
+    assert events  # the adaptive scenario moves the vector
+    for e in events:
+        assert {"track", "clock", "field", "from", "to", "message"} <= set(e)
+        assert e["from"] != e["to"]
+    fields = {e["field"] for e in events}
+    assert "alpha" in fields
+    # The message leads with the field's trigger signal (docs/adaptive.md).
+    alpha_msgs = [e["message"] for e in events if e["field"] == "alpha"]
+    assert any("saturation" in m for m in alpha_msgs)

@@ -30,6 +30,7 @@ from tools.analysis.passes.journal_schema import (  # noqa: E402
     extract_schema,
 )
 from tools.analysis.passes.lockorder import LockOrderPass  # noqa: E402
+from tools.analysis.passes.obs_tap import ObsTapPurityPass  # noqa: E402
 from tools.analysis.passes.tracing import TracingPass  # noqa: E402
 
 FIXTURES = REPO / "tests" / "lint_fixtures"
@@ -146,6 +147,40 @@ class TestTracingPass:
             root=str(REPO),
         )
         assert findings == []
+
+
+# ------------------------------------------------------------- obs tap purity
+class TestObsTapPurity:
+    def test_seeded_violations(self):
+        findings = run_fixture("obs_bad.py", [ObsTapPurityPass()])
+        assert rules_of(findings) == ["obs-tap-pure"] * 6
+        got = sorted(f.line for f in findings)
+        # attr assign, mutator call, alias mutation, augassign, item
+        # assign, and the inline bad lambda at its registration site.
+        assert got == [5, 9, 14, 18, 22, 31]
+
+    def test_clean_idioms_pass(self):
+        # Class-instance __call__, inst.method registration, mutate-a-copy,
+        # the sink=sink capture idiom, an unregistered mutating function,
+        # and clearing a tap slot with None: all clean.
+        assert run_fixture("obs_good.py", [ObsTapPurityPass()]) == []
+
+    def test_reasoned_waiver_suppresses_reasonless_does_not(self):
+        findings = run_fixture("obs_waived.py", [ObsTapPurityPass()])
+        got = {(f.rule, f.line) for f in findings}
+        assert got == {("obs-tap-pure", 10), ("lint-bad-waiver", 10)}
+
+    def test_real_obs_adapters_are_clean(self):
+        # The marquee target: the shipped hot tap (_LoopTap) registers via
+        # add_round_tap and must itself satisfy the rule.
+        pf = parse_file(
+            REPO / "src" / "repro" / "obs" / "adapters.py", root=str(REPO)
+        )
+        assert run_passes(pf, [ObsTapPurityPass()], AnalyzerConfig()) == []
+
+    def test_replay_recorders_are_clean(self):
+        pf = parse_file(REPO / "tests" / "replay.py", root=str(REPO))
+        assert run_passes(pf, [ObsTapPurityPass()], AnalyzerConfig()) == []
 
 
 # -------------------------------------------------------------- journal schema
@@ -305,6 +340,7 @@ class TestFramework:
             "lock-order-inversion", "lock-bare-acquire", "lock-blocking-io",
             "trace-py-branch", "trace-concretize", "trace-shape-pow2",
             "journal-field-unconsumed", "journal-version-drift",
+            "obs-tap-pure",
             "lint-bad-waiver", "lint-syntax-error",
         ):
             assert rule in cat, rule

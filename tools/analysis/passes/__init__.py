@@ -10,6 +10,7 @@ from __future__ import annotations
 from .determinism import DeterminismPass
 from .journal_schema import JournalSchemaPass
 from .lockorder import LockOrderPass
+from .obs_tap import ObsTapPurityPass
 from .tracing import TracingPass
 
 __all__ = [
@@ -18,6 +19,7 @@ __all__ = [
     "LockOrderPass",
     "TracingPass",
     "JournalSchemaPass",
+    "ObsTapPurityPass",
     "rule_catalog",
 ]
 
@@ -26,6 +28,7 @@ ALL_PASSES = (
     LockOrderPass(),
     TracingPass(),
     JournalSchemaPass(),
+    ObsTapPurityPass(),
 )
 
 

@@ -1,0 +1,289 @@
+"""Obs-tap purity pass: taps must never mutate what they observe.
+
+PR 10's observability layer rides entirely on the side-channel taps —
+``DispatchLoop.add_round_tap``, the sharded coordinators' ``on_round`` /
+``on_steal`` — and its whole correctness story is that taps only *read*.
+The journal and the golden recorder consume the **same**
+``DispatchOutcome`` / ``StealEvent`` objects after (or before, depending
+on chain order) the obs taps fire, so a tap that mutates its argument
+corrupts the decision log bit-identically-replayed goldens depend on,
+and does it silently: the scheduler itself never looks at an outcome
+again, so no runtime check catches it.
+
+``obs-tap-pure``
+    A callable registered as a tap (``x.add_round_tap(f)``, an
+    ``on_round=`` / ``on_steal=`` keyword argument, or an assignment to
+    an ``.on_round`` / ``.on_steal`` attribute) must treat its delivered
+    arguments as read-only: no attribute/item assignment, augmented
+    assignment, or deletion rooted at a tap parameter (or a local alias
+    of one), and no known-mutator method call (``append``/``update``/
+    ``sort``/...) on such a chain.  Copies are fine — a name bound to
+    anything other than a plain attribute/subscript chain off a tainted
+    root (``mine = list(outcome.decisions)``) is untainted, and a
+    parameter rebound to a copy drops its taint.
+
+Resolution is deliberately static and conservative-in-the-don't-flag
+direction: lambdas are analyzed inline; a plain name resolves to ``def``
+statements in the registering scope (falling back to same-named defs
+anywhere in the file); a name bound to ``ClassName(...)`` for a class
+defined in the file resolves to that class's ``__call__`` (and
+``inst.method`` references resolve to the method), with ``self``
+untainted.  Bound methods of out-of-file classes, call results, and
+parameters forwarded by name are skipped.  Parameters *with defaults*
+are treated as closure captures (the ``entries=entries`` binding idiom),
+not tap-delivered arguments.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..framework import AnalyzerConfig, Finding, LintPass, ParsedFile
+
+__all__ = ["ObsTapPurityPass"]
+
+_TAP_ATTRS = ("on_round", "on_steal")
+
+# Method names that mutate their receiver in place.
+_MUTATORS = {
+    "append", "extend", "insert", "remove", "pop", "clear", "sort",
+    "reverse", "update", "setdefault", "popitem", "add", "discard",
+}
+
+
+def _walk_scope(body):
+    """Yield nodes of one scope without descending into nested scopes
+    (nested defs/lambdas/classes are resolved separately if registered)."""
+    stack = list(body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(
+            node,
+            (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda, ast.ClassDef),
+        ):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _chain_root(node):
+    """Name at the root of an attribute/subscript chain, else None."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _tainted_params(args: ast.arguments) -> list:
+    """Parameters the tap machinery actually delivers: positional ones
+    without defaults (defaulted params are the ``x=x`` capture idiom),
+    plus ``*args``."""
+    pos = list(args.posonlyargs) + list(args.args)
+    n_defaults = len(args.defaults)
+    if n_defaults:
+        pos = pos[:-n_defaults]
+    names = [a.arg for a in pos]
+    if args.vararg is not None:
+        names.append(args.vararg.arg)
+    return names
+
+
+class ObsTapPurityPass(LintPass):
+    name = "obs-tap"
+    rules = {
+        "obs-tap-pure": (
+            "registered observability taps must not mutate the "
+            "outcome/event objects they observe"
+        ),
+    }
+
+    def run(self, pf: ParsedFile, config: AnalyzerConfig) -> list:
+        defs: dict = {}
+        classes: dict = {}
+        for node in ast.walk(pf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.setdefault(node.name, []).append(node)
+            elif isinstance(node, ast.ClassDef):
+                classes[node.name] = node
+
+        findings: list = []
+        checked: set = set()  # id() of analyzed callables — dedup
+        scopes = [pf.tree] + [
+            n
+            for n in ast.walk(pf.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        ]
+        for scope in scopes:
+            body = scope.body
+            local_defs: dict = {}
+            instances: dict = {}  # local name -> ClassDef (ambiguous drop)
+            regs: list = []
+            for node in _walk_scope(body):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    local_defs.setdefault(node.name, []).append(node)
+                elif isinstance(node, ast.Call):
+                    if (
+                        isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "add_round_tap"
+                        and node.args
+                    ):
+                        regs.append(node.args[0])
+                    for kw in node.keywords:
+                        if kw.arg in _TAP_ATTRS:
+                            regs.append(kw.value)
+                elif isinstance(node, ast.Assign):
+                    for t in node.targets:
+                        if (
+                            isinstance(t, ast.Attribute)
+                            and t.attr in _TAP_ATTRS
+                        ):
+                            regs.append(node.value)
+                    if (
+                        len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)
+                        and isinstance(node.value, ast.Call)
+                        and isinstance(node.value.func, ast.Name)
+                        and node.value.func.id in classes
+                    ):
+                        nm = node.targets[0].id
+                        cls = classes[node.value.func.id]
+                        if nm in instances and instances[nm] is not cls:
+                            instances[nm] = None  # ambiguous — skip
+                        elif nm not in instances:
+                            instances[nm] = cls
+            for arg in regs:
+                for fn_args, fn_body, skip_first in self._resolve(
+                    arg, local_defs, defs, classes, instances
+                ):
+                    key = id(fn_body[0]) if fn_body else 0
+                    if key in checked:
+                        continue
+                    checked.add(key)
+                    params = _tainted_params(fn_args)
+                    if skip_first and params:
+                        params = params[1:]
+                    findings.extend(self._check(pf, params, fn_body))
+        return findings
+
+    # -- resolution ---------------------------------------------------------
+    def _resolve(self, arg, local_defs, defs, classes, instances) -> list:
+        """Resolve a registration argument to [(arguments, body,
+        skip_first)] callables; empty when not statically resolvable."""
+        if isinstance(arg, ast.Lambda):
+            return [(arg.args, [arg.body], False)]
+        if isinstance(arg, ast.Name):
+            cands = local_defs.get(arg.id) or defs.get(arg.id)
+            if cands:
+                return [(fn.args, fn.body, False) for fn in cands]
+            cls = instances.get(arg.id)
+            if cls is not None:
+                return self._method(cls, "__call__", classes)
+            return []
+        if (  # direct ClassName(...) registration
+            isinstance(arg, ast.Call)
+            and isinstance(arg.func, ast.Name)
+            and arg.func.id in classes
+        ):
+            return self._method(classes[arg.func.id], "__call__", classes)
+        if (  # inst.method reference
+            isinstance(arg, ast.Attribute)
+            and isinstance(arg.value, ast.Name)
+        ):
+            cls = instances.get(arg.value.id)
+            if cls is not None:
+                return self._method(cls, arg.attr, classes)
+        return []
+
+    def _method(self, cls, name, classes, depth=0) -> list:
+        for node in cls.body:
+            if (
+                isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and node.name == name
+            ):
+                return [(node.args, node.body, True)]
+        if depth < 2:  # one/two-level same-file base lookup
+            for base in cls.bases:
+                if isinstance(base, ast.Name) and base.id in classes:
+                    got = self._method(
+                        classes[base.id], name, classes, depth + 1
+                    )
+                    if got:
+                        return got
+        return []
+
+    # -- the purity check ---------------------------------------------------
+    def _check(self, pf: ParsedFile, params: list, body: list) -> list:
+        taint = set(params)
+        assigns = []  # (name, value) single-Name-target bindings
+        for node in _walk_scope(body):
+            tgt = None
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tgt, val = node.targets[0], node.value
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                tgt, val = node.target, node.value
+            else:
+                continue
+            if isinstance(tgt, ast.Name):
+                assigns.append((tgt.id, val))
+        # Fixed point: aliases of tainted chains become tainted.
+        while True:
+            grew = False
+            for nm, val in assigns:
+                if nm not in taint and _chain_root(val) in taint:
+                    taint.add(nm)
+                    grew = True
+            if not grew:
+                break
+        # Any binding to a non-tainted value (a copy, a fresh object)
+        # un-taints the name — including a parameter rebound to a copy.
+        taint -= {
+            nm for nm, val in assigns if _chain_root(val) not in taint
+        }
+        if not taint:
+            return []
+
+        out: list = []
+        for node in _walk_scope(body):
+            if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                targets = (
+                    node.targets
+                    if isinstance(node, ast.Assign)
+                    else [node.target]
+                )
+                for t in targets:
+                    self._flag_target(pf, t, taint, out, "writes into")
+            elif isinstance(node, ast.Delete):
+                for t in node.targets:
+                    self._flag_target(pf, t, taint, out, "deletes from")
+            elif isinstance(node, ast.Call) and isinstance(
+                node.func, ast.Attribute
+            ):
+                root = _chain_root(node.func.value)
+                if root in taint and node.func.attr in _MUTATORS:
+                    out.append(
+                        Finding(
+                            pf.path, node.lineno, "obs-tap-pure",
+                            f"tap calls .{node.func.attr}() on a chain "
+                            f"rooted at tap argument {root!r}; mutate a "
+                            f"copy instead — the journal and goldens "
+                            f"consume the same outcome/event objects",
+                        )
+                    )
+        return out
+
+    def _flag_target(self, pf, t, taint, out, verb) -> None:
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                self._flag_target(pf, e, taint, out, verb)
+            return
+        if not isinstance(t, (ast.Attribute, ast.Subscript)):
+            return  # rebinding a bare name never mutates the object
+        root = _chain_root(t)
+        if root in taint:
+            out.append(
+                Finding(
+                    pf.path, t.lineno, "obs-tap-pure",
+                    f"tap {verb} tap argument {root!r}; taps are "
+                    f"read-only observers — the journal and goldens "
+                    f"consume the same outcome/event objects after "
+                    f"taps fire",
+                )
+            )
